@@ -1,0 +1,99 @@
+//! The paper's conclusion conjectures the leverage-sampling results extend
+//! to smooth losses "e.g. logistic regression" — this example tests that
+//! empirically: Nyström kernel logistic regression on an XOR problem with
+//! one heavily undersampled quadrant, comparing uniform vs
+//! approximate-ridge-leverage column sampling at small sketch sizes.
+//! The sensitive metric is accuracy **on the rare quadrant**, whose points
+//! carry high ridge leverage.
+//!
+//! Run: `cargo run --release --example classification`
+
+use fastkrr::kernel::KernelKind;
+use fastkrr::krr::{NystromLogistic, NystromLogisticConfig};
+use fastkrr::linalg::Mat;
+use fastkrr::rng::Pcg64;
+use fastkrr::sketch::SketchStrategy;
+
+const RARE_PROB: f64 = 0.02; // quadrant (+,+) is ~50× rarer
+
+fn xor_skewed(n: usize, balanced: bool, seed: u64) -> (Mat, Vec<f64>, Vec<bool>) {
+    let mut rng = Pcg64::new(seed);
+    let mut x = Mat::zeros(n, 2);
+    let mut y = Vec::with_capacity(n);
+    let mut rare = Vec::with_capacity(n);
+    for i in 0..n {
+        let q = if balanced {
+            rng.below(4)
+        } else {
+            loop {
+                let q = rng.below(4);
+                if q != 0 || rng.uniform() < RARE_PROB {
+                    break q;
+                }
+            }
+        };
+        let (sx, sy) = match q {
+            0 => (1.0, 1.0),
+            1 => (-1.0, 1.0),
+            2 => (-1.0, -1.0),
+            _ => (1.0, -1.0),
+        };
+        x[(i, 0)] = sx + 0.35 * rng.normal();
+        x[(i, 1)] = sy + 0.35 * rng.normal();
+        y.push(if sx * sy > 0.0 { 1.0 } else { 0.0 });
+        rare.push(q == 0);
+    }
+    (x, y, rare)
+}
+
+fn main() {
+    let (x, y, _) = xor_skewed(1500, false, 7);
+    // Balanced test set; score the rare quadrant separately.
+    let (xt, yt, rare_t) = xor_skewed(800, true, 99);
+    let rare_idx: Vec<usize> = (0..xt.rows()).filter(|&i| rare_t[i]).collect();
+    let xt_rare = xt.select_rows(&rare_idx);
+    let yt_rare: Vec<f64> = rare_idx.iter().map(|&i| yt[i]).collect();
+    let kind = KernelKind::Rbf { bandwidth: 0.6 };
+    println!(
+        "XOR with quadrant (+,+) ~50× undersampled (n=1500 train; test on \
+         the rare quadrant, {} points)\n",
+        rare_idx.len()
+    );
+    println!(
+        "{:<6} {:>22} {:>22} {:>8}",
+        "p", "uniform (rare-q acc)", "leverage (rare-q acc)", "Δ"
+    );
+    for p in [4usize, 8, 16, 32] {
+        let mut acc = [0.0f64; 2];
+        let trials = 5;
+        for seed in 0..trials {
+            for (slot, strategy) in [
+                (0, SketchStrategy::Uniform),
+                (1, SketchStrategy::ApproxRidgeLeverage { oversample: 2.0 }),
+            ] {
+                let cfg = NystromLogisticConfig {
+                    lambda: 1e-4,
+                    p,
+                    strategy,
+                    seed,
+                    ..Default::default()
+                };
+                let m = NystromLogistic::fit(&x, &y, kind, &cfg).unwrap();
+                acc[slot] += m.accuracy(&xt_rare, &yt_rare) / trials as f64;
+            }
+        }
+        println!(
+            "{:<6} {:>22.3} {:>22.3} {:>+8.3}",
+            p,
+            acc[0],
+            acc[1],
+            acc[1] - acc[0]
+        );
+    }
+    println!(
+        "\n→ the rare quadrant's points carry high ridge leverage, so \
+         leverage-proportional sampling allocates landmarks there; at small \
+         p this is the difference between modeling the region and missing \
+         it — the smooth-loss analogue of Theorem 3 (paper §5 conjecture)."
+    );
+}

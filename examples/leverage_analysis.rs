@@ -1,0 +1,58 @@
+//! Figure 1 (left) reproduction: the λ-ridge leverage profile on the
+//! center-sparse synthetic design, plus a comparison of the exact O(n³)
+//! scores against the O(np²) fast approximation (Theorem 4).
+//!
+//! Run: `cargo run --release --example leverage_analysis`
+
+use fastkrr::experiments::run_figure1_left;
+use fastkrr::kernel::{Kernel, KernelFn, KernelKind};
+use fastkrr::leverage;
+use fastkrr::rng::Pcg64;
+
+fn main() {
+    let n = 500;
+    let lambda = 1e-6;
+
+    // The profile: high leverage exactly where the design is sparse.
+    let fig = run_figure1_left(n, lambda, 42).unwrap();
+    println!("{}", fig.render_ascii(20));
+
+    // Exact vs fast approximation (Theorem 4's bounds in action).
+    let ds = fastkrr::data::synth_bernoulli(n, 2, 0.1, 42);
+    let kernel = KernelFn::new(KernelKind::Bernoulli { order: 2 });
+    let km = kernel.matrix(&ds.x);
+
+    let t0 = std::time::Instant::now();
+    let exact = leverage::exact_ridge_leverage(&km, lambda).unwrap();
+    let t_exact = t0.elapsed();
+
+    let mut rng = Pcg64::new(7);
+    for p in [50usize, 150, 400] {
+        let t0 = std::time::Instant::now();
+        let approx =
+            leverage::approx_ridge_leverage(&kernel, &ds.x, lambda, p, &mut rng).unwrap();
+        let t_approx = t0.elapsed();
+        let max_add_err = exact
+            .scores
+            .iter()
+            .zip(&approx.scores)
+            .map(|(e, a)| (e - a).max(0.0))
+            .fold(0.0f64, f64::max);
+        let violations = approx
+            .scores
+            .iter()
+            .zip(&exact.scores)
+            .filter(|(a, e)| **a > **e + 1e-9)
+            .count();
+        println!(
+            "p={p:>4}: max additive error {:.4}  upper-bound violations {}  \
+             d_eff est {:.1}/{:.1}  time {:?} (exact: {:?})",
+            max_add_err, violations, approx.d_eff_estimate, exact.d_eff, t_approx, t_exact
+        );
+    }
+    println!(
+        "\n→ Theorem 4: l̃_i never exceeds l_i, and the additive error \
+         shrinks as the bootstrap sketch p grows; the approximation runs in \
+         O(np²) vs O(n³) exact."
+    );
+}

@@ -1,0 +1,67 @@
+//! Quickstart: fit leverage-sampled Nyström KRR on the paper's synthetic
+//! problem and compare it against exact KRR.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use fastkrr::kernel::{Kernel, KernelFn, KernelKind};
+use fastkrr::krr::risk::{exact_risk, nystrom_risk};
+use fastkrr::krr::{mse, ExactKrr, NystromKrr, NystromKrrConfig};
+use fastkrr::leverage;
+use fastkrr::sketch::SketchStrategy;
+
+fn main() {
+    // 1. The paper's synthetic dataset: center-sparse design on (0,1),
+    //    responses from a periodic-Sobolev f* plus Gaussian noise.
+    let ds = fastkrr::data::synth_bernoulli(500, 2, 0.1, 42);
+    let kind = KernelKind::Bernoulli { order: 2 };
+    let lambda = 1e-6;
+    println!("dataset: {} (n={}, d={})", ds.name, ds.n(), ds.d());
+
+    // 2. Exact ridge leverage scores → effective dimensionality.
+    let kernel = KernelFn::new(kind);
+    let km = kernel.matrix(&ds.x);
+    let lev = leverage::exact_ridge_leverage(&km, lambda).unwrap();
+    println!(
+        "d_eff = {:.1}, d_mof = {:.0}  (leverage sampling needs p ~ d_eff, \
+         uniform needs p ~ d_mof)",
+        lev.d_eff, lev.d_mof
+    );
+
+    // 3. Exact KRR baseline (O(n³)).
+    let t0 = std::time::Instant::now();
+    let exact = ExactKrr::fit_with_kmat(&ds.x, &ds.y, kind, lambda, Some(&km)).unwrap();
+    println!("exact KRR fit in {:?}", t0.elapsed());
+
+    // 4. Nyström KRR with p = 2·d_eff columns sampled by approximate ridge
+    //    leverage scores (the paper's headline configuration).
+    let p = (2.0 * lev.d_eff).ceil() as usize;
+    let cfg = NystromKrrConfig {
+        lambda,
+        p,
+        strategy: SketchStrategy::ApproxRidgeLeverage { oversample: 2.0 },
+        gamma: 0.0,
+        seed: 7,
+    };
+    let t0 = std::time::Instant::now();
+    let nystrom = NystromKrr::fit(&ds.x, &ds.y, kind, &cfg).unwrap();
+    println!("Nyström KRR (p={p}) fit in {:?}", t0.elapsed());
+
+    // 5. Compare: in-sample agreement and closed-form statistical risk.
+    let agree = mse(nystrom.fitted(), exact.fitted());
+    println!("mean squared difference of fitted values: {agree:.3e}");
+    let f_star = ds.f_star.as_ref().unwrap();
+    let sigma = ds.sigma.unwrap();
+    let rk = exact_risk(&km, f_star, sigma, lambda).unwrap();
+    let rl = nystrom_risk(nystrom.factor(), f_star, sigma, lambda).unwrap();
+    println!(
+        "risk(exact) = {:.4e}   risk(nystrom) = {:.4e}   ratio = {:.3}",
+        rk.total(),
+        rl.total(),
+        rl.total() / rk.total()
+    );
+    println!(
+        "→ Theorem 3: with p = 2·d_eff = {p} of n = {} columns, the Nyström \
+         estimator matches exact KRR within a small factor.",
+        ds.n()
+    );
+}

@@ -1,0 +1,117 @@
+//! End-to-end serving driver — proves all layers compose:
+//!
+//!   L3 pipeline trains a leverage-sampled Nyström model (d=8, p=64, RBF) →
+//!   exported ServingModel → Engine with the PJRT backend executes the
+//!   AOT-compiled `predict_b*` artifacts (L2 JAX graph wrapping the L1
+//!   Pallas RBF kernel) → TCP server → concurrent clients.
+//!
+//! Reports correctness (PJRT vs native oracle), latency percentiles and
+//! throughput; falls back to the native backend (with a warning) if the
+//! artifacts are missing. Results recorded in EXPERIMENTS.md.
+//!
+//! Run: `make artifacts && cargo run --release --example serve_e2e`
+
+use fastkrr::coordinator::{
+    Backend, BatcherConfig, Engine, EngineConfig, ServingModel, TrainPipeline,
+    TrainPipelineConfig,
+};
+use fastkrr::kernel::KernelKind;
+use fastkrr::krr::mse;
+use fastkrr::linalg::Mat;
+use fastkrr::rng::Pcg64;
+use fastkrr::server::{Client, Server};
+use std::time::Instant;
+
+fn main() {
+    // ---- 1. Train: two-pass leverage pipeline at the artifact shapes ----
+    let (n, d, p) = (2048usize, 8usize, 64usize);
+    let mut rng = Pcg64::new(11);
+    let x = Mat::from_fn(n, d, |_, _| rng.normal());
+    let y: Vec<f64> = (0..n)
+        .map(|i| {
+            let r = x.row(i);
+            (r[0] * r[1]).tanh() + (r[2] + r[3]).sin() * 0.5 + 0.05 * rng.normal()
+        })
+        .collect();
+    let pipe = TrainPipeline::new(
+        KernelKind::Rbf { bandwidth: 1.0 },
+        TrainPipelineConfig { lambda: 1e-3, p, p0: Some(256), epsilon: 0.5, seed: 3 },
+    );
+    let t0 = Instant::now();
+    let (model, report) = pipe.run(&x, &y).unwrap();
+    println!("== training ==");
+    println!("{}", report.render());
+    println!(
+        "train wall {:?}; train mse {:.4}",
+        t0.elapsed(),
+        mse(model.fitted(), &y)
+    );
+
+    // ---- 2. Export + start engine (PJRT if artifacts exist) -------------
+    let sm = ServingModel::from_nystrom(&model).unwrap();
+    let native_oracle = sm.clone();
+    let artifact_dir = fastkrr::runtime::default_artifact_dir();
+    let (backend, backend_name) = if artifact_dir.join("manifest.json").exists() {
+        (Backend::Pjrt { artifact_dir }, "pjrt")
+    } else {
+        eprintln!("WARNING: artifacts missing — run `make artifacts`; using native backend");
+        (Backend::Native, "native")
+    };
+    let engine = Engine::start(
+        sm,
+        EngineConfig {
+            backend,
+            batcher: BatcherConfig {
+                max_wait: std::time::Duration::from_millis(1),
+                ..Default::default()
+            },
+        },
+    )
+    .unwrap();
+    let server = Server::start("127.0.0.1:0", engine).unwrap();
+    let addr = server.addr().to_string();
+    println!("\n== serving == backend={backend_name} addr={addr}");
+
+    // ---- 3. Correctness: PJRT path vs native oracle ----------------------
+    let mut probe = Client::connect(&addr).unwrap();
+    let n_check = 64;
+    let mut max_err = 0.0f64;
+    for i in 0..n_check {
+        let got = probe.predict(x.row(i)).unwrap();
+        let want = native_oracle.predict_native(&x.select_rows(&[i]))[0];
+        max_err = max_err.max((got - want).abs());
+    }
+    println!("correctness: max |served − native| over {n_check} points = {max_err:.3e}");
+    assert!(max_err < 1e-3, "serving path diverged from the native oracle");
+
+    // ---- 4. Load test: concurrent clients, measure latency/throughput ---
+    let n_clients = 8;
+    let reqs_per_client = 500;
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..n_clients {
+            let addr = addr.clone();
+            let x = &x;
+            s.spawn(move || {
+                let mut client = Client::connect(&addr).unwrap();
+                let mut rng = Pcg64::new(100 + c as u64);
+                for _ in 0..reqs_per_client {
+                    let i = rng.below(x.rows());
+                    client.predict(x.row(i)).unwrap();
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+    let total = n_clients * reqs_per_client;
+    let mut probe = Client::connect(&addr).unwrap();
+    let stats = probe.stats().unwrap();
+    println!("\n== load test == {total} requests / {n_clients} clients in {wall:?}");
+    println!(
+        "throughput: {:.0} req/s",
+        total as f64 / wall.as_secs_f64()
+    );
+    println!("server stats: {}", stats.dump());
+    server.shutdown();
+    println!("\nserve_e2e OK");
+}

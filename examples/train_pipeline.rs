@@ -1,0 +1,74 @@
+//! The two-pass leverage training pipeline on a realistic workload (the
+//! pumadyn-32nh surrogate): staged timings, kernel-evaluation accounting,
+//! and an ablation against one-pass uniform / diag-K sampling.
+//!
+//! Run: `cargo run --release --example train_pipeline`
+
+use fastkrr::coordinator::{TrainPipeline, TrainPipelineConfig};
+use fastkrr::data::{pumadyn_surrogate, PumadynVariant};
+use fastkrr::kernel::KernelKind;
+use fastkrr::krr::{mse, ExactKrr};
+use fastkrr::rng::Pcg64;
+use fastkrr::sketch::SketchStrategy;
+
+fn main() {
+    let mut ds = pumadyn_surrogate(PumadynVariant::Nh, 2000, 5);
+    ds.standardize();
+    let kind = KernelKind::Rbf { bandwidth: 5.0 };
+    let lambda = 1.3e-2;
+    let mut rng = Pcg64::new(9);
+    let (train, test) = ds.split(0.8, &mut rng);
+    println!(
+        "dataset: {} (train n={}, test n={}, d={})\n",
+        ds.name,
+        train.n(),
+        test.n(),
+        train.d()
+    );
+
+    // Exact KRR reference (O(n³)).
+    let t0 = std::time::Instant::now();
+    let exact = ExactKrr::fit(&train.x, &train.y, kind, lambda).unwrap();
+    let t_exact = t0.elapsed();
+    let exact_test = mse(&exact.predict(&test.x), &test.y);
+    println!("exact KRR:      {t_exact:?}   test mse {exact_test:.4}");
+
+    // Two-pass pipeline at several p.
+    for p in [64usize, 128, 256] {
+        let pipe = TrainPipeline::new(
+            kind,
+            TrainPipelineConfig { lambda, p, p0: Some(2 * p), epsilon: 0.5, seed: 1 },
+        );
+        let t0 = std::time::Instant::now();
+        let (model, report) = pipe.run(&train.x, &train.y).unwrap();
+        let wall = t0.elapsed();
+        let test_mse = mse(&model.predict(&test.x), &test.y);
+        println!(
+            "two-pass p={p:>4}: {wall:?}   test mse {test_mse:.4}   \
+             (d_eff~{:.0}, {} kernel evals, {:.1}× fewer than exact)",
+            report.d_eff_estimate,
+            report.kernel_evals,
+            (train.n() * train.n()) as f64 / report.kernel_evals as f64
+        );
+    }
+
+    // Ablation: one-pass strategies at fixed p.
+    println!("\nablation at p=128:");
+    let pipe = TrainPipeline::new(
+        kind,
+        TrainPipelineConfig { lambda, p: 128, p0: Some(256), epsilon: 0.5, seed: 1 },
+    );
+    for (name, strat) in [
+        ("uniform", SketchStrategy::Uniform),
+        ("diag-k", SketchStrategy::DiagK),
+    ] {
+        let (model, _) = pipe.run_one_pass(&train.x, &train.y, strat).unwrap();
+        let test_mse = mse(&model.predict(&test.x), &test.y);
+        println!("  one-pass {name:<8} test mse {test_mse:.4}");
+    }
+    let (model, _) = pipe.run(&train.x, &train.y).unwrap();
+    println!(
+        "  two-pass leverage test mse {:.4}",
+        mse(&model.predict(&test.x), &test.y)
+    );
+}

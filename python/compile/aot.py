@@ -1,0 +1,147 @@
+"""AOT lowering: JAX entrypoints -> HLO text artifacts + manifest.json.
+
+Interchange is HLO *text*, not a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Run via `make artifacts`; a no-op if artifacts/ is newer than the inputs.
+Usage: python -m compile.aot --out ../artifacts [--set default|wide]
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def entrypoints(artifact_set: str):
+    """The artifact catalogue: name -> (callable, arg specs, metadata).
+
+    Shapes are baked at compile time (PJRT executables are static-shape);
+    the serving batcher pads to the nearest compiled batch size.
+    """
+    eps = []
+
+    def add(name, fn, args, meta):
+        eps.append((name, fn, args, meta))
+
+    # Serving: batched prediction at several batch sizes, one model shape.
+    d, p = 8, 64
+    bw = 1.0
+    batches = [1, 8, 32] if artifact_set == "default" else [1, 8, 32, 128]
+    for b in batches:
+        add(
+            f"predict_b{b}_d{d}_p{p}",
+            functools.partial(model.krr_predict, bandwidth=bw),
+            [_spec((b, d)), _spec((p, d)), _spec((p,))],
+            {
+                "kind": "predict",
+                "batch": b,
+                "d": d,
+                "p": p,
+                "bandwidth": bw,
+                "inputs": ["x", "landmarks", "v"],
+            },
+        )
+
+    # Training: kernel column block + leverage scoring tiles.
+    m_tile, n_tile = 128, 256
+    add(
+        f"kernel_block_rbf_m{m_tile}_p{p}_d{d}",
+        functools.partial(model.kernel_block_rbf, bandwidth=bw),
+        [_spec((m_tile, d)), _spec((p, d))],
+        {
+            "kind": "kernel_block",
+            "m": m_tile,
+            "p": p,
+            "d": d,
+            "bandwidth": bw,
+            "inputs": ["x", "z"],
+        },
+    )
+    add(
+        f"leverage_n{n_tile}_p{p}",
+        model.leverage_scores,
+        [_spec((n_tile, p)), _spec((p, p))],
+        {
+            "kind": "leverage",
+            "n_tile": n_tile,
+            "p": p,
+            "inputs": ["b", "m"],
+        },
+    )
+    if artifact_set == "wide":
+        add(
+            f"features_b32_d{d}_p{p}",
+            functools.partial(model.nystrom_features, bandwidth=bw),
+            [_spec((32, d)), _spec((p, d)), _spec((p, p))],
+            {
+                "kind": "features",
+                "batch": 32,
+                "d": d,
+                "p": p,
+                "bandwidth": bw,
+                "inputs": ["x", "landmarks", "fmap_w"],
+            },
+        )
+    return eps
+
+
+def lower_all(out_dir: str, artifact_set: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"format": 1, "set": artifact_set, "artifacts": []}
+    for name, fn, args, meta in entrypoints(artifact_set):
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entry = dict(meta)
+        entry["name"] = name
+        entry["file"] = fname
+        entry["arg_shapes"] = [list(a.shape) for a in args]
+        entry["dtype"] = "f32"
+        manifest["artifacts"].append(entry)
+        print(f"  lowered {name}: {len(text)} chars")
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    return manifest
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--set",
+        default="default",
+        choices=["default", "wide"],
+        dest="artifact_set",
+        help="which artifact catalogue to build",
+    )
+    args = ap.parse_args()
+    manifest = lower_all(args.out, args.artifact_set)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

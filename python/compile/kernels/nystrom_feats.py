@@ -1,0 +1,62 @@
+"""L1 Pallas kernel: fused Nystrom leverage scoring `diag(B M B^T)`.
+
+Step 5 of the paper's S3.5 algorithm evaluates
+`l~_i = B_i^T (B^T B + n*lambda*I)^{-1} B_i` for every row of the n x p
+factor B. With `M = (B^T B + n*lambda*I)^{-1}` precomputed (p x p, done once
+by the coordinator), the per-row work is a quadratic form.
+
+TPU mapping (DESIGN.md S7): tile the rows of B into (TILE_N, p) panels; M
+stays VMEM-resident across the whole grid (p <= 512 -> <= 1 MiB f32); each
+step does an MXU (TILE_N, p) x (p, p) matmul followed by a VPU row-dot,
+writing a (TILE_N, 1) column. One pass over B; no n x n intermediates --
+this is what keeps the algorithm O(n p^2).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_N = 256
+
+
+def _leverage_body(b_ref, m_ref, o_ref):
+    bt = b_ref[...]                       # (tn, p) VMEM panel
+    mm = m_ref[...]                       # (p, p) VMEM-resident
+    bm = jnp.dot(bt, mm, preferred_element_type=jnp.float32)  # MXU
+    scores = jnp.sum(bm * bt, axis=1, keepdims=True)          # VPU row-dot
+    o_ref[...] = scores.astype(o_ref.dtype)
+
+
+def leverage_scores(b, m, tile_n=DEFAULT_TILE_N):
+    """Pallas fused `diag(B M B^T)`; semantics = ref.leverage_scores.
+
+    b: (n, p) factor; m: (p, p) symmetric. Returns (n,) scores.
+    """
+    if b.ndim != 2 or m.shape != (b.shape[1], b.shape[1]):
+        raise ValueError(f"bad shapes B{b.shape} M{m.shape}")
+    n, p = b.shape
+    rem = n % tile_n
+    if rem != 0:
+        b = jnp.pad(b, ((0, tile_n - rem), (0, 0)))
+    grid = (b.shape[0] // tile_n,)
+    out = pl.pallas_call(
+        _leverage_body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_n, p), lambda i: (i, 0)),
+            pl.BlockSpec((p, p), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_n, 1), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b.shape[0], 1), b.dtype),
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )(b, m)
+    return out[:n, 0]
+
+
+def vmem_footprint_bytes(tile_n, p, dtype_bytes=4):
+    """VMEM per grid step: B panel + resident M + BM scratch + out column,
+    x2 for double-buffering the streaming panel."""
+    streaming = 2 * (tile_n * p + tile_n) * dtype_bytes
+    resident = p * p * dtype_bytes
+    scratch = tile_n * p * dtype_bytes
+    return streaming + resident + scratch

@@ -1,0 +1,107 @@
+"""L1 Pallas kernel: tiled pairwise RBF / linear kernel block.
+
+The paper's compute hot-spot is evaluating kernel columns
+`C = K[:, I]` (training) and kernel blocks `k(X_batch, landmarks)`
+(serving). On TPU the Gaussian RBF block is MXU-friendly in the
+`||x||^2 + ||z||^2 - 2 x z^T` form: the dominant cost is the `(m,d)x(d,p)`
+matmul on the systolic array; the row/col norms and the exp run on the VPU.
+
+BlockSpec schedule (DESIGN.md S7):
+  - output tiles of (TILE_M, TILE_P) = (128, 128) by default;
+  - each grid step loads an (TILE_M, d) panel of X and a (TILE_P, d) panel
+    of Z into VMEM (full contraction dimension resident: d <= 512 keeps the
+    panels' f32 footprint <= 2x128x512x4 B = 512 KiB, well inside the
+    ~16 MiB VMEM budget; the double-buffered pipeline overlaps the HBM
+    loads of step i+1 with the MXU work of step i).
+
+`interpret=True` always: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; correctness is established against `ref.py` here and the
+compiled HLO artifact runs the identical lowered ops from Rust.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TILE_M = 128
+DEFAULT_TILE_P = 128
+
+
+def _pad_to(x, multiple, axis):
+    """Zero-pad `axis` of x up to the next multiple."""
+    size = x.shape[axis]
+    rem = size % multiple
+    if rem == 0:
+        return x, size
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, multiple - rem)
+    return jnp.pad(x, pad), size
+
+
+def _rbf_kernel_body(x_ref, z_ref, o_ref, *, inv_two_bw2):
+    xt = x_ref[...]  # (tm, d) VMEM panel
+    zt = z_ref[...]  # (tp, d) VMEM panel
+    # MXU: (tm, d) x (d, tp).
+    g = jnp.dot(xt, zt.T, preferred_element_type=jnp.float32)
+    xn = jnp.sum(xt * xt, axis=1, keepdims=True)  # VPU row norms
+    zn = jnp.sum(zt * zt, axis=1, keepdims=True).T
+    d2 = jnp.maximum(xn + zn - 2.0 * g, 0.0)
+    o_ref[...] = jnp.exp(-d2 * inv_two_bw2).astype(o_ref.dtype)
+
+
+def _linear_kernel_body(x_ref, z_ref, o_ref):
+    g = jnp.dot(x_ref[...], z_ref[...].T, preferred_element_type=jnp.float32)
+    o_ref[...] = g.astype(o_ref.dtype)
+
+
+def _block_call(body, x, z, tile_m, tile_p):
+    """Shared pallas_call wrapper: pad to tile multiples, run, slice back."""
+    if x.ndim != 2 or z.ndim != 2 or x.shape[1] != z.shape[1]:
+        raise ValueError(f"bad block shapes {x.shape} x {z.shape}")
+    xp, m = _pad_to(x, tile_m, 0)
+    zp, p = _pad_to(z, tile_p, 0)
+    d = xp.shape[1]
+    grid = (xp.shape[0] // tile_m, zp.shape[0] // tile_p)
+    out = pl.pallas_call(
+        body,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_m, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_p, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, tile_p), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], zp.shape[0]), x.dtype),
+        interpret=True,  # CPU-PJRT cannot run Mosaic custom-calls
+    )(xp, zp)
+    return out[:m, :p]
+
+
+def rbf_block(x, z, bandwidth, tile_m=DEFAULT_TILE_M, tile_p=DEFAULT_TILE_P):
+    """Pallas tiled RBF kernel block; semantics = ref.rbf_block."""
+    inv = 1.0 / (2.0 * float(bandwidth) * float(bandwidth))
+    body = functools.partial(_rbf_kernel_body, inv_two_bw2=inv)
+    return _block_call(body, x, z, tile_m, tile_p)
+
+
+def linear_block(x, z, tile_m=DEFAULT_TILE_M, tile_p=DEFAULT_TILE_P):
+    """Pallas tiled linear kernel block; semantics = ref.linear_block."""
+    return _block_call(_linear_kernel_body, x, z, tile_m, tile_p)
+
+
+def vmem_footprint_bytes(tile_m, tile_p, d, dtype_bytes=4):
+    """Estimated VMEM residency per grid step (X panel + Z panel + out tile),
+    x2 for double buffering. Used by DESIGN.md S7/S8 accounting and the
+    kernel's own self-check below."""
+    panels = (tile_m * d + tile_p * d + tile_m * tile_p) * dtype_bytes
+    return 2 * panels
+
+
+def mxu_utilization_estimate(tile_m, tile_p, d):
+    """Fraction of the per-tile FLOPs that land on the MXU: the matmul is
+    2*tm*tp*d FLOPs; the VPU epilogue (norms, add, exp) is ~7*tm*tp + 2*(tm+tp)*d.
+    For d >= 128 this is > 0.9 -- recorded in EXPERIMENTS.md S Perf."""
+    mxu = 2.0 * tile_m * tile_p * d
+    vpu = 7.0 * tile_m * tile_p + 2.0 * (tile_m + tile_p) * d
+    return mxu / (mxu + vpu)

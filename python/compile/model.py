@@ -1,0 +1,58 @@
+"""L2: JAX compute graphs for the serving/training hot paths.
+
+Each public function here is an AOT entrypoint: `aot.py` lowers it (at
+fixed shapes) to HLO text that the Rust runtime loads and executes via
+PJRT. The heavy inner ops are the L1 Pallas kernels from `kernels/`
+(interpret=True, so they lower to plain HLO the CPU plugin can run).
+
+Python never runs at serving time: these graphs are compiled once by
+`make artifacts`.
+"""
+
+import jax.numpy as jnp
+
+from .kernels import nystrom_feats, pairwise
+
+
+def krr_predict(x, landmarks, v, *, bandwidth):
+    """Batched Nystrom-KRR prediction (the serving hot path).
+
+    f(x) = k_rbf(x, landmarks) @ v, with v = diag(w) @ fmap @ theta folded
+    to a p-vector by the coordinator at model-load time.
+
+    x: (b, d) batch; landmarks: (p, d); v: (p,). Returns (b,).
+    """
+    kx = pairwise.rbf_block(x, landmarks, bandwidth)
+    return kx @ v
+
+
+def kernel_block_rbf(x, z, *, bandwidth):
+    """RBF kernel block artifact (training pipeline column evaluation)."""
+    return pairwise.rbf_block(x, z, bandwidth)
+
+
+def kernel_block_linear(x, z):
+    """Linear kernel block artifact."""
+    return pairwise.linear_block(x, z)
+
+
+def leverage_scores(b, m):
+    """Fast ridge-leverage scoring artifact: diag(B M B^T) (S3.5 step 5)."""
+    return nystrom_feats.leverage_scores(b, m)
+
+
+def nystrom_features(x, landmarks, fmap_w, *, bandwidth):
+    """Nystrom feature map for a batch: phi(x) = k_rbf(x, landmarks) @ fmap_w
+    where fmap_w = diag(w) @ fmap (p x p, folded by the coordinator).
+
+    Used when the coordinator wants features rather than predictions
+    (e.g. to score leverage of incoming points online).
+    """
+    kx = pairwise.rbf_block(x, landmarks, bandwidth)
+    return kx @ fmap_w
+
+
+def mse_loss(pred, target):
+    """Scalar MSE (training diagnostics artifact)."""
+    diff = pred - target
+    return jnp.mean(diff * diff)

@@ -1,0 +1,148 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles in ref.py.
+
+This is the CORE correctness signal for the compiled artifacts — the same
+pallas_call lowers into the AOT HLO that Rust executes. Hypothesis sweeps
+shapes (including non-tile-multiple and degenerate ones) and dtypes.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile.kernels import nystrom_feats, pairwise, ref
+
+jax.config.update("jax_enable_x64", False)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rand(key, *shape, dtype=jnp.float32):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=dtype)
+
+
+# ---------------------------------------------------------------- rbf block
+
+
+@hypothesis.given(
+    m=st.integers(1, 200),
+    p=st.integers(1, 150),
+    d=st.integers(1, 40),
+    bw=st.floats(0.3, 5.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(**SETTINGS)
+def test_rbf_block_matches_ref(m, p, d, bw, seed):
+    x = rand(seed, m, d)
+    z = rand(seed + 1, p, d)
+    got = pairwise.rbf_block(x, z, bw, tile_m=64, tile_p=64)
+    want = ref.rbf_block(x, z, bw)
+    assert got.shape == (m, p)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+@hypothesis.given(
+    m=st.integers(1, 150),
+    p=st.integers(1, 150),
+    d=st.integers(1, 30),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(**SETTINGS)
+def test_linear_block_matches_ref(m, p, d, seed):
+    x = rand(seed, m, d)
+    z = rand(seed + 1, p, d)
+    got = pairwise.linear_block(x, z, tile_m=64, tile_p=64)
+    want = ref.linear_block(x, z)
+    # f32 matmul accumulation order differs between the tiled pallas path
+    # and the monolithic reference; tolerate absolute noise ~sqrt(d)*eps.
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("tile", [8, 32, 128])
+def test_rbf_tile_sizes_agree(tile):
+    x = rand(7, 100, 12)
+    z = rand(8, 45, 12)
+    got = pairwise.rbf_block(x, z, 1.3, tile_m=tile, tile_p=tile)
+    want = ref.rbf_block(x, z, 1.3)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_rbf_diag_is_one():
+    x = rand(9, 40, 6)
+    k = pairwise.rbf_block(x, x, 0.8, tile_m=32, tile_p=32)
+    assert_allclose(np.asarray(jnp.diag(k)), np.ones(40), rtol=1e-5)
+
+
+def test_rbf_symmetry():
+    x = rand(10, 60, 5)
+    k = pairwise.rbf_block(x, x, 1.1, tile_m=32, tile_p=32)
+    assert_allclose(np.asarray(k), np.asarray(k).T, rtol=1e-5, atol=1e-6)
+
+
+def test_rbf_values_bounded():
+    x = rand(11, 30, 4) * 10.0  # large spread
+    z = rand(12, 20, 4) * 10.0
+    k = np.asarray(pairwise.rbf_block(x, z, 0.5, tile_m=16, tile_p=16))
+    assert (k >= 0.0).all() and (k <= 1.0 + 1e-6).all()
+
+
+def test_bad_shapes_rejected():
+    x = rand(1, 4, 3)
+    z = rand(2, 5, 7)
+    with pytest.raises(ValueError):
+        pairwise.rbf_block(x, z, 1.0)
+    with pytest.raises(ValueError):
+        pairwise.linear_block(jnp.zeros((3,)), jnp.zeros((3, 2)))
+
+
+# ----------------------------------------------------------- leverage tiles
+
+
+@hypothesis.given(
+    n=st.integers(1, 300),
+    p=st.integers(1, 48),
+    seed=st.integers(0, 2**31 - 1),
+)
+@hypothesis.settings(**SETTINGS)
+def test_leverage_scores_match_ref(n, p, seed):
+    b = rand(seed, n, p)
+    g = rand(seed + 1, p, p)
+    m = g @ g.T + jnp.eye(p)  # symmetric PD
+    got = nystrom_feats.leverage_scores(b, m, tile_n=64)
+    want = ref.leverage_scores(b, m)
+    assert got.shape == (n,)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=5e-4, atol=5e-4)
+
+
+def test_leverage_scores_nonnegative_for_psd_m():
+    b = rand(3, 120, 16)
+    g = rand(4, 16, 16)
+    m = g @ g.T
+    s = np.asarray(nystrom_feats.leverage_scores(b, m, tile_n=32))
+    assert (s >= -1e-5).all()
+
+
+def test_leverage_bad_shapes():
+    with pytest.raises(ValueError):
+        nystrom_feats.leverage_scores(rand(1, 10, 4), rand(2, 5, 5))
+
+
+# -------------------------------------------------------------- accounting
+
+
+def test_vmem_footprint_within_budget():
+    # Default serving tiles must fit the ~16 MiB TPU VMEM budget.
+    fp = pairwise.vmem_footprint_bytes(128, 128, 512)
+    assert fp < 16 * 1024 * 1024, f"pairwise footprint {fp}"
+    fp2 = nystrom_feats.vmem_footprint_bytes(256, 512)
+    assert fp2 < 16 * 1024 * 1024, f"leverage footprint {fp2}"
+
+
+def test_mxu_utilization_estimate_reasonable():
+    u = pairwise.mxu_utilization_estimate(128, 128, 128)
+    assert 0.8 < u < 1.0
+    u_small = pairwise.mxu_utilization_estimate(128, 128, 8)
+    assert u_small < u  # small d shifts work to the VPU

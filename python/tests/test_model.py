@@ -1,0 +1,76 @@
+"""L2 correctness: model entrypoints vs ref oracles + jit consistency."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.kernels import ref
+
+
+def rand(key, *shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, dtype=jnp.float32)
+
+
+def test_krr_predict_matches_ref():
+    x = rand(0, 32, 8)
+    lm = rand(1, 64, 8)
+    v = rand(2, 64)
+    got = model.krr_predict(x, lm, v, bandwidth=1.0)
+    want = ref.krr_predict(x, lm, v, 1.0)
+    assert got.shape == (32,)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_krr_predict_jit_consistent():
+    x = rand(3, 8, 4)
+    lm = rand(4, 16, 4)
+    v = rand(5, 16)
+    import functools
+
+    fn = functools.partial(model.krr_predict, bandwidth=0.7)
+    eager = fn(x, lm, v)
+    jitted = jax.jit(fn)(x, lm, v)
+    assert_allclose(np.asarray(eager), np.asarray(jitted), rtol=1e-5, atol=1e-6)
+
+
+def test_kernel_block_rbf_matches_ref():
+    x = rand(6, 50, 8)
+    z = rand(7, 30, 8)
+    got = model.kernel_block_rbf(x, z, bandwidth=1.4)
+    want = ref.rbf_block(x, z, 1.4)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6)
+
+
+def test_kernel_block_linear_matches_ref():
+    x = rand(8, 20, 5)
+    z = rand(9, 25, 5)
+    got = model.kernel_block_linear(x, z)
+    assert_allclose(np.asarray(got), np.asarray(ref.linear_block(x, z)),
+                    rtol=1e-5, atol=1e-6)
+
+
+def test_leverage_scores_entrypoint():
+    b = rand(10, 100, 16)
+    g = rand(11, 16, 16)
+    m = g @ g.T + jnp.eye(16)
+    got = model.leverage_scores(b, m)
+    want = ref.leverage_scores(b, m)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=1e-5)
+
+
+def test_nystrom_features_shape_and_value():
+    x = rand(12, 10, 8)
+    lm = rand(13, 32, 8)
+    fw = rand(14, 32, 32)
+    got = model.nystrom_features(x, lm, fw, bandwidth=1.0)
+    want = ref.rbf_block(x, lm, 1.0) @ fw
+    assert got.shape == (10, 32)
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+def test_mse_loss():
+    a = jnp.array([1.0, 2.0, 3.0])
+    b = jnp.array([1.0, 0.0, 3.0])
+    assert abs(float(model.mse_loss(a, b)) - 4.0 / 3.0) < 1e-6

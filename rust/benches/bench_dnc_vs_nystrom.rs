@@ -1,0 +1,66 @@
+//! Regenerates the paper's **§1 comparison** (answering Zhang et al.'s open
+//! problem): kernel-evaluation budgets vs risk for divide-and-conquer,
+//! uniform Nyström, and leverage-sampled Nyström — on both the synthetic
+//! Bernoulli problem (skewed leverage) and a pumadyn surrogate (flatter
+//! leverage).
+//!
+//! Run: `cargo bench --bench bench_dnc_vs_nystrom`
+
+use fastkrr::data;
+use fastkrr::experiments::{dnc, run_dnc_comparison};
+use fastkrr::kernel::KernelKind;
+use fastkrr::metrics::bench::{bench_scale, section};
+
+fn main() {
+    let scale = bench_scale(1.0);
+    let trials = 5;
+    let mut all_ok = true;
+
+    // ---- synthetic (skewed leverage: the paper's favourable case) -------
+    let n = ((500.0 * scale) as usize).max(100);
+    section(&format!("synthetic Bernoulli, n={n}, λ=1e-6"));
+    let ds = data::synth_bernoulli(n, 2, 0.1, 21);
+    let rows =
+        run_dnc_comparison(&ds, KernelKind::Bernoulli { order: 2 }, 1e-6, trials, 21)
+            .unwrap();
+    println!("{}", dnc::render(&rows));
+    all_ok &= check(&rows);
+
+    // ---- pumadyn surrogate (moderate d_eff) ------------------------------
+    let n = ((800.0 * scale) as usize).max(150);
+    section(&format!("pumadyn-32fm surrogate, n={n}, RBF bw=5, λ=0.5"));
+    let mut ds = data::pumadyn_surrogate(data::PumadynVariant::Fm, n, 22);
+    ds.standardize();
+    let rows = run_dnc_comparison(&ds, KernelKind::Rbf { bandwidth: 5.0 }, 0.5, trials, 22)
+        .unwrap();
+    println!("{}", dnc::render(&rows));
+    all_ok &= check(&rows);
+
+    println!(
+        "\npaper §1 ordering (leverage-Nyström cheapest at matched risk): {}",
+        if all_ok { "PASS" } else { "FAIL" }
+    );
+    std::process::exit(if all_ok { 0 } else { 1 });
+}
+
+/// The paper's qualitative claims:
+///  - leverage-Nyström uses fewer kernel evals than uniform-Nyström
+///    (O(n·d_eff) vs O(n·d_mof)) and than exact;
+///  - its risk ratio stays small (< 2);
+///  - uniform sampling at the *same* small budget does worse (or no better).
+fn check(rows: &[dnc::DncRow]) -> bool {
+    let get = |n: &str| rows.iter().find(|r| r.method.contains(n)).unwrap();
+    let lev = get("leverage");
+    let uni = get("(uniform)");
+    let uni_small = get("unif, small");
+    let exact = get("exact");
+    let cheaper = lev.kernel_evals <= uni.kernel_evals && lev.kernel_evals < exact.kernel_evals;
+    let good_risk = lev.risk_ratio < 2.0;
+    let uniform_same_budget_worse = uni_small.risk_ratio >= lev.risk_ratio * 0.9;
+    println!(
+        "  leverage cheaper: {cheaper}; leverage ratio {:.2} < 2: {good_risk}; \
+         uniform@same-budget ratio {:.2} ≥ leverage: {uniform_same_budget_worse}",
+        lev.risk_ratio, uni_small.risk_ratio
+    );
+    cheaper && good_risk && uniform_same_budget_worse
+}

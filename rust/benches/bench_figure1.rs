@@ -1,0 +1,83 @@
+//! Regenerates **Figure 1** of the paper: (left) the λ-ridge leverage
+//! profile over the center-sparse synthetic design; (right) MSE risk vs
+//! number of sampled columns for uniform / diag-K / exact-leverage /
+//! approx-leverage sampling.
+//!
+//! Run: `cargo bench --bench bench_figure1`
+
+use fastkrr::experiments::{run_figure1_left, run_figure1_right};
+use fastkrr::metrics::bench::{bench_scale, section};
+
+fn main() {
+    let scale = bench_scale(1.0); // n=500 is cheap; default to paper size
+    let n = ((500.0 * scale) as usize).max(50);
+    let lambda = 1e-6;
+    let trials = std::env::var("FASTKRR_BENCH_TRIALS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(10);
+
+    section(&format!("Figure 1 (left): leverage profile, n={n}, λ={lambda:.0e}"));
+    let left = run_figure1_left(n, lambda, 42).expect("figure1 left");
+    println!("{}", left.render_ascii(20));
+
+    section(&format!("Figure 1 (right): risk vs p, {trials} trials"));
+    let p_grid: Vec<usize> = [10, 20, 40, 80, 160, 250]
+        .iter()
+        .map(|&p| p.min(n))
+        .collect::<Vec<_>>();
+    let mut p_grid = p_grid;
+    p_grid.dedup();
+    let t0 = std::time::Instant::now();
+    let right = run_figure1_right(n, lambda, &p_grid, trials, 42).expect("figure1 right");
+    println!("{}", right.render());
+    println!("generated in {:?}", t0.elapsed());
+
+    section("shape checks");
+    // 1. Leverage concentrates in the center (the paper's qualitative story).
+    let mut center = Vec::new();
+    let mut border = Vec::new();
+    for (&x, &s) in left.x.iter().zip(&left.scores) {
+        if (0.35..0.65).contains(&x) {
+            center.push(s);
+        } else if !(0.1..0.9).contains(&x) {
+            border.push(s);
+        }
+    }
+    let cm = center.iter().sum::<f64>() / center.len().max(1) as f64;
+    let bm = border.iter().sum::<f64>() / border.len().max(1) as f64;
+    let profile_ok = cm > 1.5 * bm;
+    println!("  center leverage {cm:.4} > 1.5 × border {bm:.4}: {profile_ok}");
+
+    // 2. Every strategy's risk decreases toward the exact level with p.
+    let mut decreasing_ok = true;
+    for (name, vals) in &right.series {
+        let dec = vals.last().unwrap() <= &(vals[0] * 1.05);
+        println!("  {name:<16} risk decreasing in p: {dec}");
+        decreasing_ok &= dec;
+    }
+
+    // 3. At the smallest p, leverage-based sampling beats uniform.
+    let uni = &right.series.iter().find(|(n, _)| n == "uniform").unwrap().1;
+    let lev = &right
+        .series
+        .iter()
+        .find(|(n, _)| n == "exact-leverage")
+        .unwrap()
+        .1;
+    let approx = &right
+        .series
+        .iter()
+        .find(|(n, _)| n == "approx-leverage")
+        .unwrap()
+        .1;
+    let lev_wins = lev[0] <= uni[0] && approx[0] <= uni[0] * 1.15;
+    println!(
+        "  at p={}: exact-lev {:.3e} / approx-lev {:.3e} ≤ uniform {:.3e}: {}",
+        right.p_grid[0], lev[0], approx[0], uni[0], lev_wins
+    );
+
+    let ok = profile_ok && decreasing_ok && lev_wins;
+    println!("\nshape agreement with the paper: {}", if ok { "PASS" } else { "FAIL" });
+    std::process::exit(if ok { 0 } else { 1 });
+}

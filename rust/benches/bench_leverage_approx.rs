@@ -1,0 +1,147 @@
+//! Validates the paper's **main algorithmic claim** (§3.5 + Theorem 4):
+//! the fast ridge-leverage approximation runs in O(np²) — versus O(n³)
+//! exact — and satisfies the additive/one-sided error bounds.
+//!
+//! Reports: runtime scaling in n and p, speedup over exact, error vs p.
+//!
+//! Run: `cargo bench --bench bench_leverage_approx`
+
+use fastkrr::kernel::{Kernel, KernelFn, KernelKind};
+use fastkrr::leverage::{approx_ridge_leverage, exact_ridge_leverage};
+use fastkrr::linalg::Mat;
+use fastkrr::metrics::bench::{bench, bench_scale, section};
+use fastkrr::rng::Pcg64;
+
+fn data(n: usize, d: usize, seed: u64) -> Mat {
+    let mut rng = Pcg64::new(seed);
+    Mat::from_fn(n, d, |_, _| rng.normal())
+}
+
+fn main() {
+    let scale = bench_scale(0.5);
+    let lambda = 1e-3;
+    let kernel = KernelFn::new(KernelKind::Rbf { bandwidth: 2.0 });
+
+    section("runtime scaling in n (p=128 fixed) — expect ~linear for approx, ~cubic for exact");
+    let n_grid: Vec<usize> = [256, 512, 1024, 2048]
+        .iter()
+        .map(|&n| ((n as f64 * scale) as usize).max(128))
+        .collect();
+    let mut approx_times = Vec::new();
+    let mut exact_times = Vec::new();
+    for &n in &n_grid {
+        let x = data(n, 8, n as u64);
+        let p = 128.min(n);
+        let s = bench(&format!("approx n={n} p={p}"), 1, 3, || {
+            let mut rng = Pcg64::new(1);
+            let _ = approx_ridge_leverage(&kernel, &x, lambda, p, &mut rng).unwrap();
+        });
+        println!("{}", s.render());
+        approx_times.push(s.mean_secs());
+        let km = kernel.matrix(&x);
+        let s = bench(&format!("exact  n={n}"), 0, 2, || {
+            let _ = exact_ridge_leverage(&km, lambda).unwrap();
+        });
+        println!("{}", s.render());
+        exact_times.push(s.mean_secs());
+    }
+    // Empirical scaling exponents between first and last n.
+    let ratio_n = *n_grid.last().unwrap() as f64 / n_grid[0] as f64;
+    let exp_approx =
+        (approx_times.last().unwrap() / approx_times[0]).ln() / ratio_n.ln();
+    let exp_exact = (exact_times.last().unwrap() / exact_times[0]).ln() / ratio_n.ln();
+    println!("\nempirical scaling: approx ~ n^{exp_approx:.2} (theory 1), exact ~ n^{exp_exact:.2} (theory 3)");
+    let speedup = exact_times.last().unwrap() / approx_times.last().unwrap();
+    println!(
+        "speedup at n={}: {speedup:.1}× (paper claim: O(np²) ≪ O(n³))",
+        n_grid.last().unwrap()
+    );
+
+    section("runtime scaling in p (n=1024 fixed) — expect ~quadratic");
+    let n = ((1024.0 * scale) as usize).max(256);
+    let x = data(n, 8, 7);
+    let mut p_times = Vec::new();
+    let p_grid = [32usize, 64, 128, 256];
+    for &p in &p_grid {
+        let s = bench(&format!("approx n={n} p={p}"), 1, 3, || {
+            let mut rng = Pcg64::new(2);
+            let _ = approx_ridge_leverage(&kernel, &x, lambda, p, &mut rng).unwrap();
+        });
+        println!("{}", s.render());
+        p_times.push(s.mean_secs());
+    }
+    let exp_p = (p_times.last().unwrap() / p_times[0]).ln()
+        / (p_grid[p_grid.len() - 1] as f64 / p_grid[0] as f64).ln();
+    println!("\nempirical scaling: approx ~ p^{exp_p:.2} (theory ≤ 2 + p³ term)");
+
+    section("factor-path ablation: eigh W⁺ vs jittered-Cholesky (§Perf item 2)");
+    {
+        let n = ((1024.0 * scale) as usize).max(256);
+        let x = data(n, 8, 11);
+        let diag = kernel.diag(&x);
+        for p in [128usize, 256] {
+            let mut rng = Pcg64::new(p as u64);
+            let sketch = fastkrr::sketch::draw_columns(&diag, p, &mut rng).unwrap();
+            let s_eigh = bench(&format!("factor eigh    n={n} p={p}"), 1, 3, || {
+                let _ = fastkrr::nystrom::NystromFactor::from_sketch(&kernel, &x, &sketch)
+                    .unwrap();
+            });
+            println!("{}", s_eigh.render());
+            let s_chol = bench(&format!("factor cholesky n={n} p={p}"), 1, 3, || {
+                let _ =
+                    fastkrr::nystrom::NystromFactor::from_sketch_fast(&kernel, &x, &sketch)
+                        .unwrap();
+            });
+            println!("{}", s_chol.render());
+            println!("  speedup: {:.2}×", s_eigh.mean_secs() / s_chol.mean_secs());
+        }
+    }
+
+    section("Theorem 4 error bounds vs p (n=512)");
+    let n = 512;
+    let x = data(n, 6, 9);
+    let km = kernel.matrix(&x);
+    let exact = exact_ridge_leverage(&km, lambda).unwrap();
+    println!(
+        "{:<8} {:>14} {:>14} {:>12} {:>10}",
+        "p", "max l̃−l (≤0)", "max l−l̃", "d_eff est", "violations"
+    );
+    let mut ok = true;
+    let mut prev_err = f64::INFINITY;
+    for p in [32usize, 64, 128, 256, 512] {
+        let mut rng = Pcg64::new(p as u64);
+        let approx = approx_ridge_leverage(&kernel, &x, lambda, p, &mut rng).unwrap();
+        let over = approx
+            .scores
+            .iter()
+            .zip(&exact.scores)
+            .map(|(a, e)| a - e)
+            .fold(f64::MIN, f64::max);
+        let under = exact
+            .scores
+            .iter()
+            .zip(&approx.scores)
+            .map(|(e, a)| e - a)
+            .fold(f64::MIN, f64::max);
+        let violations = approx
+            .scores
+            .iter()
+            .zip(&exact.scores)
+            .filter(|(a, e)| **a > **e + 1e-6)
+            .count();
+        println!(
+            "{:<8} {:>14.6} {:>14.6} {:>12.2} {:>10}",
+            p, over, under, approx.d_eff_estimate, violations
+        );
+        ok &= violations == 0;
+        if p >= 128 {
+            ok &= under <= prev_err + 0.05; // error non-exploding as p grows
+        }
+        prev_err = under;
+    }
+    println!(
+        "\nTheorem 4 one-sided bound (l̃ ≤ l) holds, error shrinks with p: {}",
+        if ok { "PASS" } else { "FAIL" }
+    );
+    std::process::exit(if ok { 0 } else { 1 });
+}

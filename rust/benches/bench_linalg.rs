@@ -1,0 +1,149 @@
+//! Microbenchmarks of the linalg substrate — the L3 perf-pass instrument
+//! (EXPERIMENTS.md §Perf). Reports GFLOP/s for the hot kernels so
+//! before/after optimization deltas are visible.
+//!
+//! Run: `cargo bench --bench bench_linalg`
+
+use fastkrr::linalg::{eigh, matmul, matmul_a_bt, syrk_at_a, Cholesky, Mat};
+use fastkrr::metrics::bench::{bench, bench_scale, section};
+use fastkrr::rng::Pcg64;
+
+fn randmat(r: usize, c: usize, seed: u64) -> Mat {
+    let mut rng = Pcg64::new(seed);
+    Mat::from_fn(r, c, |_, _| rng.normal())
+}
+
+fn gflops(flops: f64, secs: f64) -> f64 {
+    flops / secs / 1e9
+}
+
+/// The pre-optimization single-row AXPY matmul (EXPERIMENTS.md §Perf
+/// item 3's "before") kept here as an in-process ablation baseline so the
+/// comparison is contention-free.
+fn matmul_axpy_baseline(a: &Mat, b: &Mat) -> Mat {
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut out = Mat::zeros(m, n);
+    let a_data = a.as_slice();
+    let b_data = b.as_slice();
+    fastkrr::util::parallel::par_chunks_mut(out.as_mut_slice(), m, n, |_ci, row0, chunk| {
+        let rows_here = chunk.len() / n;
+        for kb in (0..k).step_by(256) {
+            let kend = (kb + 256).min(k);
+            for r in 0..rows_here {
+                let arow = &a_data[(row0 + r) * k..(row0 + r + 1) * k];
+                let crow = &mut chunk[r * n..(r + 1) * n];
+                for kk in kb..kend {
+                    let aik = arow[kk];
+                    let brow = &b_data[kk * n..(kk + 1) * n];
+                    for (c, &bv) in crow.iter_mut().zip(brow.iter()) {
+                        *c += aik * bv;
+                    }
+                }
+            }
+        }
+    });
+    out
+}
+
+fn main() {
+    let scale = bench_scale(1.0);
+
+    section("matmul micro-kernel ablation (old AXPY vs 4-row panel reuse)");
+    {
+        let m = ((1024.0 * scale) as usize).max(128);
+        let a = randmat(m, m, 10);
+        let b = randmat(m, m, 11);
+        let flops = 2.0 * (m as f64).powi(3);
+        let s_old = bench("matmul_axpy_baseline 1024^3", 1, 5, || {
+            std::hint::black_box(matmul_axpy_baseline(&a, &b));
+        });
+        println!("{}  [{:.2} GFLOP/s]", s_old.render(), gflops(flops, s_old.mean_secs()));
+        let s_new = bench("matmul (current) 1024^3", 1, 5, || {
+            std::hint::black_box(matmul(&a, &b));
+        });
+        println!("{}  [{:.2} GFLOP/s]", s_new.render(), gflops(flops, s_new.mean_secs()));
+        println!(
+            "  speedup: {:.2}×",
+            s_old.mean_secs() / s_new.mean_secs()
+        );
+    }
+
+    section("matmul (the B = C·W^{+1/2} shape: tall-skinny)");
+    for &(m, k, n) in &[(2048usize, 256usize, 256usize), (4096, 128, 128), (1024, 1024, 1024)] {
+        let m = ((m as f64 * scale) as usize).max(64);
+        let a = randmat(m, k, 1);
+        let b = randmat(k, n, 2);
+        let s = bench(&format!("matmul {m}x{k}x{n}"), 1, 5, || {
+            std::hint::black_box(matmul(&a, &b));
+        });
+        println!(
+            "{}  [{:.2} GFLOP/s]",
+            s.render(),
+            gflops(2.0 * m as f64 * k as f64 * n as f64, s.mean_secs())
+        );
+    }
+
+    section("syrk BᵀB (p×p from n×p)");
+    for &(n, p) in &[(4096usize, 128usize), (2048, 256), (1024, 512)] {
+        let n = ((n as f64 * scale) as usize).max(128);
+        let a = randmat(n, p, 3);
+        let s = bench(&format!("syrk {n}x{p}"), 1, 5, || {
+            std::hint::black_box(syrk_at_a(&a));
+        });
+        println!(
+            "{}  [{:.2} GFLOP/s]",
+            s.render(),
+            gflops(n as f64 * p as f64 * p as f64, s.mean_secs())
+        );
+    }
+
+    section("kernel block (RBF fast path = matmul_a_bt + epilogue)");
+    for &(m, p, d) in &[(2048usize, 256usize, 32usize), (1024, 128, 128)] {
+        let m = ((m as f64 * scale) as usize).max(128);
+        let x = randmat(m, d, 4);
+        let z = randmat(p, d, 5);
+        let kernel =
+            fastkrr::kernel::KernelFn::new(fastkrr::kernel::KernelKind::Rbf { bandwidth: 1.0 });
+        let s = bench(&format!("rbf_block {m}x{p} d={d}"), 1, 5, || {
+            std::hint::black_box(fastkrr::kernel::Kernel::cross(&kernel, &x, &z));
+        });
+        println!(
+            "{}  [{:.2} GFLOP/s matmul-part]",
+            s.render(),
+            gflops(2.0 * m as f64 * p as f64 * d as f64, s.mean_secs())
+        );
+        let _ = matmul_a_bt(&x, &z); // keep the symbol hot/linked
+    }
+
+    section("cholesky + solves (the (K+nλI)⁻¹ machinery)");
+    for &n in &[256usize, 512, 1024] {
+        let n = ((n as f64 * scale) as usize).max(128);
+        let g = randmat(n + 8, n, 6);
+        let mut a = syrk_at_a(&g);
+        a.add_scaled_identity(1.0);
+        let s = bench(&format!("cholesky {n}"), 1, 3, || {
+            std::hint::black_box(Cholesky::new(&a).unwrap());
+        });
+        println!(
+            "{}  [{:.2} GFLOP/s]",
+            s.render(),
+            gflops(n as f64 * n as f64 * n as f64 / 3.0, s.mean_secs())
+        );
+        let ch = Cholesky::new(&a).unwrap();
+        let s = bench(&format!("inverse_diagonal {n}"), 1, 3, || {
+            std::hint::black_box(ch.inverse_diagonal());
+        });
+        println!("{}", s.render());
+    }
+
+    section("eigh (the W⁺ machinery, p×p)");
+    for &p in &[128usize, 256, 512] {
+        let p = ((p as f64 * scale) as usize).max(64);
+        let g = randmat(p + 4, p, 7);
+        let a = syrk_at_a(&g);
+        let s = bench(&format!("eigh {p}"), 1, 3, || {
+            std::hint::black_box(eigh(&a).unwrap());
+        });
+        println!("{}", s.render());
+    }
+}

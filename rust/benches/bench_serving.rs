@@ -1,0 +1,155 @@
+//! Serving-path benchmarks: engine throughput/latency for the PJRT and
+//! native backends, batcher policy efficiency, and per-batch execution
+//! cost per compiled batch size. (The system-validation numbers recorded
+//! in EXPERIMENTS.md come from here + examples/serve_e2e.)
+//!
+//! Run: `make artifacts && cargo bench --bench bench_serving`
+
+use fastkrr::coordinator::{
+    Backend, Batcher, BatcherConfig, Engine, EngineConfig, ServingModel,
+};
+use fastkrr::kernel::KernelKind;
+use fastkrr::krr::{NystromKrr, NystromKrrConfig};
+use fastkrr::linalg::Mat;
+use fastkrr::metrics::bench::section;
+use fastkrr::rng::Pcg64;
+use fastkrr::sketch::SketchStrategy;
+use std::time::{Duration, Instant};
+
+fn model_at_artifact_shapes() -> (Mat, ServingModel) {
+    let (n, d, p) = (1024usize, 8usize, 64usize);
+    let mut rng = Pcg64::new(5);
+    let x = Mat::from_fn(n, d, |_, _| rng.normal());
+    let y: Vec<f64> = (0..n)
+        .map(|i| (x.row(i).iter().sum::<f64>() * 0.3).sin())
+        .collect();
+    let cfg = NystromKrrConfig {
+        lambda: 1e-3,
+        p,
+        strategy: SketchStrategy::DiagK,
+        gamma: 0.0,
+        seed: 5,
+    };
+    let m = NystromKrr::fit(&x, &y, KernelKind::Rbf { bandwidth: 1.0 }, &cfg).unwrap();
+    (x, ServingModel::from_nystrom(&m).unwrap())
+}
+
+fn run_load(engine: &Engine, x: &Mat, clients: usize, reqs: usize) -> (f64, Duration, Duration) {
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let x = &x;
+            let engine = &engine;
+            s.spawn(move || {
+                let mut rng = Pcg64::new(c as u64);
+                for _ in 0..reqs {
+                    let i = rng.below(x.rows());
+                    let _ = engine.predict(x.row(i)).unwrap();
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+    let total = clients * reqs;
+    let thr = total as f64 / wall.as_secs_f64();
+    let p50 = engine.stats().latency.percentile(50.0);
+    let p99 = engine.stats().latency.percentile(99.0);
+    (thr, p50, p99)
+}
+
+fn main() {
+    let (x, sm) = model_at_artifact_shapes();
+    let artifact_dir = fastkrr::runtime::default_artifact_dir();
+    let have_artifacts = artifact_dir.join("manifest.json").exists();
+
+    section("engine throughput (8 clients × 400 reqs)");
+    for (name, backend) in [
+        ("native", Some(Backend::Native)),
+        (
+            "pjrt",
+            have_artifacts.then(|| Backend::Pjrt { artifact_dir: artifact_dir.clone() }),
+        ),
+    ] {
+        let Some(backend) = backend else {
+            println!("  {name}: skipped (no artifacts — run `make artifacts`)");
+            continue;
+        };
+        let engine = Engine::start(
+            sm.clone(),
+            EngineConfig {
+                backend,
+                batcher: BatcherConfig {
+                    max_wait: Duration::from_millis(1),
+                    ..Default::default()
+                },
+            },
+        )
+        .unwrap();
+        let (thr, p50, p99) = run_load(&engine, &x, 8, 400);
+        println!(
+            "  {name:<7} {thr:>9.0} req/s   p50 {p50:?}  p99 {p99:?}  mean batch {:.1}",
+            engine.stats().mean_batch_size()
+        );
+        engine.shutdown();
+    }
+
+    section("latency vs offered concurrency (native backend)");
+    for clients in [1usize, 2, 4, 8, 16] {
+        let engine = Engine::start(
+            sm.clone(),
+            EngineConfig {
+                backend: Backend::Native,
+                batcher: BatcherConfig {
+                    max_wait: Duration::from_millis(1),
+                    ..Default::default()
+                },
+            },
+        )
+        .unwrap();
+        let (thr, p50, p99) = run_load(&engine, &x, clients, 200);
+        println!(
+            "  clients={clients:<3} {thr:>9.0} req/s   p50 {p50:?}  p99 {p99:?}  mean batch {:.1}",
+            engine.stats().mean_batch_size()
+        );
+        engine.shutdown();
+    }
+
+    section("batcher policy (pure, no I/O)");
+    let batcher = Batcher::new(&BatcherConfig::default()).unwrap();
+    for queued in [1usize, 3, 8, 17, 32, 100] {
+        let plans = batcher.drain_plan(queued);
+        let exec_slots: usize = plans.iter().map(|p| p.compiled).sum();
+        let eff = queued as f64 / exec_slots as f64;
+        println!(
+            "  queued={queued:<4} plans={:<2} slots={exec_slots:<4} efficiency={eff:.2}",
+            plans.len()
+        );
+    }
+
+    if have_artifacts {
+        section("raw PJRT execute cost per compiled batch (amortization)");
+        let rt = fastkrr::runtime::Runtime::load_subset(
+            &artifact_dir,
+            &["predict_b1_d8_p64", "predict_b8_d8_p64", "predict_b32_d8_p64"],
+        )
+        .unwrap();
+        let mut rng = Pcg64::new(7);
+        let lm: Vec<f32> = (0..64 * 8).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+        for (b, name) in [(1usize, "predict_b1_d8_p64"), (8, "predict_b8_d8_p64"), (32, "predict_b32_d8_p64")] {
+            let xb: Vec<f32> = (0..b * 8).map(|_| rng.normal() as f32).collect();
+            let iters = 200;
+            let t0 = Instant::now();
+            for _ in 0..iters {
+                let _ = rt
+                    .execute(name, &[xb.clone(), lm.clone(), v.clone()])
+                    .unwrap();
+            }
+            let per = t0.elapsed() / iters;
+            println!(
+                "  b={b:<3} {per:?}/exec  {:.1} µs/point",
+                per.as_secs_f64() * 1e6 / b as f64
+            );
+        }
+    }
+}

@@ -1,0 +1,86 @@
+//! Regenerates **Table 1** of the paper: per dataset × kernel, the
+//! effective dimensionality d_eff, maximal degrees of freedom d_mof, and
+//! the risk ratio R(f̂_L)/R(f̂_K) at p = {1,2}·d_eff with
+//! approximate-ridge-leverage column sampling.
+//!
+//! Run: `cargo bench --bench bench_table1`
+//! Full paper-sized run: `FASTKRR_BENCH_SCALE=1.0 cargo bench --bench bench_table1`
+//! (scale 1.0 takes minutes: exact leverage/risk is O(n³) at n=2000).
+
+use fastkrr::experiments::{run_table1, table1};
+use fastkrr::metrics::bench::{bench_scale, section};
+
+/// Paper's Table 1 reference values: (kernel, dataset, d_eff, d_mof, ratio).
+const PAPER: &[(&str, &str, f64, f64, f64)] = &[
+    ("Bern", "Synth", 24.0, 500.0, 1.01),
+    ("Linear", "Gas2", 126.0, 1244.0, 1.10),
+    ("Linear", "Gas3", 125.0, 1586.0, 1.09),
+    ("Linear", "Pum-32fm", 31.0, 2000.0, 0.99),
+    ("Linear", "Pum-32fh", 31.0, 2000.0, 0.99),
+    ("Linear", "Pum-32nh", 32.0, 2000.0, 0.99),
+    ("RBF", "Gas2", 1135.0, 1244.0, 1.56),
+    ("RBF", "Gas3", 1450.0, 1586.0, 1.50),
+    ("RBF", "Pum-32fm", 142.0, 1897.0, 1.00),
+    ("RBF", "Pum-32fh", 747.0, 1989.0, 1.00),
+    ("RBF", "Pum-32nh", 1337.0, 1997.0, 0.99),
+];
+
+fn main() {
+    let scale = bench_scale(0.25);
+    let trials = std::env::var("FASTKRR_BENCH_TRIALS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3);
+    section(&format!("Table 1 reproduction (scale={scale}, trials={trials})"));
+    let t0 = std::time::Instant::now();
+    let rows = run_table1(scale, trials, 42).expect("table1");
+    println!("{}", table1::render(&rows));
+    println!("generated in {:?}", t0.elapsed());
+
+    section("paper values (absolute numbers differ on surrogates; compare SHAPE)");
+    println!(
+        "{:<10} {:<14} {:>7} {:>7} {:>6}",
+        "kernel", "dataset", "d_eff", "d_mof", "ratio"
+    );
+    for (k, d, de, dm, r) in PAPER {
+        println!("{k:<10} {d:<14} {de:>7.0} {dm:>7.0} {r:>6.2}");
+    }
+
+    section("shape checks");
+    let mut ok = true;
+    for row in &rows {
+        // Universal shape properties from the paper.
+        let deff_ll_dmof = row.d_eff <= row.d_mof + 1e-9;
+        let sane_ratio = row.risk_ratio > 0.7 && row.risk_ratio < 3.0;
+        println!(
+            "  {:<8} {:<14} d_eff≤d_mof: {}  ratio∈(0.7,3): {} ({:.2})",
+            row.kernel, row.dataset, deff_ll_dmof, sane_ratio, row.risk_ratio
+        );
+        ok &= deff_ll_dmof && sane_ratio;
+    }
+    // The paper's key contrasts.
+    let linear_rows: Vec<_> = rows.iter().filter(|r| r.kernel == "Linear").collect();
+    for r in &linear_rows {
+        let contrast = r.d_eff < 0.5 * r.d_mof;
+        println!(
+            "  linear {:<14} d_eff ≪ d_mof: {} ({:.0} vs {:.0})",
+            r.dataset, contrast, r.d_eff, r.d_mof
+        );
+        ok &= contrast;
+    }
+    let gas_rbf: Vec<_> = rows
+        .iter()
+        .filter(|r| r.kernel == "RBF" && r.dataset.starts_with("gas"))
+        .collect();
+    for r in &gas_rbf {
+        // Unit-bandwidth RBF on 128-dim data: d_eff approaches n (hard case).
+        let hard = r.d_eff > 0.5 * r.n as f64;
+        println!(
+            "  gas rbf {:<12} d_eff≈n: {} ({:.0} of {})",
+            r.dataset, hard, r.d_eff, r.n
+        );
+        ok &= hard;
+    }
+    println!("\nshape agreement with the paper: {}", if ok { "PASS" } else { "FAIL" });
+    std::process::exit(if ok { 0 } else { 1 });
+}

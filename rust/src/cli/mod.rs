@@ -1,0 +1,187 @@
+//! Command-line interface (hand-rolled — no clap offline).
+//!
+//! ```text
+//! fastkrr train     --data <csv>|--synth <name> [--config <toml>] [...]
+//! fastkrr predict   --data <csv> --remote <addr> | (native model opts)
+//! fastkrr serve     [--config <toml>] [--addr host:port] [--backend pjrt|native]
+//! fastkrr leverage  --synth <name> [--lambda λ] [--exact|--approx]
+//! fastkrr experiment table1|figure1|dnc [--scale s] [--trials t]
+//! fastkrr datagen   --synth <name> --out <csv>
+//! ```
+
+use crate::util::{Error, Result};
+use std::collections::BTreeMap;
+
+/// Parsed command line: subcommand + flags.
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub command: String,
+    pub positional: Vec<String>,
+    flags: BTreeMap<String, String>,
+    switches: Vec<String>,
+}
+
+/// Boolean switches (flags that never take a value) — needed to
+/// disambiguate `--two-pass table1` from `--p 64`.
+const SWITCHES: &[&str] = &["two-pass", "approx", "exact", "verbose", "out-metrics"];
+
+impl Args {
+    /// Parse `argv[1..]`. `--key value` for valued flags; the known
+    /// [`SWITCHES`] are boolean and never consume the next token.
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I) -> Result<Self> {
+        let mut it = argv.into_iter().peekable();
+        let command = it
+            .next()
+            .ok_or_else(|| Error::invalid("missing subcommand; try 'fastkrr help'"))?;
+        let mut flags = BTreeMap::new();
+        let mut switches = Vec::new();
+        let mut positional = Vec::new();
+        while let Some(tok) = it.next() {
+            if let Some(name) = tok.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err(Error::invalid("bare '--'"));
+                }
+                if SWITCHES.contains(&name) {
+                    switches.push(name.to_string());
+                    continue;
+                }
+                // A value follows if it isn't another flag.
+                match it.peek() {
+                    Some(next) if !next.starts_with("--") => {
+                        flags.insert(name.to_string(), it.next().unwrap());
+                    }
+                    _ => switches.push(name.to_string()),
+                }
+            } else {
+                positional.push(tok);
+            }
+        }
+        Ok(Self { command, positional, flags, switches })
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.switches.iter().any(|s| s == name) || self.flags.contains_key(name)
+    }
+
+    pub fn flag_f64(&self, name: &str) -> Result<Option<f64>> {
+        self.flag(name)
+            .map(|s| {
+                s.parse::<f64>()
+                    .map_err(|_| Error::invalid(format!("--{name}: bad number '{s}'")))
+            })
+            .transpose()
+    }
+
+    pub fn flag_usize(&self, name: &str) -> Result<Option<usize>> {
+        self.flag(name)
+            .map(|s| {
+                s.parse::<usize>()
+                    .map_err(|_| Error::invalid(format!("--{name}: bad integer '{s}'")))
+            })
+            .transpose()
+    }
+
+    pub fn flag_u64(&self, name: &str) -> Result<Option<u64>> {
+        self.flag(name)
+            .map(|s| {
+                s.parse::<u64>()
+                    .map_err(|_| Error::invalid(format!("--{name}: bad integer '{s}'")))
+            })
+            .transpose()
+    }
+}
+
+/// Resolve a `--synth` name to a dataset.
+pub fn synth_dataset(name: &str, n: Option<usize>, seed: u64) -> Result<crate::data::Dataset> {
+    use crate::data::{gas_surrogate, pumadyn_surrogate, synth_bernoulli};
+    use crate::data::{GasBatch, PumadynVariant};
+    match name {
+        "bernoulli" | "synth" => Ok(synth_bernoulli(n.unwrap_or(500), 2, 0.1, seed)),
+        "pumadyn-32fm" => Ok(pumadyn_surrogate(PumadynVariant::Fm, n.unwrap_or(2000), seed)),
+        "pumadyn-32fh" => Ok(pumadyn_surrogate(PumadynVariant::Fh, n.unwrap_or(2000), seed)),
+        "pumadyn-32nh" => Ok(pumadyn_surrogate(PumadynVariant::Nh, n.unwrap_or(2000), seed)),
+        "gas2" => Ok(gas_surrogate(GasBatch::Gas2, seed)),
+        "gas3" => Ok(gas_surrogate(GasBatch::Gas3, seed)),
+        other => Err(Error::invalid(format!(
+            "unknown synth dataset '{other}' (bernoulli|pumadyn-32{{fm,fh,nh}}|gas2|gas3)"
+        ))),
+    }
+}
+
+pub const HELP: &str = "\
+fastkrr — fast randomized kernel ridge regression with statistical guarantees
+(El Alaoui & Mahoney 2014, three-layer Rust + JAX + Pallas reproduction)
+
+USAGE: fastkrr <command> [flags]
+
+COMMANDS:
+  train       fit a leverage-sampled Nyström KRR model
+                --data <csv> | --synth <name> [--n N]
+                --kernel rbf:σ|linear|bernoulli:β  --lambda λ  --p P
+                --strategy uniform|diagk|exact|approx[:ov]  --seed S
+                [--config <toml>] [--two-pass] [--save <model.fkrr>]
+  serve       start the prediction server
+                [--model <model.fkrr>]  (else trains a demo model)
+                [--config <toml>] [--addr host:port] [--backend pjrt|native]
+                [--synth <name>] [--p P]
+  predict     query a running server: --remote host:port --data <csv>
+  leverage    print λ-ridge leverage scores
+                --synth <name> [--n N] --lambda λ [--approx] [--p P]
+  experiment  regenerate paper results: table1|figure1|dnc
+                [--scale s] [--trials t] [--seed S]
+  datagen     write a synthetic dataset to CSV: --synth <name> --out <path>
+  help        this message
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn parses_flags_switches_positional() {
+        let a = parse(&[
+            "train", "--data", "x.csv", "--p", "64", "--two-pass", "table1",
+        ]);
+        assert_eq!(a.command, "train");
+        assert_eq!(a.flag("data"), Some("x.csv"));
+        assert_eq!(a.flag_usize("p").unwrap(), Some(64));
+        assert!(a.has("two-pass"));
+        assert!(!a.has("nope"));
+        assert_eq!(a.positional, vec!["table1"]);
+    }
+
+    #[test]
+    fn typed_flag_errors() {
+        let a = parse(&["x", "--p", "abc"]);
+        assert!(a.flag_usize("p").is_err());
+        let a = parse(&["x", "--lambda", "1e-3"]);
+        assert_eq!(a.flag_f64("lambda").unwrap(), Some(1e-3));
+    }
+
+    #[test]
+    fn missing_subcommand() {
+        assert!(Args::parse(Vec::<String>::new()).is_err());
+    }
+
+    #[test]
+    fn switch_at_end() {
+        let a = parse(&["serve", "--verbose"]);
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn synth_names() {
+        assert!(synth_dataset("bernoulli", Some(50), 1).is_ok());
+        assert!(synth_dataset("pumadyn-32nh", Some(50), 1).is_ok());
+        assert!(synth_dataset("gas2", None, 1).is_ok());
+        assert!(synth_dataset("wat", None, 1).is_err());
+    }
+}

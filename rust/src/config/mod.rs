@@ -1,0 +1,204 @@
+//! Configuration: a TOML-subset parser plus typed config structs for the
+//! CLI's `train`, `serve`, and `experiment` subcommands.
+//!
+//! Supported TOML subset (all the framework needs): `[section]` headers,
+//! `key = value` with string/float/int/bool/arrays-of-numbers values, `#`
+//! comments. Written from scratch — no serde in this environment.
+
+mod toml;
+
+pub use toml::{TomlDoc, TomlValue};
+
+use crate::kernel::KernelKind;
+use crate::sketch::SketchStrategy;
+use crate::util::{Error, Result};
+use std::path::Path;
+
+/// Training configuration (`[train]` section).
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    pub kernel: KernelKind,
+    pub lambda: f64,
+    pub p: usize,
+    pub strategy: SketchStrategy,
+    pub epsilon: f64,
+    pub p0: Option<usize>,
+    pub seed: u64,
+    pub standardize: bool,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        Self {
+            kernel: KernelKind::Rbf { bandwidth: 1.0 },
+            lambda: 1e-3,
+            p: 64,
+            strategy: SketchStrategy::default(),
+            epsilon: 0.5,
+            p0: None,
+            seed: 0,
+            standardize: true,
+        }
+    }
+}
+
+/// Serving configuration (`[serve]` section).
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub addr: String,
+    pub max_wait_ms: u64,
+    pub queue_cap: usize,
+    /// `pjrt` or `native`.
+    pub backend: String,
+    pub artifact_dir: Option<String>,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            addr: "127.0.0.1:7878".into(),
+            max_wait_ms: 2,
+            queue_cap: 1024,
+            backend: "pjrt".into(),
+            artifact_dir: None,
+        }
+    }
+}
+
+/// Top-level app config.
+#[derive(Debug, Clone, Default)]
+pub struct AppConfig {
+    pub train: TrainConfig,
+    pub serve: ServeConfig,
+}
+
+impl AppConfig {
+    /// Load from a TOML file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::io(format!("read {}: {e}", path.display())))?;
+        Self::parse(&text)
+    }
+
+    /// Parse from TOML text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let doc = TomlDoc::parse(text)?;
+        let mut cfg = AppConfig::default();
+        if let Some(t) = doc.section("train") {
+            if let Some(v) = t.get("kernel") {
+                cfg.train.kernel = KernelKind::parse(v.as_str()?)?;
+            }
+            if let Some(v) = t.get("lambda") {
+                cfg.train.lambda = v.as_f64()?;
+            }
+            if let Some(v) = t.get("p") {
+                cfg.train.p = v.as_usize()?;
+            }
+            if let Some(v) = t.get("strategy") {
+                cfg.train.strategy = SketchStrategy::parse(v.as_str()?)?;
+            }
+            if let Some(v) = t.get("epsilon") {
+                cfg.train.epsilon = v.as_f64()?;
+            }
+            if let Some(v) = t.get("p0") {
+                cfg.train.p0 = Some(v.as_usize()?);
+            }
+            if let Some(v) = t.get("seed") {
+                cfg.train.seed = v.as_usize()? as u64;
+            }
+            if let Some(v) = t.get("standardize") {
+                cfg.train.standardize = v.as_bool()?;
+            }
+        }
+        if let Some(s) = doc.section("serve") {
+            if let Some(v) = s.get("addr") {
+                cfg.serve.addr = v.as_str()?.to_string();
+            }
+            if let Some(v) = s.get("max_wait_ms") {
+                cfg.serve.max_wait_ms = v.as_usize()? as u64;
+            }
+            if let Some(v) = s.get("queue_cap") {
+                cfg.serve.queue_cap = v.as_usize()?;
+            }
+            if let Some(v) = s.get("backend") {
+                let b = v.as_str()?;
+                if b != "pjrt" && b != "native" {
+                    return Err(Error::invalid(format!("unknown backend '{b}'")));
+                }
+                cfg.serve.backend = b.to_string();
+            }
+            if let Some(v) = s.get("artifact_dir") {
+                cfg.serve.artifact_dir = Some(v.as_str()?.to_string());
+            }
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.train.lambda <= 0.0 {
+            return Err(Error::invalid("train.lambda must be > 0"));
+        }
+        if self.train.p == 0 {
+            return Err(Error::invalid("train.p must be >= 1"));
+        }
+        if !(0.0..=1.0).contains(&self.train.epsilon) || self.train.epsilon == 0.0 {
+            return Err(Error::invalid("train.epsilon must be in (0, 1]"));
+        }
+        if self.serve.queue_cap == 0 {
+            return Err(Error::invalid("serve.queue_cap must be >= 1"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# fastkrr config
+[train]
+kernel = "rbf:1.5"
+lambda = 0.001
+p = 128
+strategy = "approx-leverage:2.0"
+epsilon = 0.5
+seed = 42
+standardize = true
+
+[serve]
+addr = "127.0.0.1:9999"
+max_wait_ms = 5
+queue_cap = 256
+backend = "native"
+"#;
+
+    #[test]
+    fn parse_full_config() {
+        let cfg = AppConfig::parse(SAMPLE).unwrap();
+        assert_eq!(cfg.train.kernel, KernelKind::Rbf { bandwidth: 1.5 });
+        assert_eq!(cfg.train.lambda, 0.001);
+        assert_eq!(cfg.train.p, 128);
+        assert_eq!(cfg.train.seed, 42);
+        assert_eq!(cfg.serve.addr, "127.0.0.1:9999");
+        assert_eq!(cfg.serve.backend, "native");
+        assert_eq!(cfg.serve.queue_cap, 256);
+    }
+
+    #[test]
+    fn defaults_when_sections_missing() {
+        let cfg = AppConfig::parse("").unwrap();
+        assert_eq!(cfg.train.p, 64);
+        assert_eq!(cfg.serve.backend, "pjrt");
+    }
+
+    #[test]
+    fn rejects_invalid_values() {
+        assert!(AppConfig::parse("[train]\nlambda = 0.0\n").is_err());
+        assert!(AppConfig::parse("[train]\np = 0\n").is_err());
+        assert!(AppConfig::parse("[train]\nkernel = \"bogus\"\n").is_err());
+        assert!(AppConfig::parse("[serve]\nbackend = \"gpu\"\n").is_err());
+        assert!(AppConfig::parse("[train]\nepsilon = 2.0\n").is_err());
+    }
+}

@@ -1,0 +1,228 @@
+//! Minimal TOML-subset parser: sections, scalar values, numeric arrays.
+
+use crate::util::{Error, Result};
+use std::collections::BTreeMap;
+
+/// A parsed TOML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Num(f64),
+    Bool(bool),
+    NumArray(Vec<f64>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            _ => Err(Error::invalid("expected string value")),
+        }
+    }
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Num(x) => Ok(*x),
+            _ => Err(Error::invalid("expected numeric value")),
+        }
+    }
+    pub fn as_usize(&self) -> Result<usize> {
+        let x = self.as_f64()?;
+        if x < 0.0 || x.fract() != 0.0 {
+            return Err(Error::invalid(format!("expected non-negative integer, got {x}")));
+        }
+        Ok(x as usize)
+    }
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            _ => Err(Error::invalid("expected boolean value")),
+        }
+    }
+    pub fn as_num_array(&self) -> Result<&[f64]> {
+        match self {
+            TomlValue::NumArray(v) => Ok(v),
+            _ => Err(Error::invalid("expected numeric array")),
+        }
+    }
+}
+
+/// One `[section]` of key/value pairs.
+#[derive(Debug, Clone, Default)]
+pub struct TomlSection {
+    values: BTreeMap<String, TomlValue>,
+}
+
+impl TomlSection {
+    pub fn get(&self, key: &str) -> Option<&TomlValue> {
+        self.values.get(key)
+    }
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|s| s.as_str())
+    }
+}
+
+/// A parsed document: named sections plus a root section for top-level keys.
+#[derive(Debug, Clone, Default)]
+pub struct TomlDoc {
+    root: TomlSection,
+    sections: BTreeMap<String, TomlSection>,
+}
+
+impl TomlDoc {
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut doc = TomlDoc::default();
+        let mut current: Option<String> = None;
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if line.starts_with('[') {
+                if !line.ends_with(']') {
+                    return Err(Error::invalid(format!(
+                        "line {}: malformed section header",
+                        lineno + 1
+                    )));
+                }
+                let name = line[1..line.len() - 1].trim().to_string();
+                if name.is_empty() {
+                    return Err(Error::invalid(format!("line {}: empty section", lineno + 1)));
+                }
+                doc.sections.entry(name.clone()).or_default();
+                current = Some(name);
+                continue;
+            }
+            let eq = line.find('=').ok_or_else(|| {
+                Error::invalid(format!("line {}: expected key = value", lineno + 1))
+            })?;
+            let key = line[..eq].trim().to_string();
+            let vtext = line[eq + 1..].trim();
+            if key.is_empty() {
+                return Err(Error::invalid(format!("line {}: empty key", lineno + 1)));
+            }
+            let value = parse_value(vtext)
+                .map_err(|e| Error::invalid(format!("line {}: {}", lineno + 1, e.message())))?;
+            let section = match &current {
+                Some(name) => doc.sections.get_mut(name).unwrap(),
+                None => &mut doc.root,
+            };
+            section.values.insert(key, value);
+        }
+        Ok(doc)
+    }
+
+    pub fn section(&self, name: &str) -> Option<&TomlSection> {
+        self.sections.get(name)
+    }
+
+    pub fn root(&self) -> &TomlSection {
+        &self.root
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // A `#` outside quotes starts a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(t: &str) -> Result<TomlValue> {
+    if t.is_empty() {
+        return Err(Error::invalid("empty value"));
+    }
+    if t == "true" {
+        return Ok(TomlValue::Bool(true));
+    }
+    if t == "false" {
+        return Ok(TomlValue::Bool(false));
+    }
+    if t.starts_with('"') {
+        if t.len() < 2 || !t.ends_with('"') {
+            return Err(Error::invalid("unterminated string"));
+        }
+        return Ok(TomlValue::Str(t[1..t.len() - 1].to_string()));
+    }
+    if t.starts_with('[') {
+        if !t.ends_with(']') {
+            return Err(Error::invalid("unterminated array"));
+        }
+        let inner = t[1..t.len() - 1].trim();
+        if inner.is_empty() {
+            return Ok(TomlValue::NumArray(vec![]));
+        }
+        let nums: Result<Vec<f64>> = inner
+            .split(',')
+            .map(|s| {
+                s.trim()
+                    .parse::<f64>()
+                    .map_err(|_| Error::invalid(format!("bad array element '{s}'")))
+            })
+            .collect();
+        return Ok(TomlValue::NumArray(nums?));
+    }
+    t.parse::<f64>()
+        .map(TomlValue::Num)
+        .map_err(|_| Error::invalid(format!("cannot parse value '{t}'")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let doc = TomlDoc::parse(
+            "top = 1\n[a]\nx = \"hi\" # comment\ny = 2.5\nz = true\nw = [1, 2, 3]\n[b]\n",
+        )
+        .unwrap();
+        assert_eq!(doc.root().get("top").unwrap().as_f64().unwrap(), 1.0);
+        let a = doc.section("a").unwrap();
+        assert_eq!(a.get("x").unwrap().as_str().unwrap(), "hi");
+        assert_eq!(a.get("y").unwrap().as_f64().unwrap(), 2.5);
+        assert!(a.get("z").unwrap().as_bool().unwrap());
+        assert_eq!(a.get("w").unwrap().as_num_array().unwrap(), &[1.0, 2.0, 3.0]);
+        assert!(doc.section("b").is_some());
+        assert!(doc.section("c").is_none());
+        assert_eq!(a.keys().count(), 4);
+    }
+
+    #[test]
+    fn hash_inside_string_not_comment() {
+        let doc = TomlDoc::parse("[s]\nv = \"a#b\"\n").unwrap();
+        assert_eq!(
+            doc.section("s").unwrap().get("v").unwrap().as_str().unwrap(),
+            "a#b"
+        );
+    }
+
+    #[test]
+    fn error_cases() {
+        assert!(TomlDoc::parse("[unclosed\n").is_err());
+        assert!(TomlDoc::parse("[]\n").is_err());
+        assert!(TomlDoc::parse("novalue\n").is_err());
+        assert!(TomlDoc::parse("k = \n").is_err());
+        assert!(TomlDoc::parse("k = [1, x]\n").is_err());
+        assert!(TomlDoc::parse("k = \"unterminated\n").is_err());
+        assert!(TomlDoc::parse("k = notanumber\n").is_err());
+        assert!(TomlDoc::parse(" = 3\n").is_err());
+    }
+
+    #[test]
+    fn type_mismatches() {
+        let doc = TomlDoc::parse("k = 1.5\ns = \"x\"\n").unwrap();
+        let k = doc.root().get("k").unwrap();
+        assert!(k.as_str().is_err());
+        assert!(k.as_bool().is_err());
+        assert!(k.as_usize().is_err()); // 1.5 not integer
+        let s = doc.root().get("s").unwrap();
+        assert!(s.as_f64().is_err());
+        assert!(s.as_num_array().is_err());
+    }
+}

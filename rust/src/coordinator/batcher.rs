@@ -1,0 +1,198 @@
+//! Dynamic batching policy.
+//!
+//! PJRT executables are fixed-shape, so the serving engine compiles a small
+//! ladder of batch sizes (1, 8, 32, …) and the batcher's job is to map a
+//! queue of single-point requests onto that ladder: wait up to `max_wait`
+//! for the queue to fill, then pick the smallest compiled batch ≥ the queue
+//! depth (splitting oversized queues into full batches first), zero-pad the
+//! remainder, and discard padded outputs.
+//!
+//! The policy lives in a pure, synchronously-testable struct ([`Batcher`]);
+//! the engine thread drives it with real time and channels.
+
+use crate::util::{Error, Result};
+
+/// Batching policy knobs.
+#[derive(Debug, Clone)]
+pub struct BatcherConfig {
+    /// Compiled batch sizes available, ascending (from the manifest).
+    pub batch_sizes: Vec<usize>,
+    /// Max time to hold the first request of a batch.
+    pub max_wait: std::time::Duration,
+    /// Bound on the request queue before callers see backpressure.
+    pub queue_cap: usize,
+}
+
+impl Default for BatcherConfig {
+    fn default() -> Self {
+        Self {
+            batch_sizes: vec![1, 8, 32],
+            max_wait: std::time::Duration::from_millis(2),
+            queue_cap: 1024,
+        }
+    }
+}
+
+impl BatcherConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.batch_sizes.is_empty() {
+            return Err(Error::invalid("no compiled batch sizes"));
+        }
+        if self.batch_sizes.windows(2).any(|w| w[0] >= w[1]) {
+            return Err(Error::invalid("batch sizes must be strictly ascending"));
+        }
+        if self.batch_sizes[0] == 0 {
+            return Err(Error::invalid("batch size 0"));
+        }
+        if self.queue_cap == 0 {
+            return Err(Error::invalid("queue_cap must be >= 1"));
+        }
+        Ok(())
+    }
+}
+
+/// The plan for one execution: which compiled size to run and how many of
+/// its slots hold real requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BatchPlan {
+    /// Compiled batch size to execute.
+    pub compiled: usize,
+    /// Number of real requests (≤ compiled); the rest is padding.
+    pub real: usize,
+}
+
+impl BatchPlan {
+    /// Fraction of the executed batch that is useful work.
+    pub fn efficiency(&self) -> f64 {
+        self.real as f64 / self.compiled as f64
+    }
+}
+
+/// Pure batching policy over a ladder of compiled sizes.
+#[derive(Debug, Clone)]
+pub struct Batcher {
+    sizes: Vec<usize>,
+}
+
+impl Batcher {
+    pub fn new(cfg: &BatcherConfig) -> Result<Self> {
+        cfg.validate()?;
+        Ok(Self { sizes: cfg.batch_sizes.clone() })
+    }
+
+    /// Largest compiled size.
+    pub fn max_batch(&self) -> usize {
+        *self.sizes.last().unwrap()
+    }
+
+    /// Plan for `queued` waiting requests: the smallest compiled size that
+    /// covers them, or a full max-size batch when the queue overflows it.
+    pub fn plan(&self, queued: usize) -> Option<BatchPlan> {
+        if queued == 0 {
+            return None;
+        }
+        let max = self.max_batch();
+        if queued >= max {
+            return Some(BatchPlan { compiled: max, real: max });
+        }
+        let compiled = *self
+            .sizes
+            .iter()
+            .find(|&&s| s >= queued)
+            .expect("max covers all smaller");
+        Some(BatchPlan { compiled, real: queued })
+    }
+
+    /// Split a queue of length `queued` into a sequence of plans that
+    /// drains it completely (full batches first, then one padded tail).
+    pub fn drain_plan(&self, queued: usize) -> Vec<BatchPlan> {
+        let mut plans = Vec::new();
+        let mut left = queued;
+        let max = self.max_batch();
+        while left >= max {
+            plans.push(BatchPlan { compiled: max, real: max });
+            left -= max;
+        }
+        if left > 0 {
+            plans.push(self.plan(left).unwrap());
+        }
+        plans
+    }
+
+    /// Pad a flat row-major batch of `real` points (each `dim` wide) up to
+    /// `compiled` rows with zeros.
+    pub fn pad_batch(flat: &[f32], real: usize, compiled: usize, dim: usize) -> Vec<f32> {
+        debug_assert_eq!(flat.len(), real * dim);
+        debug_assert!(real <= compiled);
+        let mut out = Vec::with_capacity(compiled * dim);
+        out.extend_from_slice(flat);
+        out.resize(compiled * dim, 0.0);
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn batcher() -> Batcher {
+        Batcher::new(&BatcherConfig::default()).unwrap()
+    }
+
+    #[test]
+    fn plan_picks_smallest_covering_size() {
+        let b = batcher();
+        assert_eq!(b.plan(0), None);
+        assert_eq!(b.plan(1), Some(BatchPlan { compiled: 1, real: 1 }));
+        assert_eq!(b.plan(2), Some(BatchPlan { compiled: 8, real: 2 }));
+        assert_eq!(b.plan(8), Some(BatchPlan { compiled: 8, real: 8 }));
+        assert_eq!(b.plan(9), Some(BatchPlan { compiled: 32, real: 9 }));
+        assert_eq!(b.plan(32), Some(BatchPlan { compiled: 32, real: 32 }));
+        assert_eq!(b.plan(100), Some(BatchPlan { compiled: 32, real: 32 }));
+    }
+
+    #[test]
+    fn drain_plan_covers_queue_exactly() {
+        let b = batcher();
+        let plans = b.drain_plan(77);
+        let total: usize = plans.iter().map(|p| p.real).sum();
+        assert_eq!(total, 77);
+        // 2 full 32s then a 13 → 32.
+        assert_eq!(plans.len(), 3);
+        assert_eq!(plans[0], BatchPlan { compiled: 32, real: 32 });
+        assert_eq!(plans[2].real, 13);
+        assert_eq!(plans[2].compiled, 32);
+        assert!(b.drain_plan(0).is_empty());
+    }
+
+    #[test]
+    fn efficiency_metric() {
+        assert_eq!(BatchPlan { compiled: 32, real: 8 }.efficiency(), 0.25);
+        assert_eq!(BatchPlan { compiled: 8, real: 8 }.efficiency(), 1.0);
+    }
+
+    #[test]
+    fn pad_batch_zero_fills() {
+        let flat = vec![1.0f32, 2.0, 3.0, 4.0]; // 2 points, dim 2
+        let padded = Batcher::pad_batch(&flat, 2, 4, 2);
+        assert_eq!(padded.len(), 8);
+        assert_eq!(&padded[..4], &flat[..]);
+        assert!(padded[4..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn config_validation() {
+        let mut cfg = BatcherConfig::default();
+        cfg.batch_sizes = vec![];
+        assert!(Batcher::new(&cfg).is_err());
+        cfg.batch_sizes = vec![8, 8];
+        assert!(Batcher::new(&cfg).is_err());
+        cfg.batch_sizes = vec![8, 4];
+        assert!(Batcher::new(&cfg).is_err());
+        cfg.batch_sizes = vec![0, 4];
+        assert!(Batcher::new(&cfg).is_err());
+        cfg.batch_sizes = vec![1, 4];
+        cfg.queue_cap = 0;
+        assert!(Batcher::new(&cfg).is_err());
+    }
+}

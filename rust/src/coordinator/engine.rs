@@ -1,0 +1,507 @@
+//! The serving engine: a dedicated executor thread that owns the PJRT
+//! [`Runtime`] (whose handles are not `Send`) and drains a bounded request
+//! queue through the dynamic [`Batcher`].
+//!
+//! Request flow:
+//!   caller → `Engine::predict` → bounded mpsc queue → executor thread
+//!   (collect up to `max_wait` / batch ladder) → PJRT `predict_b*` artifact
+//!   (or the native fallback) → per-request oneshot reply.
+//!
+//! Backpressure: the queue is a `sync_channel(queue_cap)`; when full,
+//! `predict` returns `ErrorKind::Runtime` ("queue full") instead of
+//! blocking forever — callers decide whether to retry.
+
+use super::batcher::{Batcher, BatcherConfig};
+use super::ServingModel;
+use crate::linalg::Mat;
+use crate::metrics::{Counter, LatencyHistogram};
+use crate::runtime::Runtime;
+use crate::util::{Error, Result};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Which compute backend executes batches.
+#[derive(Debug, Clone)]
+pub enum Backend {
+    /// Load `predict_b*` artifacts from this directory and run via PJRT.
+    Pjrt { artifact_dir: PathBuf },
+    /// Pure-Rust kernel evaluation (no artifacts needed).
+    Native,
+}
+
+/// Engine configuration.
+#[derive(Debug, Clone)]
+pub struct EngineConfig {
+    pub backend: Backend,
+    pub batcher: BatcherConfig,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self {
+            backend: Backend::Pjrt {
+                artifact_dir: crate::runtime::default_artifact_dir(),
+            },
+            batcher: BatcherConfig::default(),
+        }
+    }
+}
+
+/// Live counters exposed by the engine.
+#[derive(Debug, Default)]
+pub struct EngineStats {
+    pub requests: Counter,
+    pub batches: Counter,
+    pub padded_slots: Counter,
+    pub errors: Counter,
+    pub latency: LatencyHistogram,
+}
+
+impl EngineStats {
+    /// Mean real-requests-per-executed-batch.
+    pub fn mean_batch_size(&self) -> f64 {
+        let b = self.batches.get();
+        if b == 0 {
+            return 0.0;
+        }
+        self.requests.get() as f64 / b as f64
+    }
+}
+
+struct Job {
+    x: Vec<f64>,
+    enqueued: Instant,
+    reply: SyncSender<Result<f64>>,
+}
+
+/// Handle to a running serving engine.
+pub struct Engine {
+    tx: Option<SyncSender<Job>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    stats: Arc<EngineStats>,
+    dim: usize,
+    ready: Arc<AtomicBool>,
+}
+
+impl Engine {
+    /// Start the engine. Fails fast (before returning) if the backend
+    /// cannot initialize — e.g. missing artifacts or a model/artifact shape
+    /// mismatch.
+    pub fn start(model: ServingModel, cfg: EngineConfig) -> Result<Self> {
+        cfg.batcher.validate()?;
+        let stats = Arc::new(EngineStats::default());
+        let (tx, rx) = sync_channel::<Job>(cfg.batcher.queue_cap);
+        let dim = model.d();
+        let ready = Arc::new(AtomicBool::new(false));
+        let (init_tx, init_rx) = sync_channel::<Result<()>>(1);
+        let worker = {
+            let stats = stats.clone();
+            let ready = ready.clone();
+            std::thread::Builder::new()
+                .name("fastkrr-engine".into())
+                .spawn(move || {
+                    executor_main(model, cfg, rx, stats, ready, init_tx);
+                })
+                .map_err(|e| Error::runtime(format!("spawn engine: {e}")))?
+        };
+        // Wait for backend init so startup errors surface synchronously.
+        match init_rx.recv() {
+            Ok(Ok(())) => {}
+            Ok(Err(e)) => {
+                let _ = worker.join();
+                return Err(e);
+            }
+            Err(_) => {
+                let _ = worker.join();
+                return Err(Error::runtime("engine died during init"));
+            }
+        }
+        Ok(Self { tx: Some(tx), worker: Some(worker), stats, dim, ready })
+    }
+
+    /// Predict a single point (blocks until the batch containing it runs).
+    pub fn predict(&self, x: &[f64]) -> Result<f64> {
+        if x.len() != self.dim {
+            return Err(Error::invalid(format!(
+                "query dimension {} != model dimension {}",
+                x.len(),
+                self.dim
+            )));
+        }
+        let (reply_tx, reply_rx) = sync_channel(1);
+        let job = Job { x: x.to_vec(), enqueued: Instant::now(), reply: reply_tx };
+        let tx = self.tx.as_ref().ok_or_else(|| Error::runtime("engine stopped"))?;
+        tx.try_send(job).map_err(|e| match e {
+            std::sync::mpsc::TrySendError::Full(_) => {
+                Error::runtime("queue full (backpressure)")
+            }
+            std::sync::mpsc::TrySendError::Disconnected(_) => {
+                Error::runtime("engine stopped")
+            }
+        })?;
+        reply_rx
+            .recv()
+            .map_err(|_| Error::runtime("engine dropped request"))?
+    }
+
+    /// Convenience: predict many points (submitted concurrently so the
+    /// batcher can coalesce them).
+    pub fn predict_many(&self, xs: &Mat) -> Vec<Result<f64>> {
+        let n = xs.rows();
+        let mut out: Vec<Result<f64>> = Vec::with_capacity(n);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..n)
+                .map(|i| {
+                    let row = xs.row(i);
+                    s.spawn(move || self.predict(row))
+                })
+                .collect();
+            for h in handles {
+                out.push(h.join().unwrap());
+            }
+        });
+        out
+    }
+
+    /// Live stats.
+    pub fn stats(&self) -> &EngineStats {
+        &self.stats
+    }
+
+    /// Whether the backend initialized (always true after `start` returns).
+    pub fn ready(&self) -> bool {
+        self.ready.load(Ordering::Acquire)
+    }
+
+    /// Stop the executor and wait for it to drain.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.tx.take(); // close the queue
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+enum ExecBackend {
+    Pjrt {
+        rt: Runtime,
+        /// artifact name per compiled batch size, ascending.
+        names: Vec<(usize, String)>,
+        landmarks_f32: Vec<f32>,
+        v_f32: Vec<f32>,
+    },
+    Native {
+        model: ServingModel,
+    },
+}
+
+fn executor_main(
+    model: ServingModel,
+    cfg: EngineConfig,
+    rx: Receiver<Job>,
+    stats: Arc<EngineStats>,
+    ready: Arc<AtomicBool>,
+    init_tx: SyncSender<Result<()>>,
+) {
+    // ---- backend init (inside the thread: PJRT handles are !Send) -------
+    let (backend, batcher) = match init_backend(&model, &cfg) {
+        Ok(pair) => {
+            ready.store(true, Ordering::Release);
+            let _ = init_tx.send(Ok(()));
+            pair
+        }
+        Err(e) => {
+            let _ = init_tx.send(Err(e));
+            return;
+        }
+    };
+    let dim = model.d();
+    // ---- batch loop ------------------------------------------------------
+    loop {
+        // Block for the first job of the next batch.
+        let first = match rx.recv() {
+            Ok(j) => j,
+            Err(_) => return, // queue closed → shutdown
+        };
+        let mut jobs = vec![first];
+        let deadline = Instant::now() + cfg.batcher.max_wait;
+        while jobs.len() < batcher.max_batch() {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(j) => jobs.push(j),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        let plan = batcher.plan(jobs.len()).expect("non-empty");
+        debug_assert_eq!(plan.real, jobs.len());
+        // Flatten to f32 row-major.
+        let mut flat = Vec::with_capacity(jobs.len() * dim);
+        for j in &jobs {
+            flat.extend(j.x.iter().map(|&v| v as f32));
+        }
+        let padded = Batcher::pad_batch(&flat, plan.real, plan.compiled, dim);
+        let result = run_batch(&backend, plan.compiled, padded, dim);
+        stats.batches.inc();
+        stats.requests.add(plan.real as u64);
+        stats.padded_slots.add((plan.compiled - plan.real) as u64);
+        match result {
+            Ok(ys) => {
+                for (i, job) in jobs.into_iter().enumerate() {
+                    stats.latency.record(job.enqueued.elapsed());
+                    let _ = job.reply.send(Ok(ys[i] as f64));
+                }
+            }
+            Err(e) => {
+                stats.errors.inc();
+                for job in jobs {
+                    let _ = job
+                        .reply
+                        .send(Err(Error::runtime(format!("batch failed: {e}"))));
+                }
+            }
+        }
+    }
+}
+
+fn init_backend(
+    model: &ServingModel,
+    cfg: &EngineConfig,
+) -> Result<(ExecBackend, Batcher)> {
+    match &cfg.backend {
+        Backend::Native => {
+            let batcher = Batcher::new(&cfg.batcher)?;
+            Ok((ExecBackend::Native { model: model.clone() }, batcher))
+        }
+        Backend::Pjrt { artifact_dir } => {
+            let manifest =
+                crate::runtime::Manifest::load(&artifact_dir.join("manifest.json"))?;
+            // Pick the predict artifacts matching the model's (d, p, bw).
+            let mut names: Vec<(usize, String)> = Vec::new();
+            for spec in manifest.predict_batches() {
+                let d_ok = spec.d == Some(model.d());
+                let p_ok = spec.p == Some(model.p());
+                let bw_ok = spec
+                    .bandwidth
+                    .map(|b| (b - model.bandwidth).abs() < 1e-9)
+                    .unwrap_or(false);
+                if d_ok && p_ok && bw_ok {
+                    names.push((spec.batch.unwrap_or(1), spec.name.clone()));
+                }
+            }
+            if names.is_empty() {
+                return Err(Error::runtime(format!(
+                    "no predict artifact matches model (d={}, p={}, bw={}); \
+                     rebuild artifacts or use Backend::Native",
+                    model.d(),
+                    model.p(),
+                    model.bandwidth
+                )));
+            }
+            names.sort_by_key(|(b, _)| *b);
+            let name_refs: Vec<&str> = names.iter().map(|(_, n)| n.as_str()).collect();
+            let rt = Runtime::load_subset(artifact_dir, &name_refs)?;
+            let mut bcfg = cfg.batcher.clone();
+            bcfg.batch_sizes = names.iter().map(|(b, _)| *b).collect();
+            let batcher = Batcher::new(&bcfg)?;
+            Ok((
+                ExecBackend::Pjrt {
+                    rt,
+                    names,
+                    landmarks_f32: model.landmarks.to_f32(),
+                    v_f32: model.v.iter().map(|&x| x as f32).collect(),
+                },
+                batcher,
+            ))
+        }
+    }
+}
+
+fn run_batch(
+    backend: &ExecBackend,
+    compiled: usize,
+    padded: Vec<f32>,
+    dim: usize,
+) -> Result<Vec<f32>> {
+    match backend {
+        ExecBackend::Native { model } => {
+            let rows = padded.len() / dim;
+            let x = Mat::from_f32(rows, dim, &padded)?;
+            Ok(model.predict_native(&x).iter().map(|&v| v as f32).collect())
+        }
+        ExecBackend::Pjrt { rt, names, landmarks_f32, v_f32 } => {
+            let name = names
+                .iter()
+                .find(|(b, _)| *b == compiled)
+                .map(|(_, n)| n.as_str())
+                .ok_or_else(|| {
+                    Error::internal(format!("no artifact for batch {compiled}"))
+                })?;
+            rt.execute(
+                name,
+                &[padded, landmarks_f32.clone(), v_f32.clone()],
+            )
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::KernelKind;
+    use crate::krr::{NystromKrr, NystromKrrConfig};
+    use crate::rng::Pcg64;
+    use crate::sketch::SketchStrategy;
+
+    fn serving_model(n: usize, d: usize, p: usize) -> (Mat, ServingModel) {
+        let mut rng = Pcg64::new(9);
+        let x = Mat::from_fn(n, d, |_, _| rng.normal());
+        let y: Vec<f64> = (0..n)
+            .map(|i| (x.row(i).iter().sum::<f64>() * 0.3).sin())
+            .collect();
+        let cfg = NystromKrrConfig {
+            lambda: 1e-3,
+            p,
+            strategy: SketchStrategy::DiagK,
+            gamma: 0.0,
+            seed: 2,
+        };
+        let m =
+            NystromKrr::fit(&x, &y, KernelKind::Rbf { bandwidth: 1.0 }, &cfg).unwrap();
+        (x, ServingModel::from_nystrom(&m).unwrap())
+    }
+
+    #[test]
+    fn native_engine_serves_and_matches_direct() {
+        let (x, sm) = serving_model(50, 8, 16);
+        let want = sm.predict_native(&x);
+        let engine = Engine::start(
+            sm,
+            EngineConfig { backend: Backend::Native, batcher: BatcherConfig::default() },
+        )
+        .unwrap();
+        assert!(engine.ready());
+        for i in 0..x.rows() {
+            let got = engine.predict(x.row(i)).unwrap();
+            assert!((got - want[i]).abs() < 1e-5, "i={i}: {got} vs {}", want[i]);
+        }
+        assert_eq!(engine.stats().requests.get(), 50);
+        assert!(engine.stats().batches.get() >= 1);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn concurrent_requests_get_batched() {
+        let (x, sm) = serving_model(100, 8, 16);
+        let want = sm.predict_native(&x);
+        let mut bcfg = BatcherConfig::default();
+        bcfg.max_wait = std::time::Duration::from_millis(5);
+        let engine = Engine::start(
+            sm,
+            EngineConfig { backend: Backend::Native, batcher: bcfg },
+        )
+        .unwrap();
+        let got = engine.predict_many(&x);
+        for (i, r) in got.iter().enumerate() {
+            let v = r.as_ref().unwrap();
+            assert!((v - want[i]).abs() < 1e-5);
+        }
+        // Concurrency should produce multi-request batches.
+        assert!(
+            engine.stats().mean_batch_size() > 1.0,
+            "mean batch {}",
+            engine.stats().mean_batch_size()
+        );
+        engine.shutdown();
+    }
+
+    #[test]
+    fn dimension_mismatch_rejected() {
+        let (_, sm) = serving_model(30, 8, 8);
+        let engine = Engine::start(
+            sm,
+            EngineConfig { backend: Backend::Native, batcher: BatcherConfig::default() },
+        )
+        .unwrap();
+        assert!(engine.predict(&[0.0; 5]).is_err());
+        engine.shutdown();
+    }
+
+    #[test]
+    fn pjrt_backend_fails_fast_on_shape_mismatch() {
+        // Model p=16 ≠ artifact p=64 → start must error, not hang.
+        let (_, sm) = serving_model(30, 8, 16);
+        let dir = crate::runtime::default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let res = Engine::start(
+            sm,
+            EngineConfig {
+                backend: Backend::Pjrt { artifact_dir: dir },
+                batcher: BatcherConfig::default(),
+            },
+        );
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn pjrt_engine_matches_native() {
+        let dir = crate::runtime::default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        // Match the compiled shapes: d=8, p=64, bw=1.0.
+        let (x, sm) = serving_model(120, 8, 64);
+        let want = sm.predict_native(&x);
+        let engine = Engine::start(
+            sm,
+            EngineConfig {
+                backend: Backend::Pjrt { artifact_dir: dir },
+                batcher: BatcherConfig::default(),
+            },
+        )
+        .unwrap();
+        let got = engine.predict_many(&x);
+        for (i, r) in got.iter().enumerate() {
+            let v = r.as_ref().unwrap();
+            assert!(
+                (v - want[i]).abs() < 1e-3,
+                "i={i}: pjrt {v} vs native {}",
+                want[i]
+            );
+        }
+        engine.shutdown();
+    }
+
+    #[test]
+    fn shutdown_then_predict_errors() {
+        let (_, sm) = serving_model(20, 8, 8);
+        let engine = Engine::start(
+            sm,
+            EngineConfig { backend: Backend::Native, batcher: BatcherConfig::default() },
+        )
+        .unwrap();
+        let stats_requests = engine.stats().requests.get();
+        engine.shutdown();
+        assert_eq!(stats_requests, 0);
+    }
+}

@@ -1,0 +1,151 @@
+//! L3 coordinator: the serving engine (dynamic batcher + PJRT executor) and
+//! the two-pass leverage-sampled training pipeline.
+//!
+//! This is the systems half of the paper: §3.5's O(np²) algorithm becomes a
+//! staged [`pipeline::TrainPipeline`]; Theorem 3's leverage-sampled Nyström
+//! estimator becomes a deployable [`ServingModel`] behind an
+//! [`engine::Engine`] that batches concurrent prediction requests onto the
+//! fixed-shape AOT artifacts (Python never runs at request time).
+
+pub mod batcher;
+pub mod engine;
+pub mod model_io;
+pub mod pipeline;
+
+pub use batcher::{BatchPlan, Batcher, BatcherConfig};
+pub use engine::{Backend, Engine, EngineConfig, EngineStats};
+pub use pipeline::{PipelineReport, TrainPipeline, TrainPipelineConfig};
+
+use crate::kernel::KernelKind;
+use crate::krr::NystromKrr;
+use crate::linalg::Mat;
+use crate::util::{Error, Result};
+
+/// Everything the serving path needs, folded to its minimal form:
+/// `f̂(x) = k_rbf(x, landmarks)·v` (see `NystromFactor::serving_vector`).
+#[derive(Debug, Clone)]
+pub struct ServingModel {
+    /// p×d landmark matrix.
+    pub landmarks: Mat,
+    /// Folded weight vector (length p).
+    pub v: Vec<f64>,
+    /// RBF bandwidth baked into the artifacts.
+    pub bandwidth: f64,
+}
+
+impl ServingModel {
+    /// Export a fitted Nyström KRR model for serving. The AOT `predict`
+    /// artifacts implement the RBF kernel, so only RBF models export.
+    pub fn from_nystrom(model: &NystromKrr) -> Result<Self> {
+        let bandwidth = match model.kernel().kind() {
+            KernelKind::Rbf { bandwidth } => bandwidth,
+            other => {
+                return Err(Error::invalid(format!(
+                    "serving artifacts are compiled for the RBF kernel; model uses {}",
+                    other.name()
+                )))
+            }
+        };
+        let v = model.factor().serving_vector(model.theta());
+        Ok(Self { landmarks: model.landmarks(), v, bandwidth })
+    }
+
+    /// Number of landmarks p.
+    pub fn p(&self) -> usize {
+        self.landmarks.rows()
+    }
+
+    /// Feature dimension d.
+    pub fn d(&self) -> usize {
+        self.landmarks.cols()
+    }
+
+    /// Native (pure-Rust) prediction — the fallback backend and the oracle
+    /// the PJRT path is tested against.
+    pub fn predict_native(&self, x: &Mat) -> Vec<f64> {
+        let kernel = crate::kernel::KernelFn::new(KernelKind::Rbf {
+            bandwidth: self.bandwidth,
+        });
+        let kx = crate::kernel::Kernel::cross(&kernel, x, &self.landmarks);
+        kx.matvec(&self.v)
+    }
+
+    /// Validate a single query point's shape.
+    pub fn check_point(&self, x: &[f64]) -> Result<()> {
+        if x.len() != self.d() {
+            return Err(Error::invalid(format!(
+                "query dimension {} != model dimension {}",
+                x.len(),
+                self.d()
+            )));
+        }
+        if x.iter().any(|v| !v.is_finite()) {
+            return Err(Error::invalid("non-finite query"));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::krr::NystromKrrConfig;
+    use crate::rng::Pcg64;
+    use crate::sketch::SketchStrategy;
+
+    fn fitted_model(n: usize, d: usize, p: usize) -> (Mat, Vec<f64>, NystromKrr) {
+        let mut rng = Pcg64::new(3);
+        let x = Mat::from_fn(n, d, |_, _| rng.normal());
+        let y: Vec<f64> = (0..n).map(|i| x.row(i).iter().sum::<f64>().sin()).collect();
+        let cfg = NystromKrrConfig {
+            lambda: 1e-3,
+            p,
+            strategy: SketchStrategy::DiagK,
+            gamma: 0.0,
+            seed: 5,
+        };
+        let m =
+            NystromKrr::fit(&x, &y, KernelKind::Rbf { bandwidth: 1.0 }, &cfg).unwrap();
+        (x, y, m)
+    }
+
+    #[test]
+    fn export_and_native_predict_match_model() {
+        let (x, _, model) = fitted_model(60, 8, 20);
+        let sm = ServingModel::from_nystrom(&model).unwrap();
+        assert_eq!(sm.p(), 20);
+        assert_eq!(sm.d(), 8);
+        let direct = model.predict(&x);
+        let served = sm.predict_native(&x);
+        for (a, b) in direct.iter().zip(&served) {
+            assert!((a - b).abs() < 1e-8, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn non_rbf_models_refuse_export() {
+        let mut rng = Pcg64::new(4);
+        let x = Mat::from_fn(30, 4, |_, _| rng.normal());
+        let y = rng.normal_vec(30);
+        let cfg = NystromKrrConfig {
+            lambda: 1e-2,
+            p: 10,
+            strategy: SketchStrategy::Uniform,
+            gamma: 0.0,
+            seed: 1,
+        };
+        let m = NystromKrr::fit(&x, &y, KernelKind::Linear, &cfg).unwrap();
+        assert!(ServingModel::from_nystrom(&m).is_err());
+    }
+
+    #[test]
+    fn check_point_validates() {
+        let (_, _, model) = fitted_model(40, 8, 16);
+        let sm = ServingModel::from_nystrom(&model).unwrap();
+        assert!(sm.check_point(&vec![0.0; 8]).is_ok());
+        assert!(sm.check_point(&vec![0.0; 7]).is_err());
+        assert!(sm
+            .check_point(&[f64::NAN, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0, 0.0])
+            .is_err());
+    }
+}

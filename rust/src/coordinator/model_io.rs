@@ -1,0 +1,198 @@
+//! ServingModel persistence: a self-describing single-file format so
+//! `fastkrr train --save model.fkrr` → `fastkrr serve --model model.fkrr`
+//! works across processes (and so deployment doesn't re-train).
+//!
+//! Layout (little-endian):
+//!   magic  b"FKRR"  | version u32 | p u64 | d u64 | bandwidth f64
+//!   landmarks p×d f64 | v p f64 | crc64 of everything above
+//!
+//! The checksum is a simple polynomial CRC (ECMA-182) — corruption
+//! detection, not security.
+
+use super::ServingModel;
+use crate::linalg::Mat;
+use crate::util::{Error, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"FKRR";
+const VERSION: u32 = 1;
+
+/// CRC-64/ECMA-182.
+fn crc64(data: &[u8]) -> u64 {
+    const POLY: u64 = 0x42F0E1EBA9EA3693;
+    let mut crc = 0u64;
+    for &b in data {
+        crc ^= (b as u64) << 56;
+        for _ in 0..8 {
+            crc = if crc & (1 << 63) != 0 {
+                (crc << 1) ^ POLY
+            } else {
+                crc << 1
+            };
+        }
+    }
+    crc
+}
+
+fn push_f64s(buf: &mut Vec<u8>, xs: &[f64]) {
+    for &x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Serialize a ServingModel to bytes.
+pub fn to_bytes(model: &ServingModel) -> Vec<u8> {
+    let p = model.p();
+    let d = model.d();
+    let mut buf = Vec::with_capacity(4 + 4 + 16 + 8 + (p * d + p) * 8 + 8);
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&VERSION.to_le_bytes());
+    buf.extend_from_slice(&(p as u64).to_le_bytes());
+    buf.extend_from_slice(&(d as u64).to_le_bytes());
+    buf.extend_from_slice(&model.bandwidth.to_le_bytes());
+    push_f64s(&mut buf, model.landmarks.as_slice());
+    push_f64s(&mut buf, &model.v);
+    let crc = crc64(&buf);
+    buf.extend_from_slice(&crc.to_le_bytes());
+    buf
+}
+
+/// Deserialize a ServingModel, validating magic/version/shape/CRC.
+pub fn from_bytes(data: &[u8]) -> Result<ServingModel> {
+    if data.len() < 4 + 4 + 16 + 8 + 8 {
+        return Err(Error::invalid("model file truncated"));
+    }
+    let (body, crc_bytes) = data.split_at(data.len() - 8);
+    let stored = u64::from_le_bytes(crc_bytes.try_into().unwrap());
+    if crc64(body) != stored {
+        return Err(Error::invalid("model file checksum mismatch"));
+    }
+    let mut off = 0usize;
+    let take = |off: &mut usize, n: usize| -> Result<&[u8]> {
+        if *off + n > body.len() {
+            return Err(Error::invalid("model file truncated"));
+        }
+        let s = &body[*off..*off + n];
+        *off += n;
+        Ok(s)
+    };
+    if take(&mut off, 4)? != MAGIC {
+        return Err(Error::invalid("not a fastkrr model file"));
+    }
+    let version = u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap());
+    if version != VERSION {
+        return Err(Error::invalid(format!("unsupported model version {version}")));
+    }
+    let p = u64::from_le_bytes(take(&mut off, 8)?.try_into().unwrap()) as usize;
+    let d = u64::from_le_bytes(take(&mut off, 8)?.try_into().unwrap()) as usize;
+    let bandwidth = f64::from_le_bytes(take(&mut off, 8)?.try_into().unwrap());
+    if p == 0 || d == 0 || p > 1 << 24 || d > 1 << 20 {
+        return Err(Error::invalid(format!("implausible model dims p={p} d={d}")));
+    }
+    if bandwidth <= 0.0 || !bandwidth.is_finite() {
+        return Err(Error::invalid("bad bandwidth in model file"));
+    }
+    let read_f64s = |off: &mut usize, n: usize| -> Result<Vec<f64>> {
+        let bytes = take(off, n * 8)?;
+        Ok(bytes
+            .chunks_exact(8)
+            .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    };
+    let mut off2 = off;
+    let lm = read_f64s(&mut off2, p * d)?;
+    let v = read_f64s(&mut off2, p)?;
+    if off2 != body.len() {
+        return Err(Error::invalid("model file has trailing bytes"));
+    }
+    if lm.iter().chain(v.iter()).any(|x| !x.is_finite()) {
+        return Err(Error::invalid("non-finite values in model file"));
+    }
+    Ok(ServingModel {
+        landmarks: Mat::from_vec(p, d, lm)?,
+        v,
+        bandwidth,
+    })
+}
+
+/// Save to a file.
+pub fn save(model: &ServingModel, path: &Path) -> Result<()> {
+    let mut f = std::fs::File::create(path)
+        .map_err(|e| Error::io(format!("create {}: {e}", path.display())))?;
+    f.write_all(&to_bytes(model))
+        .map_err(|e| Error::io(e.to_string()))?;
+    Ok(())
+}
+
+/// Load from a file.
+pub fn load(path: &Path) -> Result<ServingModel> {
+    let mut f = std::fs::File::open(path)
+        .map_err(|e| Error::io(format!("open {}: {e}", path.display())))?;
+    let mut buf = Vec::new();
+    f.read_to_end(&mut buf).map_err(|e| Error::io(e.to_string()))?;
+    from_bytes(&buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn model(p: usize, d: usize, seed: u64) -> ServingModel {
+        let mut rng = Pcg64::new(seed);
+        ServingModel {
+            landmarks: Mat::from_fn(p, d, |_, _| rng.normal()),
+            v: rng.normal_vec(p),
+            bandwidth: 1.5,
+        }
+    }
+
+    #[test]
+    fn roundtrip_bytes() {
+        let m = model(16, 8, 1);
+        let bytes = to_bytes(&m);
+        let back = from_bytes(&bytes).unwrap();
+        assert_eq!(back.p(), 16);
+        assert_eq!(back.d(), 8);
+        assert_eq!(back.bandwidth, 1.5);
+        assert_eq!(back.v, m.v);
+        assert_eq!(back.landmarks.as_slice(), m.landmarks.as_slice());
+    }
+
+    #[test]
+    fn roundtrip_file_and_predictions_identical() {
+        let m = model(12, 4, 2);
+        let path = std::env::temp_dir().join(format!("fkrr_{}.fkrr", std::process::id()));
+        save(&m, &path).unwrap();
+        let back = load(&path).unwrap();
+        let mut rng = Pcg64::new(3);
+        let x = Mat::from_fn(5, 4, |_, _| rng.normal());
+        assert_eq!(m.predict_native(&x), back.predict_native(&x));
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corruption_detected() {
+        let m = model(8, 3, 4);
+        let mut bytes = to_bytes(&m);
+        // Flip a payload byte.
+        let mid = bytes.len() / 2;
+        bytes[mid] ^= 0xFF;
+        assert!(from_bytes(&bytes).is_err());
+        // Truncation.
+        let m2 = to_bytes(&m);
+        assert!(from_bytes(&m2[..m2.len() - 3]).is_err());
+        // Bad magic.
+        let mut m3 = to_bytes(&m);
+        m3[0] = b'X';
+        assert!(from_bytes(&m3).is_err());
+        // Empty.
+        assert!(from_bytes(&[]).is_err());
+    }
+
+    #[test]
+    fn load_missing_file_errors() {
+        assert!(load(Path::new("/nonexistent/m.fkrr")).is_err());
+    }
+}

@@ -1,0 +1,148 @@
+//! CSV I/O for datasets (last column = response; optional header).
+
+use super::Dataset;
+use crate::linalg::Mat;
+use crate::util::{Error, Result};
+use std::io::{BufRead, BufWriter, Write};
+use std::path::Path;
+
+/// Load a dataset from CSV. The last column is the response `y`; all other
+/// columns are features. A non-numeric first line is treated as a header.
+pub fn load_csv(path: &Path) -> Result<Dataset> {
+    let file = std::fs::File::open(path)
+        .map_err(|e| Error::io(format!("open {}: {e}", path.display())))?;
+    let reader = std::io::BufReader::new(file);
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    let mut width = None;
+    for (lineno, line) in reader.lines().enumerate() {
+        let line = line.map_err(|e| Error::io(e.to_string()))?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') {
+            continue;
+        }
+        let parsed: std::result::Result<Vec<f64>, _> =
+            t.split(',').map(|f| f.trim().parse::<f64>()).collect();
+        match parsed {
+            Ok(vals) => {
+                if vals.len() < 2 {
+                    return Err(Error::invalid(format!(
+                        "line {}: need >= 2 columns",
+                        lineno + 1
+                    )));
+                }
+                match width {
+                    None => width = Some(vals.len()),
+                    Some(w) if w != vals.len() => {
+                        return Err(Error::invalid(format!(
+                            "line {}: ragged row ({} vs {} cols)",
+                            lineno + 1,
+                            vals.len(),
+                            w
+                        )))
+                    }
+                    _ => {}
+                }
+                rows.push(vals);
+            }
+            Err(_) if lineno == 0 && rows.is_empty() => {
+                // header — skip
+            }
+            Err(e) => {
+                return Err(Error::invalid(format!("line {}: {e}", lineno + 1)));
+            }
+        }
+    }
+    if rows.is_empty() {
+        return Err(Error::invalid("empty CSV"));
+    }
+    let w = width.unwrap();
+    let n = rows.len();
+    let d = w - 1;
+    let mut x = Mat::zeros(n, d);
+    let mut y = Vec::with_capacity(n);
+    for (i, row) in rows.iter().enumerate() {
+        x.row_mut(i).copy_from_slice(&row[..d]);
+        y.push(row[d]);
+    }
+    let name = path
+        .file_stem()
+        .map(|s| s.to_string_lossy().into_owned())
+        .unwrap_or_else(|| "csv".into());
+    let ds = Dataset { x, y, f_star: None, sigma: None, name };
+    ds.validate()?;
+    Ok(ds)
+}
+
+/// Save a dataset to CSV (features then response; no header).
+pub fn save_csv(ds: &Dataset, path: &Path) -> Result<()> {
+    let file = std::fs::File::create(path)
+        .map_err(|e| Error::io(format!("create {}: {e}", path.display())))?;
+    let mut w = BufWriter::new(file);
+    for i in 0..ds.n() {
+        let mut line = String::new();
+        for v in ds.x.row(i) {
+            line.push_str(&format!("{v:.17e},"));
+        }
+        line.push_str(&format!("{:.17e}\n", ds.y[i]));
+        w.write_all(line.as_bytes())
+            .map_err(|e| Error::io(e.to_string()))?;
+    }
+    w.flush().map_err(|e| Error::io(e.to_string()))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn tmpfile(name: &str) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("fastkrr_test_{}_{}", std::process::id(), name));
+        p
+    }
+
+    #[test]
+    fn roundtrip() {
+        let mut rng = Pcg64::new(1);
+        let x = Mat::from_fn(13, 4, |_, _| rng.normal());
+        let y = rng.normal_vec(13);
+        let ds = Dataset { x, y, f_star: None, sigma: None, name: "rt".into() };
+        let path = tmpfile("roundtrip.csv");
+        save_csv(&ds, &path).unwrap();
+        let back = load_csv(&path).unwrap();
+        assert_eq!(back.n(), 13);
+        assert_eq!(back.d(), 4);
+        for i in 0..13 {
+            assert!((back.y[i] - ds.y[i]).abs() < 1e-15);
+            for c in 0..4 {
+                assert!((back.x[(i, c)] - ds.x[(i, c)]).abs() < 1e-15);
+            }
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn header_and_comments_skipped() {
+        let path = tmpfile("header.csv");
+        std::fs::write(&path, "a,b,y\n# comment\n1,2,3\n4,5,6\n").unwrap();
+        let ds = load_csv(&path).unwrap();
+        assert_eq!(ds.n(), 2);
+        assert_eq!(ds.d(), 2);
+        assert_eq!(ds.y, vec![3.0, 6.0]);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn rejects_bad_files() {
+        let path = tmpfile("bad.csv");
+        std::fs::write(&path, "1,2,3\n4,5\n").unwrap();
+        assert!(load_csv(&path).is_err());
+        std::fs::write(&path, "").unwrap();
+        assert!(load_csv(&path).is_err());
+        std::fs::write(&path, "1,2,x\n").unwrap();
+        assert!(load_csv(&path).is_err());
+        std::fs::remove_file(&path).ok();
+        assert!(load_csv(std::path::Path::new("/nonexistent/x.csv")).is_err());
+    }
+}

@@ -1,0 +1,226 @@
+//! Figure 1: (left) the λ-ridge leverage profile on the synthetic Bernoulli
+//! dataset — high leverage in the under-represented center of the interval;
+//! (right) MSE risk vs number of sampled columns for the competing
+//! sampling strategies.
+
+use crate::data;
+use crate::kernel::{Kernel, KernelFn, KernelKind};
+use crate::krr::risk::{exact_risk, nystrom_risk};
+use crate::leverage;
+use crate::nystrom::NystromFactor;
+use crate::rng::Pcg64;
+use crate::sketch::{draw_columns, SketchStrategy};
+use crate::util::Result;
+
+/// Figure 1 (left): design points and their leverage scores.
+#[derive(Debug, Clone)]
+pub struct Figure1Left {
+    pub x: Vec<f64>,
+    pub scores: Vec<f64>,
+    pub d_eff: f64,
+    pub d_mof: f64,
+    pub lambda: f64,
+}
+
+impl Figure1Left {
+    /// ASCII rendition of the profile (binned averages over [0,1]).
+    pub fn render_ascii(&self, bins: usize) -> String {
+        let mut sums = vec![0.0f64; bins];
+        let mut counts = vec![0usize; bins];
+        for (&x, &s) in self.x.iter().zip(&self.scores) {
+            let b = ((x * bins as f64) as usize).min(bins - 1);
+            sums[b] += s;
+            counts[b] += 1;
+        }
+        let maxavg = sums
+            .iter()
+            .zip(&counts)
+            .map(|(s, &c)| if c > 0 { s / c as f64 } else { 0.0 })
+            .fold(0.0f64, f64::max)
+            .max(1e-12);
+        let mut out = format!(
+            "leverage profile (n={}, λ={:.1e}, d_eff={:.1}, d_mof={:.0})\n",
+            self.x.len(),
+            self.lambda,
+            self.d_eff,
+            self.d_mof
+        );
+        for b in 0..bins {
+            let avg = if counts[b] > 0 { sums[b] / counts[b] as f64 } else { 0.0 };
+            let bar = "#".repeat(((avg / maxavg) * 40.0).round() as usize);
+            out.push_str(&format!(
+                "x∈[{:.2},{:.2}) n={:>4} l̄={:.4} {}\n",
+                b as f64 / bins as f64,
+                (b + 1) as f64 / bins as f64,
+                counts[b],
+                avg,
+                bar
+            ));
+        }
+        out
+    }
+}
+
+/// Compute Figure 1 (left) on the paper's synthetic dataset.
+pub fn run_figure1_left(n: usize, lambda: f64, seed: u64) -> Result<Figure1Left> {
+    let ds = data::synth_bernoulli(n, 2, 0.1, seed);
+    let kernel = KernelFn::new(KernelKind::Bernoulli { order: 2 });
+    let km = kernel.matrix(&ds.x);
+    let lev = leverage::exact_ridge_leverage(&km, lambda)?;
+    Ok(Figure1Left {
+        x: ds.x.col(0),
+        scores: lev.scores,
+        d_eff: lev.d_eff,
+        d_mof: lev.d_mof,
+        lambda,
+    })
+}
+
+/// Figure 1 (right): risk vs p, one series per sampling strategy.
+#[derive(Debug, Clone)]
+pub struct Figure1Right {
+    pub p_grid: Vec<usize>,
+    /// (strategy name, mean risk at each p).
+    pub series: Vec<(String, Vec<f64>)>,
+    /// Risk of exact KRR (horizontal asymptote).
+    pub exact_risk: f64,
+    pub lambda: f64,
+    pub n: usize,
+}
+
+impl Figure1Right {
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "risk vs p (n={}, λ={:.1e}, exact risk={:.4e})\n{:<8}",
+            self.n, self.lambda, self.exact_risk, "p"
+        );
+        for (name, _) in &self.series {
+            out.push_str(&format!("{name:>18}"));
+        }
+        out.push('\n');
+        for (i, &p) in self.p_grid.iter().enumerate() {
+            out.push_str(&format!("{p:<8}"));
+            for (_, vals) in &self.series {
+                out.push_str(&format!("{:>18.4e}", vals[i]));
+            }
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Compute Figure 1 (right): sweep p for each strategy, averaging the
+/// column draw over `trials` seeds. Uses the closed-form risk (eq. 4).
+pub fn run_figure1_right(
+    n: usize,
+    lambda: f64,
+    p_grid: &[usize],
+    trials: usize,
+    seed: u64,
+) -> Result<Figure1Right> {
+    let ds = data::synth_bernoulli(n, 2, 0.1, seed);
+    let kernel = KernelFn::new(KernelKind::Bernoulli { order: 2 });
+    let km = kernel.matrix(&ds.x);
+    let f_star = ds.f_star.clone().unwrap();
+    let sigma = ds.sigma.unwrap();
+    let rk = exact_risk(&km, &f_star, sigma, lambda)?.total();
+    let strategies: Vec<(String, SketchStrategy)> = vec![
+        ("uniform".into(), SketchStrategy::Uniform),
+        ("diag-k".into(), SketchStrategy::DiagK),
+        ("exact-leverage".into(), SketchStrategy::ExactRidgeLeverage),
+        (
+            "approx-leverage".into(),
+            SketchStrategy::ApproxRidgeLeverage { oversample: 2.0 },
+        ),
+    ];
+    let mut series = Vec::new();
+    for (name, strat) in strategies {
+        let mut means = Vec::with_capacity(p_grid.len());
+        for &p in p_grid {
+            let mut acc = 0.0;
+            for t in 0..trials {
+                let mut rng = Pcg64::new(seed ^ (t as u64 * 7919 + p as u64));
+                let dist = crate::sketch::strategy_distribution(
+                    strat,
+                    &kernel,
+                    &ds.x,
+                    Some(&km),
+                    lambda,
+                    &mut rng,
+                )?;
+                let sketch = draw_columns(&dist, p, &mut rng)?;
+                let factor = NystromFactor::from_sketch(&kernel, &ds.x, &sketch)?;
+                acc += nystrom_risk(&factor, &f_star, sigma, lambda)?.total();
+            }
+            means.push(acc / trials as f64);
+        }
+        series.push((name, means));
+    }
+    Ok(Figure1Right {
+        p_grid: p_grid.to_vec(),
+        series,
+        exact_risk: rk,
+        lambda,
+        n,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn left_profile_peaks_in_center() {
+        // Figure 1 left: points near the (under-sampled) center have higher
+        // leverage than points near the (dense) borders.
+        let fig = run_figure1_left(300, 1e-6, 11).unwrap();
+        let mut center = Vec::new();
+        let mut border = Vec::new();
+        for (&x, &s) in fig.x.iter().zip(&fig.scores) {
+            if (0.35..0.65).contains(&x) {
+                center.push(s);
+            } else if !(0.1..0.9).contains(&x) {
+                border.push(s);
+            }
+        }
+        assert!(!center.is_empty() && !border.is_empty());
+        let c = crate::util::mean(&center);
+        let b = crate::util::mean(&border);
+        assert!(
+            c > 1.5 * b,
+            "center leverage {c} should dominate border leverage {b}"
+        );
+        assert!(fig.d_eff < fig.d_mof);
+        assert!(fig.render_ascii(10).contains('#'));
+    }
+
+    #[test]
+    fn right_risk_decreases_with_p_and_leverage_wins() {
+        let p_grid = [10, 40, 120];
+        let fig = run_figure1_right(200, 1e-6, &p_grid, 3, 13).unwrap();
+        assert_eq!(fig.series.len(), 4);
+        for (name, vals) in &fig.series {
+            // Risk approaches the exact-KRR level from above as p grows.
+            assert!(
+                vals[2] <= vals[0] * 1.05,
+                "{name}: risk should shrink with p: {vals:?}"
+            );
+            assert!(
+                vals[2] >= fig.exact_risk * 0.5,
+                "{name}: Nyström risk below exact is suspicious"
+            );
+        }
+        // At small p, leverage-based sampling beats uniform on this skewed
+        // design (the entire point of Figure 1 right).
+        let uni = &fig.series[0].1;
+        let lev = &fig.series[2].1;
+        assert!(
+            lev[0] <= uni[0] * 1.1,
+            "exact-leverage {} should beat/\u{2248} uniform {} at p={}",
+            lev[0],
+            uni[0],
+            p_grid[0]
+        );
+        assert!(fig.render().contains("uniform"));
+    }
+}

@@ -1,0 +1,23 @@
+//! Experiment drivers that regenerate the paper's evaluation section.
+//!
+//! Each submodule produces the data behind one table/figure; the bench
+//! harness (`rust/benches/`) and the CLI (`fastkrr experiment …`) both call
+//! into these so the numbers in EXPERIMENTS.md are reproducible from either
+//! entry point.
+//!
+//! - [`table1`] — Table 1: per dataset×kernel `d_eff`, `d_mof`, risk ratio.
+//! - [`figure1`] — Figure 1: leverage-score profile (left) and MSE risk vs
+//!   sketch size per sampling strategy (right).
+//! - [`dnc`] — the §1 open-problem comparison: divide-and-conquer vs
+//!   uniform-Nyström vs leverage-Nyström kernel-evaluation budgets at
+//!   matched risk.
+
+pub mod dnc;
+pub mod figure1;
+pub mod table1;
+pub mod theorem1;
+
+pub use dnc::{run_dnc_comparison, DncRow};
+pub use figure1::{run_figure1_left, run_figure1_right, Figure1Left, Figure1Right};
+pub use table1::{run_table1, Table1Row};
+pub use theorem1::{run_theorem1, Theorem1Draw};

@@ -1,0 +1,139 @@
+//! Bernoulli-polynomial periodic Sobolev kernels (Bach '13; paper §4).
+//!
+//! `k(x, y) = B_{2β}(x − y − ⌊x − y⌋) / (2β)!` is the reproducing kernel of
+//! the periodic Sobolev space of order β on [0, 1) (up to constants), with
+//! eigenfunctions the Fourier basis and eigenvalues decaying as `j^{−2β}`.
+//! The paper's synthetic experiment uses β = 2 (so `B₄`).
+//!
+//! Bernoulli polynomials used here:
+//!   B₂(t) = t² − t + 1/6
+//!   B₄(t) = t⁴ − 2t³ + t² − 1/30
+//!   B₆(t) = t⁶ − 3t⁵ + (5/2)t⁴ − (1/2)t² + 1/42
+
+/// `B₂(t)`.
+pub fn bernoulli_b2(t: f64) -> f64 {
+    t * t - t + 1.0 / 6.0
+}
+
+/// `B₄(t)`.
+pub fn bernoulli_b4(t: f64) -> f64 {
+    let t2 = t * t;
+    t2 * t2 - 2.0 * t2 * t + t2 - 1.0 / 30.0
+}
+
+/// `B₆(t)`.
+pub fn bernoulli_b6(t: f64) -> f64 {
+    let t2 = t * t;
+    let t4 = t2 * t2;
+    t4 * t2 - 3.0 * t4 * t + 2.5 * t4 - 0.5 * t2 + 1.0 / 42.0
+}
+
+const FACT_2: f64 = 2.0;
+const FACT_4: f64 = 24.0;
+const FACT_6: f64 = 720.0;
+
+/// The kernel `(−1)^{β+1}·B_{2β}({x − y}) / (2β)!` with `{·}` the
+/// fractional part (1-periodic). `order` = β ∈ {1, 2, 3}.
+///
+/// The sign factor makes the kernel positive semi-definite: the Fourier
+/// series `B_{2β}(t) = (−1)^{β+1}·2(2β)!/(2π)^{2β}·Σ_k cos(2πkt)/k^{2β}`
+/// alternates in sign with β, so the Mercer coefficients of
+/// `(−1)^{β+1}B_{2β}` are `2/(2πk)^{2β} > 0` — the periodic Sobolev space
+/// of smoothness β with eigenvalues decaying as `k^{−2β}` (Bach '13).
+pub fn bernoulli_kernel(x: f64, y: f64, order: u32) -> f64 {
+    let mut t = x - y;
+    t -= t.floor(); // fractional part in [0, 1)
+    match order {
+        1 => bernoulli_b2(t) / FACT_2,
+        2 => -bernoulli_b4(t) / FACT_4,
+        3 => bernoulli_b6(t) / FACT_6,
+        _ => panic!("bernoulli kernel order must be 1..=3, got {order}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn polynomial_values_known_points() {
+        // B2(0) = 1/6, B2(1/2) = -1/12
+        assert!((bernoulli_b2(0.0) - 1.0 / 6.0).abs() < 1e-15);
+        assert!((bernoulli_b2(0.5) + 1.0 / 12.0).abs() < 1e-15);
+        // B4(0) = -1/30, B4(1/2) = 7/240
+        assert!((bernoulli_b4(0.0) + 1.0 / 30.0).abs() < 1e-15);
+        assert!((bernoulli_b4(0.5) - 7.0 / 240.0).abs() < 1e-15);
+        // B6(0) = 1/42, B6(1/2) = -31/1344
+        assert!((bernoulli_b6(0.0) - 1.0 / 42.0).abs() < 1e-15);
+        assert!((bernoulli_b6(0.5) + 31.0 / 1344.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn symmetry_bn_of_1_minus_t() {
+        // Even Bernoulli polynomials satisfy B(1−t) = B(t).
+        for t in [0.0, 0.1, 0.3, 0.45, 0.7] {
+            assert!((bernoulli_b2(1.0 - t) - bernoulli_b2(t)).abs() < 1e-14);
+            assert!((bernoulli_b4(1.0 - t) - bernoulli_b4(t)).abs() < 1e-14);
+            assert!((bernoulli_b6(1.0 - t) - bernoulli_b6(t)).abs() < 1e-14);
+        }
+    }
+
+    #[test]
+    fn kernel_is_symmetric_and_periodic() {
+        for order in 1..=3u32 {
+            for (x, y) in [(0.2, 0.8), (0.0, 0.99), (0.5, 0.5), (0.13, 0.77)] {
+                let k1 = bernoulli_kernel(x, y, order);
+                let k2 = bernoulli_kernel(y, x, order);
+                assert!((k1 - k2).abs() < 1e-14, "symmetry β={order}");
+                let k3 = bernoulli_kernel(x + 1.0, y, order);
+                assert!((k1 - k3).abs() < 1e-12, "periodicity β={order}");
+            }
+        }
+    }
+
+    #[test]
+    fn kernel_mercer_expansion_beta1() {
+        // For β=1: B₂({x−y})/2! = Σ_{j≥1} cos(2πj(x−y)) / (2π²j²)
+        // (standard Fourier series of B₂). Check truncation agreement.
+        let (x, y) = (0.3, 0.7);
+        let k = bernoulli_kernel(x, y, 1);
+        let mut s = 0.0;
+        for j in 1..2000 {
+            let jf = j as f64;
+            s += (2.0 * std::f64::consts::PI * jf * (x - y)).cos()
+                / (2.0 * std::f64::consts::PI.powi(2) * jf * jf);
+        }
+        assert!((k - s).abs() < 1e-6, "k={k} series={s}");
+    }
+
+    #[test]
+    fn kernel_mercer_expansion_beta2() {
+        // For β=2 the PSD kernel is −B₄({x−y})/4! = Σ_j 2cos(2πj(x−y))/(2πj)⁴.
+        let (x, y) = (0.15, 0.62);
+        let k = bernoulli_kernel(x, y, 2);
+        let mut s = 0.0;
+        for j in 1..500 {
+            let w = 2.0 * std::f64::consts::PI * j as f64;
+            s += 2.0 * (w * (x - y)).cos() / w.powi(4);
+        }
+        assert!((k - s).abs() < 1e-10, "k={k} series={s}");
+    }
+
+    #[test]
+    fn kernel_diag_is_max() {
+        // PSD kernel: k(x,x) ≥ |k(x,y)|.
+        for order in 1..=3u32 {
+            let kxx = bernoulli_kernel(0.3, 0.3, order);
+            assert!(kxx > 0.0);
+            for y in [0.0, 0.1, 0.5, 0.9] {
+                assert!(kxx + 1e-15 >= bernoulli_kernel(0.3, y, order).abs());
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn bad_order_panics() {
+        bernoulli_kernel(0.1, 0.2, 7);
+    }
+}

@@ -1,0 +1,394 @@
+//! Kernel functions and kernel-matrix assembly.
+//!
+//! Implements every kernel used in the paper's experiments (§4): the linear
+//! and Gaussian RBF kernels for the Pumadyn / Gas-sensor datasets, and the
+//! Bernoulli-polynomial kernel `k(x,y) = B_{2β}(x−y−⌊x−y⌋)/(2β)!` that
+//! generates the periodic Sobolev RKHS of Bach's synthetic experiment —
+//! plus Laplacian and polynomial kernels for completeness.
+//!
+//! Matrix assembly is row-parallel; the RBF path uses the
+//! `‖x‖² + ‖z‖² − 2⟨x,z⟩` expansion so the dominant cost is a matmul — the
+//! same formulation the L1 Pallas kernel uses on the MXU (DESIGN.md §7).
+
+mod bernoulli;
+
+pub use bernoulli::{bernoulli_b2, bernoulli_b4, bernoulli_b6, bernoulli_kernel};
+
+use crate::linalg::{dot, matmul_a_bt, Mat};
+use crate::util::parallel::par_chunks_mut;
+use crate::util::{Error, Result};
+
+/// Which kernel to use — serializable config-level description.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum KernelKind {
+    /// `k(x,z) = ⟨x,z⟩`
+    Linear,
+    /// `k(x,z) = exp(−‖x−z‖² / (2σ²))` with `σ` = bandwidth.
+    Rbf { bandwidth: f64 },
+    /// `k(x,z) = exp(−‖x−z‖₁ / σ)`
+    Laplacian { bandwidth: f64 },
+    /// `k(x,z) = (⟨x,z⟩ + c)^d`
+    Polynomial { degree: u32, offset: f64 },
+    /// Bach's periodic Sobolev kernel on [0,1):
+    /// `k(x,z) = B_{2β}({x−z}) / (2β)!` applied coordinate-wise (summed).
+    /// `order` = β ∈ {1, 2, 3}.
+    Bernoulli { order: u32 },
+}
+
+impl KernelKind {
+    /// Human-readable name used in reports and the CLI.
+    pub fn name(&self) -> String {
+        match self {
+            KernelKind::Linear => "linear".into(),
+            KernelKind::Rbf { bandwidth } => format!("rbf(σ={bandwidth})"),
+            KernelKind::Laplacian { bandwidth } => format!("laplacian(σ={bandwidth})"),
+            KernelKind::Polynomial { degree, offset } => {
+                format!("poly(d={degree},c={offset})")
+            }
+            KernelKind::Bernoulli { order } => format!("bernoulli(β={order})"),
+        }
+    }
+
+    /// Parse from the CLI/config syntax: `linear`, `rbf:1.5`,
+    /// `laplacian:2.0`, `poly:3:1.0`, `bernoulli:2`.
+    pub fn parse(s: &str) -> Result<KernelKind> {
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts[0] {
+            "linear" => Ok(KernelKind::Linear),
+            "rbf" => {
+                let bw = parts
+                    .get(1)
+                    .ok_or_else(|| Error::invalid("rbf needs bandwidth: rbf:<σ>"))?
+                    .parse::<f64>()
+                    .map_err(|_| Error::invalid("bad rbf bandwidth"))?;
+                if bw <= 0.0 {
+                    return Err(Error::invalid("rbf bandwidth must be > 0"));
+                }
+                Ok(KernelKind::Rbf { bandwidth: bw })
+            }
+            "laplacian" => {
+                let bw = parts
+                    .get(1)
+                    .ok_or_else(|| Error::invalid("laplacian needs bandwidth"))?
+                    .parse::<f64>()
+                    .map_err(|_| Error::invalid("bad laplacian bandwidth"))?;
+                if bw <= 0.0 {
+                    return Err(Error::invalid("laplacian bandwidth must be > 0"));
+                }
+                Ok(KernelKind::Laplacian { bandwidth: bw })
+            }
+            "poly" => {
+                let d = parts
+                    .get(1)
+                    .ok_or_else(|| Error::invalid("poly needs degree: poly:<d>[:c]"))?
+                    .parse::<u32>()
+                    .map_err(|_| Error::invalid("bad poly degree"))?;
+                let c = parts
+                    .get(2)
+                    .map(|s| s.parse::<f64>())
+                    .transpose()
+                    .map_err(|_| Error::invalid("bad poly offset"))?
+                    .unwrap_or(1.0);
+                Ok(KernelKind::Polynomial { degree: d, offset: c })
+            }
+            "bernoulli" => {
+                let b = parts
+                    .get(1)
+                    .map(|s| s.parse::<u32>())
+                    .transpose()
+                    .map_err(|_| Error::invalid("bad bernoulli order"))?
+                    .unwrap_or(2);
+                if !(1..=3).contains(&b) {
+                    return Err(Error::invalid("bernoulli order must be 1..=3"));
+                }
+                Ok(KernelKind::Bernoulli { order: b })
+            }
+            other => Err(Error::invalid(format!("unknown kernel '{other}'"))),
+        }
+    }
+}
+
+/// A positive (semi-)definite kernel over rows of a data matrix.
+pub trait Kernel: Send + Sync {
+    /// Evaluate `k(x, z)` on two feature vectors.
+    fn eval(&self, x: &[f64], z: &[f64]) -> f64;
+
+    /// `k(x, x)` — overridable when cheaper than `eval(x, x)`.
+    fn eval_diag(&self, x: &[f64]) -> f64 {
+        self.eval(x, x)
+    }
+
+    /// Full n×n kernel matrix of `x` (row = sample). Symmetric by
+    /// construction (computed exactly once per pair).
+    fn matrix(&self, x: &Mat) -> Mat {
+        let k = self.cross(x, x);
+        k
+    }
+
+    /// Cross kernel block: `out[i][j] = k(x_i, z_j)` for x (m×d), z (p×d).
+    fn cross(&self, x: &Mat, z: &Mat) -> Mat {
+        assert_eq!(x.cols(), z.cols(), "kernel cross: feature dims differ");
+        let m = x.rows();
+        let p = z.rows();
+        let mut out = Mat::zeros(m, p);
+        par_chunks_mut(out.as_mut_slice(), m, p, |_ci, r0, chunk| {
+            let rows_here = chunk.len() / p.max(1);
+            for r in 0..rows_here {
+                let xr = x.row(r0 + r);
+                let orow = &mut chunk[r * p..(r + 1) * p];
+                for (j, slot) in orow.iter_mut().enumerate() {
+                    *slot = self.eval(xr, z.row(j));
+                }
+            }
+        });
+        out
+    }
+
+    /// Diagonal of the kernel matrix — `p_i ∝ K_ii` sampling (Theorem 4)
+    /// needs only this, never the full matrix.
+    fn diag(&self, x: &Mat) -> Vec<f64> {
+        crate::util::parallel::par_fill(x.rows(), 64, |i| self.eval_diag(x.row(i)))
+    }
+
+    /// Selected columns of the kernel matrix of `x`: out (n×p) with
+    /// `out[i][j] = k(x_i, x_{idx[j]})`. The Nyström C block — again without
+    /// forming the full matrix.
+    fn columns(&self, x: &Mat, idx: &[usize]) -> Mat {
+        let z = x.select_rows(idx);
+        self.cross(x, &z)
+    }
+}
+
+/// Concrete kernel dispatcher for [`KernelKind`].
+#[derive(Debug, Clone)]
+pub struct KernelFn {
+    kind: KernelKind,
+}
+
+impl KernelFn {
+    pub fn new(kind: KernelKind) -> Self {
+        Self { kind }
+    }
+    pub fn kind(&self) -> KernelKind {
+        self.kind
+    }
+}
+
+impl Kernel for KernelFn {
+    fn eval(&self, x: &[f64], z: &[f64]) -> f64 {
+        match self.kind {
+            KernelKind::Linear => dot(x, z),
+            KernelKind::Rbf { bandwidth } => {
+                let d2: f64 = x
+                    .iter()
+                    .zip(z)
+                    .map(|(a, b)| (a - b) * (a - b))
+                    .sum();
+                (-d2 / (2.0 * bandwidth * bandwidth)).exp()
+            }
+            KernelKind::Laplacian { bandwidth } => {
+                let d1: f64 = x.iter().zip(z).map(|(a, b)| (a - b).abs()).sum();
+                (-d1 / bandwidth).exp()
+            }
+            KernelKind::Polynomial { degree, offset } => {
+                (dot(x, z) + offset).powi(degree as i32)
+            }
+            KernelKind::Bernoulli { order } => {
+                x.iter()
+                    .zip(z)
+                    .map(|(a, b)| bernoulli_kernel(*a, *b, order))
+                    .sum()
+            }
+        }
+    }
+
+    fn eval_diag(&self, x: &[f64]) -> f64 {
+        match self.kind {
+            KernelKind::Rbf { .. } | KernelKind::Laplacian { .. } => 1.0,
+            KernelKind::Bernoulli { order } => {
+                x.len() as f64 * bernoulli_kernel(0.0, 0.0, order)
+            }
+            _ => self.eval(x, x),
+        }
+    }
+
+    /// RBF fast path: one matmul (`−2 X Zᵀ`) plus rank-1 row/col norm
+    /// corrections — the exact structure the L1 Pallas kernel implements.
+    fn cross(&self, x: &Mat, z: &Mat) -> Mat {
+        match self.kind {
+            KernelKind::Rbf { bandwidth } => {
+                let mut g = matmul_a_bt(x, z); // ⟨x_i, z_j⟩
+                let xn: Vec<f64> = (0..x.rows()).map(|i| dot(x.row(i), x.row(i))).collect();
+                let zn: Vec<f64> = (0..z.rows()).map(|j| dot(z.row(j), z.row(j))).collect();
+                let inv = -1.0 / (2.0 * bandwidth * bandwidth);
+                let p = z.rows();
+                par_chunks_mut(g.as_mut_slice(), x.rows(), p, |_ci, r0, chunk| {
+                    let rows_here = chunk.len() / p.max(1);
+                    for r in 0..rows_here {
+                        let xi = xn[r0 + r];
+                        let row = &mut chunk[r * p..(r + 1) * p];
+                        for (j, v) in row.iter_mut().enumerate() {
+                            // d² = ‖x‖² + ‖z‖² − 2⟨x,z⟩, clamped ≥ 0.
+                            let d2 = (xi + zn[j] - 2.0 * *v).max(0.0);
+                            *v = (d2 * inv).exp();
+                        }
+                    }
+                });
+                g
+            }
+            KernelKind::Linear => matmul_a_bt(x, z),
+            _ => {
+                // Generic pairwise path.
+                assert_eq!(x.cols(), z.cols(), "kernel cross: feature dims differ");
+                let m = x.rows();
+                let p = z.rows();
+                let mut out = Mat::zeros(m, p);
+                par_chunks_mut(out.as_mut_slice(), m, p, |_ci, r0, chunk| {
+                    let rows_here = chunk.len() / p.max(1);
+                    for r in 0..rows_here {
+                        let xr = x.row(r0 + r);
+                        let orow = &mut chunk[r * p..(r + 1) * p];
+                        for (j, slot) in orow.iter_mut().enumerate() {
+                            *slot = self.eval(xr, z.row(j));
+                        }
+                    }
+                });
+                out
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn randmat(r: usize, c: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        Mat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        assert_eq!(KernelKind::parse("linear").unwrap(), KernelKind::Linear);
+        assert_eq!(
+            KernelKind::parse("rbf:1.5").unwrap(),
+            KernelKind::Rbf { bandwidth: 1.5 }
+        );
+        assert_eq!(
+            KernelKind::parse("poly:3:2.0").unwrap(),
+            KernelKind::Polynomial { degree: 3, offset: 2.0 }
+        );
+        assert_eq!(
+            KernelKind::parse("bernoulli:2").unwrap(),
+            KernelKind::Bernoulli { order: 2 }
+        );
+        assert!(KernelKind::parse("rbf").is_err());
+        assert!(KernelKind::parse("rbf:-1").is_err());
+        assert!(KernelKind::parse("wat").is_err());
+        assert!(KernelKind::parse("bernoulli:9").is_err());
+    }
+
+    #[test]
+    fn rbf_fast_path_matches_eval() {
+        let x = randmat(13, 5, 1);
+        let z = randmat(7, 5, 2);
+        let k = KernelFn::new(KernelKind::Rbf { bandwidth: 1.3 });
+        let fast = k.cross(&x, &z);
+        for i in 0..13 {
+            for j in 0..7 {
+                let slow = k.eval(x.row(i), z.row(j));
+                assert!((fast[(i, j)] - slow).abs() < 1e-12, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn linear_cross_is_gram() {
+        let x = randmat(6, 4, 3);
+        let k = KernelFn::new(KernelKind::Linear);
+        let g = k.matrix(&x);
+        for i in 0..6 {
+            for j in 0..6 {
+                assert!((g[(i, j)] - dot(x.row(i), x.row(j))).abs() < 1e-12);
+            }
+        }
+        assert!(g.asymmetry() < 1e-12);
+    }
+
+    #[test]
+    fn kernel_matrix_is_psd() {
+        // All kernels should produce PSD matrices on random data.
+        let x = randmat(20, 3, 4);
+        for kind in [
+            KernelKind::Linear,
+            KernelKind::Rbf { bandwidth: 0.9 },
+            KernelKind::Laplacian { bandwidth: 1.1 },
+            KernelKind::Polynomial { degree: 2, offset: 1.0 },
+        ] {
+            let k = KernelFn::new(kind);
+            let mut g = k.matrix(&x);
+            g.symmetrize();
+            let eig = crate::linalg::eigh(&g).unwrap();
+            assert!(
+                eig.min() > -1e-8 * eig.max().max(1.0),
+                "{} min eig {}",
+                kind.name(),
+                eig.min()
+            );
+        }
+    }
+
+    #[test]
+    fn bernoulli_kernel_matrix_psd_on_unit_interval() {
+        let mut rng = Pcg64::new(5);
+        let x = Mat::from_fn(25, 1, |_, _| rng.uniform());
+        let k = KernelFn::new(KernelKind::Bernoulli { order: 2 });
+        let mut g = k.matrix(&x);
+        g.symmetrize();
+        let eig = crate::linalg::eigh(&g).unwrap();
+        assert!(eig.min() > -1e-10 * eig.max().max(1.0), "min eig {}", eig.min());
+    }
+
+    #[test]
+    fn diag_matches_matrix_diagonal() {
+        let x = randmat(10, 4, 6);
+        for kind in [
+            KernelKind::Linear,
+            KernelKind::Rbf { bandwidth: 2.0 },
+            KernelKind::Bernoulli { order: 1 },
+        ] {
+            let k = KernelFn::new(kind);
+            let d = k.diag(&x);
+            let g = k.matrix(&x);
+            for i in 0..10 {
+                assert!((d[i] - g[(i, i)]).abs() < 1e-10, "{}", kind.name());
+            }
+        }
+    }
+
+    #[test]
+    fn columns_matches_full_matrix() {
+        let x = randmat(12, 3, 7);
+        let k = KernelFn::new(KernelKind::Rbf { bandwidth: 1.0 });
+        let g = k.matrix(&x);
+        let idx = [3usize, 3, 9, 0];
+        let c = k.columns(&x, &idx);
+        assert_eq!(c.cols(), 4);
+        for i in 0..12 {
+            for (j, &jj) in idx.iter().enumerate() {
+                assert!((c[(i, j)] - g[(i, jj)]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn rbf_diag_is_one() {
+        let x = randmat(5, 8, 8);
+        let k = KernelFn::new(KernelKind::Rbf { bandwidth: 0.7 });
+        for v in k.diag(&x) {
+            assert!((v - 1.0).abs() < 1e-15);
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! Divide-and-conquer KRR (Zhang, Duchi & Wainwright, COLT '13) — the
+//! baseline the paper compares against in §1.
+//!
+//! The dataset is split into `m` random partitions of (near-)equal size;
+//! an exact KRR estimator is fit on each partition **with the same λ**;
+//! the final estimator averages the partition predictions:
+//! `f̄(x) = (1/m) Σ_j f̂_j(x)`.
+//!
+//! Cost accounting (paper §1): D&C needs `m·(n/m)² = n²/m` kernel
+//! evaluations, with the theory requiring `m ≲ n/d_eff²`, i.e. a total of
+//! `O(n·d_eff²)` — versus `O(n·d_eff)` for leverage-based Nyström. The
+//! [`kernel_evaluations`] method exposes exactly this count so the
+//! `bench_dnc_vs_nystrom` harness can reproduce the comparison.
+
+use crate::kernel::KernelKind;
+use crate::krr::ExactKrr;
+use crate::linalg::Mat;
+use crate::rng::Pcg64;
+use crate::util::{Error, Result};
+
+/// Averaged divide-and-conquer KRR estimator.
+#[derive(Debug, Clone)]
+pub struct DivideAndConquerKrr {
+    parts: Vec<ExactKrr>,
+    part_sizes: Vec<usize>,
+    n_total: usize,
+}
+
+impl DivideAndConquerKrr {
+    /// Fit with `m` random equal partitions.
+    pub fn fit(
+        x: &Mat,
+        y: &[f64],
+        kind: KernelKind,
+        lambda: f64,
+        m: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        let n = x.rows();
+        if y.len() != n {
+            return Err(Error::invalid("y length mismatch"));
+        }
+        if m == 0 || m > n {
+            return Err(Error::invalid(format!("m must be in [1, n], got {m}")));
+        }
+        let mut rng = Pcg64::new(seed);
+        let mut perm: Vec<usize> = (0..n).collect();
+        rng.shuffle(&mut perm);
+        let mut parts = Vec::with_capacity(m);
+        let mut part_sizes = Vec::with_capacity(m);
+        let base = n / m;
+        let extra = n % m;
+        let mut off = 0usize;
+        for j in 0..m {
+            let size = base + usize::from(j < extra);
+            if size == 0 {
+                return Err(Error::invalid("a partition would be empty; reduce m"));
+            }
+            let idx = &perm[off..off + size];
+            off += size;
+            let xj = x.select_rows(idx);
+            let yj: Vec<f64> = idx.iter().map(|&i| y[i]).collect();
+            parts.push(ExactKrr::fit(&xj, &yj, kind, lambda)?);
+            part_sizes.push(size);
+        }
+        Ok(Self { parts, part_sizes, n_total: n })
+    }
+
+    /// Number of partitions m.
+    pub fn m(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Kernel evaluations needed at training: `Σ_j (n/m)²` — the quantity
+    /// the paper's §1 comparison is about.
+    pub fn kernel_evaluations(&self) -> usize {
+        self.part_sizes.iter().map(|&s| s * s).sum()
+    }
+
+    /// Total number of training points.
+    pub fn n(&self) -> usize {
+        self.n_total
+    }
+
+    /// Averaged prediction `f̄(x) = (1/m) Σ_j f̂_j(x)`.
+    pub fn predict(&self, x_new: &Mat) -> Vec<f64> {
+        let m = self.parts.len() as f64;
+        let mut acc = vec![0.0f64; x_new.rows()];
+        for part in &self.parts {
+            for (a, v) in acc.iter_mut().zip(part.predict(x_new)) {
+                *a += v;
+            }
+        }
+        for a in &mut acc {
+            *a /= m;
+        }
+        acc
+    }
+
+    /// Zhang et al.'s theory-suggested partition count `m ≈ n/d_eff²`,
+    /// clamped to [1, n/2].
+    pub fn suggested_m(n: usize, d_eff: f64) -> usize {
+        if d_eff <= 0.0 {
+            return 1;
+        }
+        let m = (n as f64 / (d_eff * d_eff)).floor() as usize;
+        m.clamp(1, (n / 2).max(1))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy(n: usize, seed: u64) -> (Mat, Vec<f64>) {
+        let mut rng = Pcg64::new(seed);
+        let x = Mat::from_fn(n, 2, |_, _| rng.normal());
+        let y: Vec<f64> = (0..n)
+            .map(|i| (x[(i, 0)] - 0.5 * x[(i, 1)]).tanh() + 0.1 * rng.normal())
+            .collect();
+        (x, y)
+    }
+
+    #[test]
+    fn m_equals_one_is_exact_krr() {
+        let (x, y) = toy(30, 1);
+        let kind = KernelKind::Rbf { bandwidth: 1.0 };
+        let dnc = DivideAndConquerKrr::fit(&x, &y, kind, 0.02, 1, 7).unwrap();
+        let exact = ExactKrr::fit(&x, &y, kind, 0.02).unwrap();
+        let (xt, _) = toy(9, 2);
+        let pa = dnc.predict(&xt);
+        let pb = exact.predict(&xt);
+        for (a, b) in pa.iter().zip(&pb) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn kernel_evaluation_count() {
+        let (x, y) = toy(40, 3);
+        let kind = KernelKind::Linear;
+        let dnc = DivideAndConquerKrr::fit(&x, &y, kind, 0.1, 4, 8).unwrap();
+        assert_eq!(dnc.m(), 4);
+        // 4 partitions of 10 → 4·100 = 400 ≪ 40² = 1600.
+        assert_eq!(dnc.kernel_evaluations(), 400);
+    }
+
+    #[test]
+    fn uneven_partitions() {
+        let (x, y) = toy(10, 4);
+        let dnc =
+            DivideAndConquerKrr::fit(&x, &y, KernelKind::Linear, 0.1, 3, 9).unwrap();
+        // sizes 4, 3, 3.
+        assert_eq!(dnc.kernel_evaluations(), 16 + 9 + 9);
+    }
+
+    #[test]
+    fn averaging_reduces_variance_vs_single_partition() {
+        // On a smooth target, the m-average should predict at least as well
+        // as a single 1/m-sized partition.
+        let (x, y) = toy(120, 5);
+        let kind = KernelKind::Rbf { bandwidth: 1.2 };
+        let (xt, yt) = toy(60, 77);
+        let dnc = DivideAndConquerKrr::fit(&x, &y, kind, 0.01, 4, 11).unwrap();
+        let full_err = crate::krr::mse(&dnc.predict(&xt), &yt);
+        // Single partition of the same size as one shard:
+        let shard = x.select_rows(&(0..30).collect::<Vec<_>>());
+        let yshard: Vec<f64> = y[..30].to_vec();
+        let single = ExactKrr::fit(&shard, &yshard, kind, 0.01).unwrap();
+        let single_err = crate::krr::mse(&single.predict(&xt), &yt);
+        assert!(
+            full_err <= single_err * 1.1,
+            "avg {full_err} vs single-shard {single_err}"
+        );
+    }
+
+    #[test]
+    fn suggested_m_behaviour() {
+        assert_eq!(DivideAndConquerKrr::suggested_m(1000, 5.0), 40);
+        assert_eq!(DivideAndConquerKrr::suggested_m(1000, 1000.0), 1);
+        assert_eq!(DivideAndConquerKrr::suggested_m(1000, 0.0), 1);
+        assert!(DivideAndConquerKrr::suggested_m(1000, 0.5) <= 500);
+    }
+
+    #[test]
+    fn validation() {
+        let (x, y) = toy(10, 6);
+        assert!(DivideAndConquerKrr::fit(&x, &y, KernelKind::Linear, 0.1, 0, 1).is_err());
+        assert!(
+            DivideAndConquerKrr::fit(&x, &y, KernelKind::Linear, 0.1, 11, 1).is_err()
+        );
+        assert!(
+            DivideAndConquerKrr::fit(&x, &y[..5], KernelKind::Linear, 0.1, 2, 1).is_err()
+        );
+    }
+}

@@ -1,0 +1,449 @@
+//! Kernel ridge regression estimators.
+//!
+//! - [`ExactKrr`] — the O(n³) reference: `α = (K + nλI)^{-1} y`,
+//!   `f̂(x) = Σ α_i k(x, x_i)` (paper §2).
+//! - [`NystromKrr`] — the paper's estimator: substitute K by the Nyström
+//!   `L = BBᵀ` and solve **in the p-dimensional feature space** via the
+//!   matrix-inversion lemma; training is O(np²) after the columns are
+//!   evaluated, prediction is O(pd + p²) per point. The full n×n matrix is
+//!   never formed.
+//! - [`DivideAndConquerKrr`] (in [`dnc`]) — Zhang–Duchi–Wainwright baseline
+//!   the paper compares against in §1.
+//! - [`risk`] — closed-form bias²/variance risk (eq. 4) for both exact and
+//!   Nyström estimators, used to reproduce Table 1's risk ratios.
+
+pub mod dnc;
+pub mod logistic;
+pub mod risk;
+
+pub use dnc::DivideAndConquerKrr;
+pub use logistic::{NystromLogistic, NystromLogisticConfig};
+
+use crate::kernel::{Kernel, KernelFn, KernelKind};
+use crate::linalg::{Cholesky, Mat};
+use crate::nystrom::NystromFactor;
+use crate::rng::Pcg64;
+use crate::sketch::{draw_columns, strategy_distribution, SketchStrategy};
+use crate::util::{Error, Result};
+
+/// Exact kernel ridge regression (the baseline everything is measured
+/// against).
+#[derive(Debug, Clone)]
+pub struct ExactKrr {
+    kernel: KernelFn,
+    lambda: f64,
+    x_train: Mat,
+    alpha: Vec<f64>,
+    fitted: Vec<f64>,
+}
+
+impl ExactKrr {
+    /// Fit on (x, y): one Cholesky of `K + nλI`.
+    pub fn fit(x: &Mat, y: &[f64], kind: KernelKind, lambda: f64) -> Result<Self> {
+        Self::fit_with_kmat(x, y, kind, lambda, None)
+    }
+
+    /// Fit reusing a precomputed kernel matrix (experiments compute K once
+    /// and share it across estimators).
+    pub fn fit_with_kmat(
+        x: &Mat,
+        y: &[f64],
+        kind: KernelKind,
+        lambda: f64,
+        kmat: Option<&Mat>,
+    ) -> Result<Self> {
+        let n = x.rows();
+        if y.len() != n {
+            return Err(Error::invalid(format!("y length {} != n {}", y.len(), n)));
+        }
+        if lambda <= 0.0 {
+            return Err(Error::invalid("lambda must be > 0"));
+        }
+        let kernel = KernelFn::new(kind);
+        let owned;
+        let km = match kmat {
+            Some(k) => k,
+            None => {
+                owned = kernel.matrix(x);
+                &owned
+            }
+        };
+        let mut reg = km.clone();
+        reg.symmetrize();
+        reg.add_scaled_identity(n as f64 * lambda);
+        let ch = Cholesky::new_with_jitter(&reg)?;
+        let alpha = ch.solve_vec(y);
+        let fitted = km.matvec(&alpha);
+        Ok(Self { kernel, lambda, x_train: x.clone(), alpha, fitted })
+    }
+
+    /// In-sample fitted values `f̂(x_i) = (Kα)_i`.
+    pub fn fitted(&self) -> &[f64] {
+        &self.fitted
+    }
+
+    /// The dual coefficients α.
+    pub fn alpha(&self) -> &[f64] {
+        &self.alpha
+    }
+
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    /// Predict on new points: `f̂(x) = k(x, X_train)·α`.
+    pub fn predict(&self, x_new: &Mat) -> Vec<f64> {
+        let kx = self.kernel.cross(x_new, &self.x_train);
+        kx.matvec(&self.alpha)
+    }
+}
+
+/// Configuration for the Nyström KRR estimator.
+#[derive(Debug, Clone)]
+pub struct NystromKrrConfig {
+    /// Ridge parameter λ (the paper's convention: the ridge added is nλ).
+    pub lambda: f64,
+    /// Number of sampled columns p.
+    pub p: usize,
+    /// Column-sampling strategy.
+    pub strategy: SketchStrategy,
+    /// If > 0, use the regularized approximation
+    /// `L_γ = KS(SᵀKS + nγI)^{-1}SᵀK` with γ = `gamma` (Theorem 3's remark:
+    /// with γ = λε no extra condition on λ is needed). 0 → pseudo-inverse.
+    pub gamma: f64,
+    /// RNG seed for the column draw.
+    pub seed: u64,
+}
+
+impl Default for NystromKrrConfig {
+    fn default() -> Self {
+        Self {
+            lambda: 1e-3,
+            p: 64,
+            strategy: SketchStrategy::default(),
+            gamma: 0.0,
+            seed: 0,
+        }
+    }
+}
+
+/// Nyström-approximate KRR (the paper's estimator `f̂_L`).
+#[derive(Debug, Clone)]
+pub struct NystromKrr {
+    kernel: KernelFn,
+    lambda: f64,
+    x_train: Mat,
+    factor: NystromFactor,
+    /// Primal weights θ = (BᵀB + nλI)^{-1} Bᵀ y ∈ ℝ^p.
+    theta: Vec<f64>,
+    fitted: Vec<f64>,
+}
+
+impl NystromKrr {
+    /// Fit with a fresh column draw per `cfg`.
+    pub fn fit(x: &Mat, y: &[f64], kind: KernelKind, cfg: &NystromKrrConfig) -> Result<Self> {
+        Self::fit_with_kmat(x, y, kind, cfg, None)
+    }
+
+    /// Fit, optionally reusing a precomputed kernel matrix for the sampling
+    /// distribution (only the exact-leverage strategy requires it).
+    pub fn fit_with_kmat(
+        x: &Mat,
+        y: &[f64],
+        kind: KernelKind,
+        cfg: &NystromKrrConfig,
+        kmat: Option<&Mat>,
+    ) -> Result<Self> {
+        let n = x.rows();
+        if y.len() != n {
+            return Err(Error::invalid(format!("y length {} != n {}", y.len(), n)));
+        }
+        if cfg.lambda <= 0.0 {
+            return Err(Error::invalid("lambda must be > 0"));
+        }
+        if cfg.p == 0 || cfg.p > n {
+            return Err(Error::invalid(format!("p must be in [1, n], got {}", cfg.p)));
+        }
+        let kernel = KernelFn::new(kind);
+        let mut rng = Pcg64::new(cfg.seed);
+        let dist =
+            strategy_distribution(cfg.strategy, &kernel, x, kmat, cfg.lambda, &mut rng)?;
+        let sketch = draw_columns(&dist, cfg.p, &mut rng)?;
+        let factor = if cfg.gamma > 0.0 {
+            NystromFactor::from_sketch_regularized(
+                &kernel,
+                x,
+                &sketch,
+                n as f64 * cfg.gamma,
+            )?
+        } else {
+            NystromFactor::from_sketch(&kernel, x, &sketch)?
+        };
+        Self::from_factor(x.clone(), y, kernel, cfg.lambda, factor)
+    }
+
+    /// Fit from a prebuilt factor (shared with leverage computation — the
+    /// coordinator's training pipeline reuses one factor for both).
+    pub fn from_factor(
+        x_train: Mat,
+        y: &[f64],
+        kernel: KernelFn,
+        lambda: f64,
+        factor: NystromFactor,
+    ) -> Result<Self> {
+        let n = x_train.rows();
+        let nl = n as f64 * lambda;
+        // θ = (BᵀB + nλI)^{-1} Bᵀ y — p×p solve.
+        let mut btb = factor.btb();
+        btb.add_scaled_identity(nl);
+        let ch = Cholesky::new_with_jitter(&btb)?;
+        let bty = factor.b().matvec_t(y);
+        let theta = ch.solve_vec(&bty);
+        // Fitted values f̂ = L(L+nλI)^{-1} y = B θ  (matrix-inversion lemma).
+        let fitted = factor.b().matvec(&theta);
+        Ok(Self { kernel, lambda, x_train, factor, theta, fitted })
+    }
+
+    /// In-sample fitted values `f̂(x_i) = (Lα_L)_i = (Bθ)_i`.
+    pub fn fitted(&self) -> &[f64] {
+        &self.fitted
+    }
+
+    /// The p-dimensional primal weights θ.
+    pub fn theta(&self) -> &[f64] {
+        &self.theta
+    }
+
+    /// The underlying Nyström factor.
+    pub fn factor(&self) -> &NystromFactor {
+        &self.factor
+    }
+
+    pub fn lambda(&self) -> f64 {
+        self.lambda
+    }
+
+    pub fn kernel(&self) -> &KernelFn {
+        &self.kernel
+    }
+
+    /// Landmark points (for export to the serving artifacts).
+    pub fn landmarks(&self) -> Mat {
+        self.x_train.select_rows(self.factor.indices())
+    }
+
+    /// Out-of-sample prediction via the Nyström extension:
+    /// `f̂(x) = φ̃(x)·θ` with `φ̃` the factor's feature map — O(pd + p²) per
+    /// point, independent of n.
+    pub fn predict(&self, x_new: &Mat) -> Vec<f64> {
+        let feats = self.factor.features(&self.kernel, &self.x_train, x_new);
+        feats.matvec(&self.theta)
+    }
+
+    /// The effective dual vector `α_L = (L + nλI)^{-1} y` (n-dimensional;
+    /// used by the risk formulas and diagnostics).
+    pub fn alpha(&self, y: &[f64]) -> Vec<f64> {
+        let n = self.x_train.rows();
+        let nl = n as f64 * self.lambda;
+        // α = (y − Bθ)/(nλ) by the matrix-inversion lemma.
+        y.iter()
+            .zip(&self.fitted)
+            .map(|(yi, fi)| (yi - fi) / nl)
+            .collect()
+    }
+}
+
+/// Mean squared error between two vectors.
+pub fn mse(a: &[f64], b: &[f64]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    if a.is_empty() {
+        return 0.0;
+    }
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+        / a.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::Kernel;
+
+    fn toy(n: usize, seed: u64) -> (Mat, Vec<f64>) {
+        let mut rng = Pcg64::new(seed);
+        let x = Mat::from_fn(n, 2, |_, _| rng.normal());
+        let y: Vec<f64> = (0..n)
+            .map(|i| (x[(i, 0)] * 1.5 - x[(i, 1)]).sin() + 0.05 * rng.normal())
+            .collect();
+        (x, y)
+    }
+
+    #[test]
+    fn exact_krr_solves_normal_equations() {
+        let (x, y) = toy(30, 1);
+        let kind = KernelKind::Rbf { bandwidth: 1.0 };
+        let m = ExactKrr::fit(&x, &y, kind, 0.01).unwrap();
+        // (K + nλI) α = y
+        let k = KernelFn::new(kind).matrix(&x);
+        let mut reg = k.clone();
+        reg.add_scaled_identity(30.0 * 0.01);
+        let lhs = reg.matvec(m.alpha());
+        for (a, b) in lhs.iter().zip(&y) {
+            assert!((a - b).abs() < 1e-7);
+        }
+        // fitted = K α
+        let f = k.matvec(m.alpha());
+        for (a, b) in f.iter().zip(m.fitted()) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn exact_krr_interpolates_at_tiny_lambda() {
+        let (x, y) = toy(20, 2);
+        let m = ExactKrr::fit(&x, &y, KernelKind::Rbf { bandwidth: 1.0 }, 1e-10).unwrap();
+        let err = mse(m.fitted(), &y);
+        assert!(err < 1e-6, "should nearly interpolate: mse={err}");
+    }
+
+    #[test]
+    fn exact_predict_matches_fitted_on_train() {
+        let (x, y) = toy(25, 3);
+        let m = ExactKrr::fit(&x, &y, KernelKind::Rbf { bandwidth: 1.3 }, 0.01).unwrap();
+        let p = m.predict(&x);
+        for (a, b) in p.iter().zip(m.fitted()) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn nystrom_with_full_sketch_matches_exact() {
+        let (x, y) = toy(20, 4);
+        let kind = KernelKind::Rbf { bandwidth: 1.0 };
+        let exact = ExactKrr::fit(&x, &y, kind, 0.05).unwrap();
+        // p = n with uniform sampling → with replacement we may miss some
+        // columns, so instead use a manual all-columns sketch via from_factor.
+        let kernel = KernelFn::new(kind);
+        let sketch = crate::sketch::ColumnSketch {
+            indices: (0..20).collect(),
+            weights: vec![1.0; 20],
+            probs: vec![0.05; 20],
+        };
+        let factor = NystromFactor::from_sketch(&kernel, &x, &sketch).unwrap();
+        let ny = NystromKrr::from_factor(x.clone(), &y, kernel, 0.05, factor).unwrap();
+        for (a, b) in ny.fitted().iter().zip(exact.fitted()) {
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+        }
+        // Predictions on fresh points agree too.
+        let (xt, _) = toy(7, 99);
+        let pa = ny.predict(&xt);
+        let pb = exact.predict(&xt);
+        for (a, b) in pa.iter().zip(&pb) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn nystrom_close_to_exact_with_good_p() {
+        let (x, y) = toy(60, 5);
+        let kind = KernelKind::Rbf { bandwidth: 1.5 };
+        let exact = ExactKrr::fit(&x, &y, kind, 0.02).unwrap();
+        let cfg = NystromKrrConfig {
+            lambda: 0.02,
+            p: 40,
+            strategy: SketchStrategy::ApproxRidgeLeverage { oversample: 2.0 },
+            gamma: 0.0,
+            seed: 6,
+        };
+        let ny = NystromKrr::fit(&x, &y, kind, &cfg).unwrap();
+        let err = mse(ny.fitted(), exact.fitted());
+        let scale = mse(exact.fitted(), &vec![0.0; 60]);
+        assert!(err < 0.05 * scale.max(1e-3), "err {err} scale {scale}");
+    }
+
+    #[test]
+    fn nystrom_alpha_consistency() {
+        // f̂ = Lα and α = (y − f̂)/(nλ) must satisfy (L + nλI)α = y.
+        let (x, y) = toy(25, 7);
+        let kind = KernelKind::Rbf { bandwidth: 1.0 };
+        let cfg = NystromKrrConfig {
+            lambda: 0.05,
+            p: 15,
+            strategy: SketchStrategy::Uniform,
+            gamma: 0.0,
+            seed: 8,
+        };
+        let ny = NystromKrr::fit(&x, &y, kind, &cfg).unwrap();
+        let alpha = ny.alpha(&y);
+        let l_alpha = ny.factor().apply(&alpha);
+        for i in 0..25 {
+            let lhs = l_alpha[i] + 25.0 * 0.05 * alpha[i];
+            assert!((lhs - y[i]).abs() < 1e-7, "i={i}");
+        }
+        // And fitted = Lα.
+        for (a, b) in l_alpha.iter().zip(ny.fitted()) {
+            assert!((a - b).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn all_strategies_fit() {
+        let (x, y) = toy(40, 9);
+        let kind = KernelKind::Rbf { bandwidth: 1.0 };
+        let kernel = KernelFn::new(kind);
+        let km = kernel.matrix(&x);
+        for strategy in [
+            SketchStrategy::Uniform,
+            SketchStrategy::DiagK,
+            SketchStrategy::ExactRidgeLeverage,
+            SketchStrategy::ApproxRidgeLeverage { oversample: 1.5 },
+        ] {
+            let cfg = NystromKrrConfig {
+                lambda: 0.05,
+                p: 20,
+                strategy,
+                gamma: 0.0,
+                seed: 10,
+            };
+            let ny = NystromKrr::fit_with_kmat(&x, &y, kind, &cfg, Some(&km)).unwrap();
+            assert_eq!(ny.fitted().len(), 40);
+            assert!(ny.fitted().iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn regularized_gamma_variant_fits() {
+        let (x, y) = toy(30, 11);
+        let kind = KernelKind::Rbf { bandwidth: 1.0 };
+        let cfg = NystromKrrConfig {
+            lambda: 0.05,
+            p: 15,
+            strategy: SketchStrategy::Uniform,
+            gamma: 0.05 * 0.5, // γ = λ·ε with ε = 1/2
+            seed: 12,
+        };
+        let ny = NystromKrr::fit(&x, &y, kind, &cfg).unwrap();
+        assert!(ny.factor().gamma() > 0.0);
+        assert!(mse(ny.fitted(), &y) < 1.0);
+    }
+
+    #[test]
+    fn input_validation() {
+        let (x, y) = toy(10, 13);
+        let kind = KernelKind::Linear;
+        assert!(ExactKrr::fit(&x, &y[..5], kind, 0.1).is_err());
+        assert!(ExactKrr::fit(&x, &y, kind, 0.0).is_err());
+        let cfg = NystromKrrConfig { p: 0, ..Default::default() };
+        assert!(NystromKrr::fit(&x, &y, kind, &cfg).is_err());
+        let cfg = NystromKrrConfig { p: 11, ..Default::default() };
+        assert!(NystromKrr::fit(&x, &y, kind, &cfg).is_err());
+    }
+
+    #[test]
+    fn mse_basics() {
+        assert_eq!(mse(&[1.0, 2.0], &[1.0, 4.0]), 2.0);
+        assert_eq!(mse(&[], &[]), 0.0);
+    }
+}

@@ -1,0 +1,232 @@
+//! Closed-form statistical risk (paper eq. 4) for exact and Nyström KRR.
+//!
+//! Under the fixed-design model `y = f* + σξ` with `ξ ~ N(0, I)`:
+//!
+//! `R(f̂_M) = bias(M)² + variance(M)` with
+//!   `bias(M)²   = nλ² ‖(M + nλI)^{-1} f*‖²`
+//!   `variance(M) = (σ²/n)·Tr(M²(M + nλI)^{-2})`
+//!
+//! for the kernel matrix `M ∈ {K, L}`. Table 1's "risk ratio" column is
+//! `R(f̂_L)/R(f̂_K)` evaluated with these formulas, which is exactly how the
+//! theory (Theorem 3) is stated — no Monte-Carlo noise.
+//!
+//! For the Nyström estimator we evaluate both through the factor `B`
+//! (O(np²) via the spectrum of `BᵀB`, never forming L), keeping the paper's
+//! computational claims intact even in the evaluation harness.
+
+use crate::linalg::{eigh, Cholesky, Mat};
+use crate::nystrom::NystromFactor;
+use crate::util::{Error, Result};
+
+/// Bias–variance decomposition of the KRR risk.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Risk {
+    pub bias_sq: f64,
+    pub variance: f64,
+}
+
+impl Risk {
+    pub fn total(&self) -> f64 {
+        self.bias_sq + self.variance
+    }
+}
+
+/// Risk of exact KRR with kernel matrix `K`, target `f*` (values at the
+/// design points) and noise level σ.
+pub fn exact_risk(kmat: &Mat, f_star: &[f64], sigma: f64, lambda: f64) -> Result<Risk> {
+    let n = kmat.rows();
+    if f_star.len() != n {
+        return Err(Error::invalid("f_star length mismatch"));
+    }
+    if lambda <= 0.0 {
+        return Err(Error::invalid("lambda must be > 0"));
+    }
+    let nl = n as f64 * lambda;
+    let mut reg = kmat.clone();
+    reg.symmetrize();
+    reg.add_scaled_identity(nl);
+    let ch = Cholesky::new_with_jitter(&reg)?;
+    // bias² = nλ² ‖(K+nλI)^{-1} f*‖²
+    let r = ch.solve_vec(f_star);
+    let bias_sq = n as f64 * lambda * lambda * crate::linalg::dot(&r, &r);
+    // variance = σ²/n · ‖(K+nλI)^{-1}K‖_F²  (= Tr(K²(K+nλI)^{-2}))
+    // Solve (K+nλI) Z = K  → variance = σ²/n ‖Z‖_F².
+    let z = ch.solve_mat(kmat);
+    let fro2 = z.as_slice().iter().map(|v| v * v).sum::<f64>();
+    let variance = sigma * sigma / n as f64 * fro2;
+    Ok(Risk { bias_sq, variance })
+}
+
+/// Risk of the Nyström estimator `f̂_L`, computed through the factor
+/// `L = BBᵀ` in O(np² + p³).
+///
+/// Using the eigendecomposition `BᵀB = VSVᵀ` (eigenvalues `s_j ≥ 0`):
+/// the nonzero eigenvalues of L are exactly `s_j`, with eigenvectors
+/// `u_j = B v_j / √s_j`, and `(L + nλI)^{-1} = (I − B(BᵀB + nλI)^{-1}Bᵀ)/(nλ)`
+/// (matrix-inversion lemma), so
+///   `bias² = nλ² ‖(L+nλI)^{-1}f*‖² = ‖f* − B(BᵀB+nλI)^{-1}Bᵀf*‖²/n · ... `
+///   `variance = σ²/n Σ_j s_j²/(s_j + nλ)²`.
+pub fn nystrom_risk(
+    factor: &NystromFactor,
+    f_star: &[f64],
+    sigma: f64,
+    lambda: f64,
+) -> Result<Risk> {
+    let n = factor.n();
+    if f_star.len() != n {
+        return Err(Error::invalid("f_star length mismatch"));
+    }
+    if lambda <= 0.0 {
+        return Err(Error::invalid("lambda must be > 0"));
+    }
+    let nl = n as f64 * lambda;
+    // (L + nλI)^{-1} f* = (f* − B(BᵀB+nλI)^{-1}Bᵀ f*) / (nλ)
+    let mut btb = factor.btb();
+    btb.add_scaled_identity(nl);
+    let ch = Cholesky::new_with_jitter(&btb)?;
+    let btf = factor.b().matvec_t(f_star);
+    let t = ch.solve_vec(&btf);
+    let bt = factor.b().matvec(&t);
+    let r: Vec<f64> = f_star
+        .iter()
+        .zip(&bt)
+        .map(|(f, b)| (f - b) / nl)
+        .collect();
+    let bias_sq = n as f64 * lambda * lambda * crate::linalg::dot(&r, &r);
+    // variance via the spectrum of BᵀB (p eigenvalues; the rest of L's
+    // spectrum is zero and contributes nothing).
+    let eig = eigh(&factor.btb())?;
+    let variance = sigma * sigma / n as f64
+        * eig
+            .vals
+            .iter()
+            .map(|&s| {
+                let s = s.max(0.0);
+                let q = s / (s + nl);
+                q * q
+            })
+            .sum::<f64>();
+    Ok(Risk { bias_sq, variance })
+}
+
+/// Convenience: the Table 1 risk ratio `R(f̂_L)/R(f̂_K)`.
+pub fn risk_ratio(
+    kmat: &Mat,
+    factor: &NystromFactor,
+    f_star: &[f64],
+    sigma: f64,
+    lambda: f64,
+) -> Result<f64> {
+    let rk = exact_risk(kmat, f_star, sigma, lambda)?;
+    let rl = nystrom_risk(factor, f_star, sigma, lambda)?;
+    if rk.total() <= 0.0 {
+        return Err(Error::numerical("exact risk is zero"));
+    }
+    Ok(rl.total() / rk.total())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::{Kernel, KernelFn, KernelKind};
+    use crate::rng::Pcg64;
+    use crate::sketch::{draw_columns, ColumnSketch};
+
+    fn setup(n: usize, seed: u64) -> (Mat, KernelFn, Mat, Vec<f64>) {
+        let mut rng = Pcg64::new(seed);
+        let x = Mat::from_fn(n, 2, |_, _| rng.normal());
+        let k = KernelFn::new(KernelKind::Rbf { bandwidth: 1.0 });
+        let km = k.matrix(&x);
+        // f* in the RKHS: K·c for a random c (guarantees representability).
+        let c = rng.normal_vec(n);
+        let f_star = km.matvec(&c);
+        (x, k, km, f_star)
+    }
+
+    /// Monte-Carlo estimate of the exact-KRR risk for cross-validation of
+    /// the closed form.
+    fn mc_exact_risk(km: &Mat, f_star: &[f64], sigma: f64, lambda: f64, trials: usize) -> f64 {
+        let n = km.rows();
+        let mut reg = km.clone();
+        reg.add_scaled_identity(n as f64 * lambda);
+        let ch = Cholesky::new_with_jitter(&reg).unwrap();
+        let mut rng = Pcg64::new(12345);
+        let mut acc = 0.0;
+        for _ in 0..trials {
+            let noise = rng.normal_vec(n);
+            let y: Vec<f64> = f_star
+                .iter()
+                .zip(&noise)
+                .map(|(f, e)| f + sigma * e)
+                .collect();
+            let alpha = ch.solve_vec(&y);
+            let fhat = km.matvec(&alpha);
+            acc += crate::krr::mse(&fhat, f_star);
+        }
+        acc / trials as f64
+    }
+
+    #[test]
+    fn closed_form_matches_monte_carlo() {
+        let (_, _, km, f_star) = setup(25, 1);
+        let (sigma, lambda) = (0.5, 0.05);
+        let closed = exact_risk(&km, &f_star, sigma, lambda).unwrap();
+        let mc = mc_exact_risk(&km, &f_star, sigma, lambda, 800);
+        let rel = (closed.total() - mc).abs() / mc;
+        assert!(rel < 0.1, "closed {} vs mc {} (rel {rel})", closed.total(), mc);
+    }
+
+    #[test]
+    fn nystrom_risk_full_sketch_equals_exact() {
+        let (x, k, km, f_star) = setup(18, 2);
+        let n = x.rows();
+        let sketch = ColumnSketch {
+            indices: (0..n).collect(),
+            weights: vec![1.0; n],
+            probs: vec![1.0 / n as f64; n],
+        };
+        let f = NystromFactor::from_sketch(&k, &x, &sketch).unwrap();
+        let re = exact_risk(&km, &f_star, 0.3, 0.05).unwrap();
+        let rn = nystrom_risk(&f, &f_star, 0.3, 0.05).unwrap();
+        assert!((re.bias_sq - rn.bias_sq).abs() < 1e-5 * re.bias_sq.max(1e-9));
+        assert!((re.variance - rn.variance).abs() < 1e-5 * re.variance.max(1e-9));
+    }
+
+    #[test]
+    fn variance_decreases_under_nystrom() {
+        // §2: variance is matrix-increasing and L ⪯ K ⇒ var(L) ≤ var(K).
+        let (x, k, km, f_star) = setup(30, 3);
+        let mut rng = Pcg64::new(4);
+        let sketch = draw_columns(&vec![1.0; 30], 10, &mut rng).unwrap();
+        let f = NystromFactor::from_sketch(&k, &x, &sketch).unwrap();
+        let re = exact_risk(&km, &f_star, 0.4, 0.03).unwrap();
+        let rn = nystrom_risk(&f, &f_star, 0.4, 0.03).unwrap();
+        assert!(rn.variance <= re.variance + 1e-10);
+        // Bias increases (L ⪯ K makes the estimator more biased).
+        assert!(rn.bias_sq >= re.bias_sq - 1e-10);
+    }
+
+    #[test]
+    fn risk_ratio_close_to_one_with_large_p() {
+        let (x, k, km, f_star) = setup(40, 5);
+        let lev = crate::leverage::exact_ridge_leverage(&km, 0.05).unwrap();
+        let mut rng = Pcg64::new(6);
+        let sketch = draw_columns(&lev.scores, 35, &mut rng).unwrap();
+        let f = NystromFactor::from_sketch(&k, &x, &sketch).unwrap();
+        let ratio = risk_ratio(&km, &f, &f_star, 0.3, 0.05).unwrap();
+        assert!(ratio >= 1.0 - 0.05, "ratio {ratio} (should be >= ~1)");
+        assert!(ratio < 2.0, "ratio {ratio} too large for p≈n");
+    }
+
+    #[test]
+    fn validation_errors() {
+        let (x, k, km, f_star) = setup(10, 7);
+        assert!(exact_risk(&km, &f_star[..5], 0.1, 0.1).is_err());
+        assert!(exact_risk(&km, &f_star, 0.1, 0.0).is_err());
+        let mut rng = Pcg64::new(8);
+        let sketch = draw_columns(&vec![1.0; 10], 5, &mut rng).unwrap();
+        let f = NystromFactor::from_sketch(&k, &x, &sketch).unwrap();
+        assert!(nystrom_risk(&f, &f_star[..3], 0.1, 0.1).is_err());
+        assert!(nystrom_risk(&f, &f_star, 0.1, -0.1).is_err());
+    }
+}

@@ -1,0 +1,326 @@
+//! λ-ridge leverage scores (Definition 1) — exact and fast-approximate.
+//!
+//! - **Exact** (O(n³)): `l_i(λ) = (K (K + nλI)^{-1})_{ii}
+//!   = 1 − nλ·((K + nλI)^{-1})_{ii}` via one Cholesky factorization and
+//!   parallel triangular solves — no eigendecomposition needed.
+//! - **Fast** (O(np²), §3.5 / Theorem 4): sample p columns ∝ `K_ii/Tr(K)`,
+//!   form the Nyström factor `B` (`BBᵀ = CW⁺Cᵀ`), then
+//!   `l̃_i = B_iᵀ (BᵀB + nλI)^{-1} B_i`. Theorem 4:
+//!   `l_i(λ) − 2ε ≤ l̃_i ≤ l_i(λ)` once
+//!   `p ≥ 8(Tr(K)/(nλε) + 1/6)·log(n/ρ)`.
+//!
+//! Derived quantities: `d_eff(λ) = Σᵢ l_i(λ)` (effective dimensionality) and
+//! `d_mof(λ) = n·maxᵢ l_i(λ)` (Bach's maximal degrees of freedom); the
+//! paper's headline is that sketch sizes scale with `d_eff`, not `d_mof`.
+
+use crate::kernel::Kernel;
+use crate::linalg::{Cholesky, Mat};
+use crate::nystrom::NystromFactor;
+use crate::rng::Pcg64;
+use crate::sketch::{draw_columns, ColumnSketch};
+use crate::util::{Error, Result};
+
+/// Ridge leverage scores plus their summary statistics.
+#[derive(Debug, Clone)]
+pub struct RidgeLeverage {
+    /// `l_i(λ)` for every data point, each in (0, 1).
+    pub scores: Vec<f64>,
+    /// `d_eff = Σ l_i(λ) = Tr(K(K+nλI)^{-1})`.
+    pub d_eff: f64,
+    /// `d_mof = n · max_i l_i(λ)`.
+    pub d_mof: f64,
+    /// The λ the scores were computed at.
+    pub lambda: f64,
+}
+
+impl RidgeLeverage {
+    fn from_scores(scores: Vec<f64>, lambda: f64) -> Self {
+        let d_eff = scores.iter().sum();
+        let max = scores.iter().fold(0.0f64, |a, &b| a.max(b));
+        let d_mof = scores.len() as f64 * max;
+        Self { scores, d_eff, d_mof, lambda }
+    }
+
+    /// Minimum score (the `l̲` of Theorem 3's λ condition).
+    pub fn min_score(&self) -> f64 {
+        self.scores.iter().fold(f64::INFINITY, |a, &b| a.min(b))
+    }
+}
+
+/// Exact λ-ridge leverage scores from the full kernel matrix.
+///
+/// `l_i(λ) = 1 − nλ·((K+nλI)^{-1})_{ii}` — one Cholesky + n parallel
+/// column solves; O(n³) time, O(n²) memory.
+pub fn exact_ridge_leverage(kmat: &Mat, lambda: f64) -> Result<RidgeLeverage> {
+    if !kmat.is_square() {
+        return Err(Error::invalid("kernel matrix must be square"));
+    }
+    if lambda <= 0.0 {
+        return Err(Error::invalid("lambda must be > 0"));
+    }
+    let n = kmat.rows();
+    let nl = n as f64 * lambda;
+    let mut reg = kmat.clone();
+    reg.symmetrize();
+    reg.add_scaled_identity(nl);
+    let ch = Cholesky::new_with_jitter(&reg)?;
+    let inv_diag = ch.inverse_diagonal();
+    let scores: Vec<f64> = inv_diag
+        .iter()
+        .map(|&d| (1.0 - nl * d).clamp(0.0, 1.0))
+        .collect();
+    Ok(RidgeLeverage::from_scores(scores, lambda))
+}
+
+/// Result of the fast approximation: scores plus the sketch that produced
+/// them (reusable as the Nyström skeleton) and the factor B.
+#[derive(Debug, Clone)]
+pub struct ApproxRidgeLeverage {
+    /// `l̃_i` — approximation with `l_i − 2ε ≤ l̃_i ≤ l_i` (Theorem 4).
+    pub scores: Vec<f64>,
+    /// `Σ l̃_i ≤ d_eff` (plug-in estimate of the effective dimensionality).
+    pub d_eff_estimate: f64,
+    /// The diag-K column sketch used to build the approximation.
+    pub sketch: ColumnSketch,
+    /// λ the scores approximate.
+    pub lambda: f64,
+}
+
+/// Fast approximation of the λ-ridge leverage scores (§3.5 algorithm).
+///
+/// Samples `p` columns ∝ `K_ii/Tr(K)` (squared feature lengths), builds the
+/// Nyström factor `B` with `BBᵀ = CW⁺Cᵀ`, and evaluates
+/// `l̃_i = B_iᵀ(BᵀB + nλI)^{-1}B_i` for all i — total O(np² + p³).
+///
+/// The full kernel matrix is never formed; only `diag(K)` and `p` columns
+/// are evaluated (`O(np)` kernel evaluations).
+pub fn approx_ridge_leverage(
+    kernel: &dyn Kernel,
+    x: &Mat,
+    lambda: f64,
+    p: usize,
+    rng: &mut Pcg64,
+) -> Result<ApproxRidgeLeverage> {
+    if lambda <= 0.0 {
+        return Err(Error::invalid("lambda must be > 0"));
+    }
+    let n = x.rows();
+    if p == 0 || n == 0 {
+        return Err(Error::invalid("need n >= 1 and p >= 1"));
+    }
+    // Step 1-2: sample p indices ∝ K_ii (squared-length sampling).
+    let diag = kernel.diag(x);
+    let sketch = draw_columns(&diag, p, rng)?;
+    // Step 3-4: B with BBᵀ = C W⁺ Cᵀ (jittered-Cholesky fast path; the
+    // eigh pseudo-inverse variant is `NystromFactor::from_sketch`).
+    let factor = NystromFactor::from_sketch_fast(kernel, x, &sketch)?;
+    let scores = leverage_from_factor(&factor, lambda)?;
+    let d_eff_estimate = scores.iter().sum();
+    Ok(ApproxRidgeLeverage { scores, d_eff_estimate, sketch, lambda })
+}
+
+/// Step 5 of the §3.5 algorithm given a prebuilt factor: computes
+/// `l̃_i = B_iᵀ (BᵀB + nλI)^{-1} B_i` for all rows of B in O(np²).
+///
+/// This is the hot loop that the L1 Pallas kernel (`nystrom_feats.py`)
+/// implements on-device: `diag(B · M · Bᵀ)` with `M = (BᵀB + nλI)^{-1}`
+/// kept VMEM-resident; here it is the blocked matmul + row-dot sequence.
+pub fn leverage_from_factor(factor: &NystromFactor, lambda: f64) -> Result<Vec<f64>> {
+    let n = factor.n();
+    let nl = n as f64 * lambda;
+    let mut btb = factor.btb();
+    btb.add_scaled_identity(nl);
+    let ch = Cholesky::new_with_jitter(&btb)?;
+    let m = ch.inverse(); // p×p
+    // scores_i = B_i M B_iᵀ = rowdot(B M, B)
+    let bm = crate::linalg::matmul(factor.b(), &m);
+    let b = factor.b();
+    let scores = crate::util::parallel::par_fill(n, 128, |i| {
+        crate::linalg::dot(bm.row(i), b.row(i)).clamp(0.0, 1.0)
+    });
+    Ok(scores)
+}
+
+/// Theorem 4's sufficient sketch size
+/// `p = 8(Tr(K)/(nλε) + 1/6)·log(n/ρ)` with ε = 1/2, ρ = 0.1, scaled by
+/// `oversample` and clamped to [8, n].
+pub fn theorem4_sketch_size(
+    kernel: &dyn Kernel,
+    x: &Mat,
+    kmat: Option<&Mat>,
+    lambda: f64,
+    oversample: f64,
+) -> usize {
+    let n = x.rows();
+    if n == 0 {
+        return 8;
+    }
+    let trace: f64 = match kmat {
+        Some(k) => k.trace(),
+        None => kernel.diag(x).iter().sum(),
+    };
+    let eps = 0.5;
+    let rho = 0.1;
+    let nl = n as f64 * lambda;
+    let p = 8.0 * (trace / (nl * eps) + 1.0 / 6.0) * (n as f64 / rho).ln();
+    ((p * oversample).ceil() as usize).clamp(8, n)
+}
+
+/// Theorem 3's sufficient sketch size `p = 8(d_eff/β + 1/6)·log(n/ρ)`.
+pub fn theorem3_sketch_size(d_eff: f64, beta: f64, n: usize, rho: f64) -> usize {
+    let p = 8.0 * (d_eff / beta + 1.0 / 6.0) * (n as f64 / rho).ln();
+    (p.ceil() as usize).clamp(1, n)
+}
+
+/// Effective dimensionality directly from a kernel matrix (convenience for
+/// reports): `d_eff(λ) = Tr(K(K+nλI)^{-1}) = n − nλ·Tr((K+nλI)^{-1})`.
+pub fn effective_dimension(kmat: &Mat, lambda: f64) -> Result<f64> {
+    Ok(exact_ridge_leverage(kmat, lambda)?.d_eff)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::{Kernel, KernelFn, KernelKind};
+    use crate::linalg::eigh;
+
+    fn setup(n: usize, seed: u64, bw: f64) -> (Mat, KernelFn, Mat) {
+        let mut rng = Pcg64::new(seed);
+        let x = Mat::from_fn(n, 2, |_, _| rng.normal());
+        let k = KernelFn::new(KernelKind::Rbf { bandwidth: bw });
+        let km = k.matrix(&x);
+        (x, k, km)
+    }
+
+    /// Reference implementation via eigendecomposition (Definition 1).
+    fn exact_via_eigh(km: &Mat, lambda: f64) -> Vec<f64> {
+        let n = km.rows();
+        let mut s = km.clone();
+        s.symmetrize();
+        let eig = eigh(&s).unwrap();
+        let nl = n as f64 * lambda;
+        (0..n)
+            .map(|i| {
+                (0..n)
+                    .map(|j| {
+                        let sj = eig.vals[j].max(0.0);
+                        sj / (sj + nl) * eig.vecs[(i, j)] * eig.vecs[(i, j)]
+                    })
+                    .sum()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn exact_matches_definition_one() {
+        let (_, _, km) = setup(30, 1, 1.0);
+        let lambda = 0.05;
+        let lev = exact_ridge_leverage(&km, lambda).unwrap();
+        let want = exact_via_eigh(&km, lambda);
+        for (a, b) in lev.scores.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-8, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn d_eff_equals_trace_formula() {
+        let (_, _, km) = setup(25, 2, 0.8);
+        let lambda = 0.1;
+        let lev = exact_ridge_leverage(&km, lambda).unwrap();
+        // d_eff = Σ σ_j/(σ_j + nλ)
+        let mut s = km.clone();
+        s.symmetrize();
+        let eig = eigh(&s).unwrap();
+        let nl = 25.0 * lambda;
+        let want: f64 = eig.vals.iter().map(|&v| v.max(0.0) / (v.max(0.0) + nl)).sum();
+        assert!((lev.d_eff - want).abs() < 1e-8);
+        assert!(lev.d_mof >= lev.d_eff - 1e-12, "d_mof >= d_eff");
+    }
+
+    #[test]
+    fn scores_in_unit_interval_and_monotone_in_lambda() {
+        let (_, _, km) = setup(20, 3, 1.2);
+        let l1 = exact_ridge_leverage(&km, 0.01).unwrap();
+        let l2 = exact_ridge_leverage(&km, 0.1).unwrap();
+        for (a, b) in l1.scores.iter().zip(&l2.scores) {
+            assert!(*a >= 0.0 && *a <= 1.0);
+            assert!(*b <= *a + 1e-10, "score must shrink as λ grows");
+        }
+        assert!(l2.d_eff <= l1.d_eff);
+    }
+
+    #[test]
+    fn approx_upper_bounded_by_exact() {
+        // Theorem 4: l̃_i ≤ l_i(λ) always (L ⪯ K + matrix monotonicity).
+        let (x, k, km) = setup(40, 4, 1.0);
+        let lambda = 0.05;
+        let exact = exact_ridge_leverage(&km, lambda).unwrap();
+        let mut rng = Pcg64::new(5);
+        let approx = approx_ridge_leverage(&k, &x, lambda, 30, &mut rng).unwrap();
+        for (i, (a, e)) in approx.scores.iter().zip(&exact.scores).enumerate() {
+            assert!(*a <= *e + 1e-6, "i={i}: l̃={a} > l={e}");
+        }
+        assert!(approx.d_eff_estimate <= exact.d_eff + 1e-6);
+    }
+
+    #[test]
+    fn approx_converges_with_p() {
+        let (x, k, km) = setup(50, 6, 1.0);
+        let lambda = 0.02;
+        let exact = exact_ridge_leverage(&km, lambda).unwrap();
+        let mut rng = Pcg64::new(7);
+        // With p = n (sampling everything many times) the additive error is tiny.
+        let approx = approx_ridge_leverage(&k, &x, lambda, 200, &mut rng).unwrap();
+        let max_err: f64 = approx
+            .scores
+            .iter()
+            .zip(&exact.scores)
+            .map(|(a, e)| (e - a).abs())
+            .fold(0.0, f64::max);
+        assert!(max_err < 0.05, "max additive error {max_err}");
+    }
+
+    #[test]
+    fn full_factor_reproduces_exact_scores() {
+        // If the "approximation" uses all columns once (sketch = identity),
+        // l̃ must equal l exactly.
+        let (x, k, km) = setup(15, 8, 1.0);
+        let lambda = 0.05;
+        let n = x.rows();
+        let sketch = ColumnSketch {
+            indices: (0..n).collect(),
+            weights: vec![1.0; n],
+            probs: vec![1.0 / n as f64; n],
+        };
+        let f = NystromFactor::from_sketch(&k, &x, &sketch).unwrap();
+        let approx = leverage_from_factor(&f, lambda).unwrap();
+        let exact = exact_ridge_leverage(&km, lambda).unwrap();
+        for (a, e) in approx.iter().zip(&exact.scores) {
+            assert!((a - e).abs() < 1e-6, "{a} vs {e}");
+        }
+    }
+
+    #[test]
+    fn sketch_sizes_sane() {
+        let (x, k, km) = setup(100, 9, 1.0);
+        let p = theorem4_sketch_size(&k, &x, Some(&km), 0.05, 1.0);
+        assert!(p >= 8 && p <= 100);
+        let p2 = theorem4_sketch_size(&k, &x, None, 0.05, 1.0);
+        assert_eq!(p, p2, "diag-based trace must match matrix trace");
+        let p3 = theorem3_sketch_size(10.0, 1.0, 1000, 0.1);
+        assert!(p3 >= 100, "8*10*log(10000) ≈ 750");
+        assert!(theorem3_sketch_size(1e9, 1.0, 50, 0.1) == 50, "clamped to n");
+    }
+
+    #[test]
+    fn rejects_bad_args() {
+        let (x, k, km) = setup(10, 10, 1.0);
+        assert!(exact_ridge_leverage(&km, 0.0).is_err());
+        assert!(exact_ridge_leverage(&Mat::zeros(2, 3), 0.1).is_err());
+        let mut rng = Pcg64::new(11);
+        assert!(approx_ridge_leverage(&k, &x, -1.0, 5, &mut rng).is_err());
+        assert!(approx_ridge_leverage(&k, &x, 0.1, 0, &mut rng).is_err());
+    }
+
+    use crate::sketch::ColumnSketch;
+}

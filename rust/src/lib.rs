@@ -1,0 +1,54 @@
+//! # fastkrr
+//!
+//! Production reproduction of **"Fast Randomized Kernel Methods With
+//! Statistical Guarantees"** (El Alaoui & Mahoney, 2014) as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! The paper shows that Nyström approximation of kernel ridge regression
+//! (KRR) with columns sampled proportionally to the **λ-ridge leverage
+//! scores** `l_i(λ) = diag(K (K + nλI)^{-1})_i` needs only
+//! `p = O(d_eff log n)` columns — where `d_eff = Σ l_i(λ)` is the effective
+//! dimensionality — to match the statistical risk of exact KRR within
+//! `(1 + 2ε)²`, and gives an `O(np²)` algorithm to approximate those scores.
+//!
+//! ## Layers
+//!
+//! - **L3 (this crate)** — coordinator: training pipeline, sketching
+//!   strategies, dynamic batching prediction service, CLI, config, metrics,
+//!   and all dense-math substrates (from scratch: no external linalg).
+//! - **L2 (python/compile/model.py)** — JAX compute graphs lowered AOT to
+//!   HLO text artifacts.
+//! - **L1 (python/compile/kernels/)** — Pallas kernels for the pairwise
+//!   kernel block and Nyström leverage scoring (interpret=True on CPU).
+//! - **Runtime ([`runtime`])** — loads `artifacts/*.hlo.txt` via the PJRT
+//!   CPU client (`xla` crate) and executes them from the Rust hot path.
+
+pub mod cli;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod experiments;
+pub mod kernel;
+pub mod krr;
+pub mod leverage;
+pub mod linalg;
+pub mod metrics;
+pub mod nystrom;
+pub mod rng;
+pub mod runtime;
+pub mod server;
+pub mod sketch;
+pub mod testing;
+pub mod util;
+
+/// Convenience re-exports for downstream users and examples.
+pub mod prelude {
+    pub use crate::data::Dataset;
+    pub use crate::kernel::{Kernel, KernelKind};
+    pub use crate::krr::{ExactKrr, NystromKrr, NystromKrrConfig};
+    pub use crate::leverage::{approx_ridge_leverage, exact_ridge_leverage, RidgeLeverage};
+    pub use crate::linalg::Mat;
+    pub use crate::nystrom::NystromFactor;
+    pub use crate::rng::Pcg64;
+    pub use crate::sketch::SketchStrategy;
+}

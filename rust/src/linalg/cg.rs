@@ -1,0 +1,181 @@
+//! Conjugate gradients for SPD systems — the iterative alternative to the
+//! Cholesky path for exact KRR at scales where O(n³) is prohibitive but a
+//! matvec oracle is cheap (e.g. through the Nyström operator `L·v = B(Bᵀv)`
+//! or a matrix-free kernel matvec).
+//!
+//! Used by `ExactKrr`-scale baselines in the benches and available through
+//! the public API for users with structured kernels.
+
+use super::Mat;
+use crate::util::{Error, Result};
+
+/// CG outcome.
+#[derive(Debug, Clone)]
+pub struct CgResult {
+    pub x: Vec<f64>,
+    pub iterations: usize,
+    pub residual_norm: f64,
+    pub converged: bool,
+}
+
+/// Solve `A x = b` with A SPD given as a matvec closure.
+/// Stops at `‖r‖ ≤ tol·‖b‖` or `max_iter`.
+pub fn cg_solve(
+    matvec: impl Fn(&[f64]) -> Vec<f64>,
+    b: &[f64],
+    tol: f64,
+    max_iter: usize,
+) -> Result<CgResult> {
+    let n = b.len();
+    if n == 0 {
+        return Err(Error::invalid("empty system"));
+    }
+    if tol <= 0.0 {
+        return Err(Error::invalid("tol must be > 0"));
+    }
+    let bnorm = super::vec_norm(b).max(1e-300);
+    let mut x = vec![0.0f64; n];
+    let mut r = b.to_vec();
+    let mut p = r.clone();
+    let mut rs_old = super::dot(&r, &r);
+    let mut iterations = 0;
+    for _ in 0..max_iter {
+        if rs_old.sqrt() <= tol * bnorm {
+            break;
+        }
+        iterations += 1;
+        let ap = matvec(&p);
+        if ap.len() != n {
+            return Err(Error::invalid("matvec changed dimension"));
+        }
+        let pap = super::dot(&p, &ap);
+        if pap <= 0.0 || !pap.is_finite() {
+            return Err(Error::numerical(format!(
+                "CG: non-SPD direction (pᵀAp = {pap:.3e})"
+            )));
+        }
+        let alpha = rs_old / pap;
+        for i in 0..n {
+            x[i] += alpha * p[i];
+            r[i] -= alpha * ap[i];
+        }
+        let rs_new = super::dot(&r, &r);
+        let beta = rs_new / rs_old;
+        for i in 0..n {
+            p[i] = r[i] + beta * p[i];
+        }
+        rs_old = rs_new;
+    }
+    let residual_norm = rs_old.sqrt();
+    Ok(CgResult {
+        x,
+        iterations,
+        residual_norm,
+        converged: residual_norm <= tol * bnorm,
+    })
+}
+
+/// Convenience: CG on a dense SPD matrix.
+pub fn cg_solve_dense(a: &Mat, b: &[f64], tol: f64, max_iter: usize) -> Result<CgResult> {
+    if !a.is_square() || a.rows() != b.len() {
+        return Err(Error::invalid("cg_solve_dense shape mismatch"));
+    }
+    cg_solve(|v| a.matvec(v), b, tol, max_iter)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::{syrk_at_a, Cholesky};
+    use crate::rng::Pcg64;
+
+    fn spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        let g = Mat::from_fn(n + 4, n, |_, _| rng.normal());
+        let mut a = syrk_at_a(&g);
+        a.add_scaled_identity(1.0);
+        a
+    }
+
+    #[test]
+    fn matches_cholesky() {
+        let a = spd(40, 1);
+        let mut rng = Pcg64::new(2);
+        let b = rng.normal_vec(40);
+        let want = Cholesky::new(&a).unwrap().solve_vec(&b);
+        let got = cg_solve_dense(&a, &b, 1e-12, 1000).unwrap();
+        assert!(got.converged);
+        for (x, y) in got.x.iter().zip(&want) {
+            assert!((x - y).abs() < 1e-7, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn exact_in_n_iterations() {
+        // CG terminates in ≤ n steps in exact arithmetic; with f64 round-off
+        // allow a small slack.
+        let a = spd(25, 3);
+        let mut rng = Pcg64::new(4);
+        let b = rng.normal_vec(25);
+        let got = cg_solve_dense(&a, &b, 1e-10, 40).unwrap();
+        assert!(got.converged, "iters {}", got.iterations);
+        assert!(got.iterations <= 35);
+    }
+
+    #[test]
+    fn nystrom_operator_matvec() {
+        // Matrix-free: solve (L + nλ)α = y through the factor, verify via
+        // the dense L.
+        let mut rng = Pcg64::new(5);
+        let x = Mat::from_fn(30, 3, |_, _| rng.normal());
+        let kernel =
+            crate::kernel::KernelFn::new(crate::kernel::KernelKind::Rbf { bandwidth: 1.0 });
+        let sketch = crate::sketch::draw_columns(&vec![1.0; 30], 10, &mut rng).unwrap();
+        let f = crate::nystrom::NystromFactor::from_sketch(&kernel, &x, &sketch).unwrap();
+        let y = rng.normal_vec(30);
+        let nl = 30.0 * 0.05;
+        let got = cg_solve(
+            |v| {
+                let mut lv = f.apply(v);
+                for (o, vi) in lv.iter_mut().zip(v) {
+                    *o += nl * vi;
+                }
+                lv
+            },
+            &y,
+            1e-11,
+            500,
+        )
+        .unwrap();
+        assert!(got.converged);
+        let mut dense = f.dense();
+        dense.add_scaled_identity(nl);
+        let want = Cholesky::new_with_jitter(&dense).unwrap().solve_vec(&y);
+        for (a, b) in got.x.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        assert!(cg_solve(|v| v.to_vec(), &[], 1e-8, 10).is_err());
+        assert!(cg_solve(|v| v.to_vec(), &[1.0], 0.0, 10).is_err());
+        // Indefinite matrix detected: b = [1,−1] lies in the negative
+        // eigendirection of [[1,2],[2,1]], so pᵀAp < 0 on the first step.
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]).unwrap();
+        let r = cg_solve_dense(&a, &[1.0, -1.0], 1e-10, 50);
+        assert!(r.is_err());
+        // Dimension-changing matvec.
+        assert!(cg_solve(|_| vec![1.0, 2.0], &[1.0], 1e-8, 10).is_err());
+    }
+
+    #[test]
+    fn max_iter_respected() {
+        let a = spd(50, 6);
+        let mut rng = Pcg64::new(7);
+        let b = rng.normal_vec(50);
+        let got = cg_solve_dense(&a, &b, 1e-14, 2).unwrap();
+        assert_eq!(got.iterations, 2);
+        assert!(!got.converged);
+    }
+}

@@ -1,0 +1,381 @@
+//! Symmetric eigendecomposition: Householder tridiagonalization followed by
+//! implicit-shift QL iteration (the classic `tred2`/`tqli` pair, done in
+//! f64 with accumulation of the orthogonal transform).
+//!
+//! Needed for: the Moore–Penrose pseudoinverse `W⁺` of the (often
+//! numerically singular) Nyström overlap block, the PSD square root
+//! `W^{+1/2}` used to build the factor `B = C·W^{+1/2}`, spectra for
+//! diagnostics, and eigenvalue-based risk formulas.
+
+use super::Mat;
+use crate::util::{Error, Result};
+
+/// Result of [`eigh`]: `a = V · diag(vals) · Vᵀ`, eigenvalues ascending.
+#[derive(Debug, Clone)]
+pub struct EighResult {
+    /// Eigenvalues in ascending order.
+    pub vals: Vec<f64>,
+    /// Orthogonal matrix whose *columns* are the eigenvectors (same order).
+    pub vecs: Mat,
+}
+
+impl EighResult {
+    /// Largest eigenvalue.
+    pub fn max(&self) -> f64 {
+        *self.vals.last().unwrap()
+    }
+    /// Smallest eigenvalue.
+    pub fn min(&self) -> f64 {
+        self.vals[0]
+    }
+
+    /// Apply a spectral function: `V·diag(f(λ))·Vᵀ`.
+    pub fn apply(&self, f: impl Fn(f64) -> f64) -> Mat {
+        let n = self.vals.len();
+        // V * diag(f) — scale columns, then multiply by Vᵀ.
+        let mut scaled = self.vecs.clone();
+        for r in 0..n {
+            let row = scaled.row_mut(r);
+            for (j, x) in row.iter_mut().enumerate() {
+                *x *= f(self.vals[j]);
+            }
+        }
+        super::matmul::matmul_a_bt(&scaled, &self.vecs)
+    }
+
+    /// Moore–Penrose pseudoinverse with relative tolerance
+    /// `tol = max|λ| · n · ε` (or the provided override).
+    pub fn pinv(&self, tol: Option<f64>) -> Mat {
+        let t = self.effective_tol(tol);
+        self.apply(|l| if l.abs() > t { 1.0 / l } else { 0.0 })
+    }
+
+    /// PSD pseudo-inverse square root `W^{+1/2}` (negative eigenvalues —
+    /// numerical noise for PSD inputs — are clamped to zero).
+    pub fn pinv_sqrt(&self, tol: Option<f64>) -> Mat {
+        let t = self.effective_tol(tol);
+        self.apply(|l| if l > t { 1.0 / l.sqrt() } else { 0.0 })
+    }
+
+    /// PSD square root.
+    pub fn sqrt(&self) -> Mat {
+        self.apply(|l| if l > 0.0 { l.sqrt() } else { 0.0 })
+    }
+
+    /// Numerical rank at the default/pinv tolerance.
+    pub fn rank(&self, tol: Option<f64>) -> usize {
+        let t = self.effective_tol(tol);
+        self.vals.iter().filter(|l| l.abs() > t).count()
+    }
+
+    fn effective_tol(&self, tol: Option<f64>) -> f64 {
+        tol.unwrap_or_else(|| {
+            let m = self.vals.iter().fold(0.0f64, |a, &l| a.max(l.abs()));
+            m * self.vals.len() as f64 * f64::EPSILON
+        })
+    }
+}
+
+/// Symmetric eigendecomposition of `a` (must be square; only the lower
+/// triangle is read). O(n³). Fails if QL fails to converge (pathological).
+pub fn eigh(a: &Mat) -> Result<EighResult> {
+    if !a.is_square() {
+        return Err(Error::invalid("eigh requires square matrix"));
+    }
+    let n = a.rows();
+    if n == 0 {
+        return Ok(EighResult { vals: vec![], vecs: Mat::zeros(0, 0) });
+    }
+    // Work in a copy; z accumulates the orthogonal transform.
+    let mut z = a.clone();
+    z.symmetrize();
+    let mut d = vec![0.0f64; n]; // diagonal
+    let mut e = vec![0.0f64; n]; // off-diagonal
+    tred2(&mut z, &mut d, &mut e);
+    tqli(&mut d, &mut e, &mut z)?;
+    // Sort ascending, permute columns of z accordingly.
+    let mut order: Vec<usize> = (0..n).collect();
+    order.sort_by(|&i, &j| d[i].partial_cmp(&d[j]).unwrap());
+    let vals: Vec<f64> = order.iter().map(|&i| d[i]).collect();
+    let vecs = z.select_cols(&order);
+    Ok(EighResult { vals, vecs })
+}
+
+/// Householder reduction to tridiagonal form (Numerical Recipes tred2),
+/// accumulating transformations in `z`.
+fn tred2(z: &mut Mat, d: &mut [f64], e: &mut [f64]) {
+    let n = z.rows();
+    for i in (1..n).rev() {
+        let l = i - 1;
+        let mut h = 0.0f64;
+        if l > 0 {
+            let mut scale = 0.0f64;
+            for k in 0..=l {
+                scale += z[(i, k)].abs();
+            }
+            if scale == 0.0 {
+                e[i] = z[(i, l)];
+            } else {
+                for k in 0..=l {
+                    z[(i, k)] /= scale;
+                    h += z[(i, k)] * z[(i, k)];
+                }
+                let mut f = z[(i, l)];
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                z[(i, l)] = f - g;
+                f = 0.0;
+                for j in 0..=l {
+                    z[(j, i)] = z[(i, j)] / h;
+                    let mut g = 0.0f64;
+                    for k in 0..=j {
+                        g += z[(j, k)] * z[(i, k)];
+                    }
+                    for k in (j + 1)..=l {
+                        g += z[(k, j)] * z[(i, k)];
+                    }
+                    e[j] = g / h;
+                    f += e[j] * z[(i, j)];
+                }
+                let hh = f / (h + h);
+                for j in 0..=l {
+                    let f = z[(i, j)];
+                    let g = e[j] - hh * f;
+                    e[j] = g;
+                    for k in 0..=j {
+                        let delta = f * e[k] + g * z[(i, k)];
+                        z[(j, k)] -= delta;
+                    }
+                }
+            }
+        } else {
+            e[i] = z[(i, l)];
+        }
+        d[i] = h;
+    }
+    d[0] = 0.0;
+    e[0] = 0.0;
+    for i in 0..n {
+        if d[i] != 0.0 {
+            for j in 0..i {
+                let mut g = 0.0f64;
+                for k in 0..i {
+                    g += z[(i, k)] * z[(k, j)];
+                }
+                for k in 0..i {
+                    let delta = g * z[(k, i)];
+                    z[(k, j)] -= delta;
+                }
+            }
+        }
+        d[i] = z[(i, i)];
+        z[(i, i)] = 1.0;
+        for j in 0..i {
+            z[(j, i)] = 0.0;
+            z[(i, j)] = 0.0;
+        }
+    }
+}
+
+/// QL with implicit shifts on a tridiagonal matrix, updating eigenvectors
+/// in `z` (Numerical Recipes tqli).
+fn tqli(d: &mut [f64], e: &mut [f64], z: &mut Mat) -> Result<()> {
+    let n = d.len();
+    if n == 0 {
+        return Ok(());
+    }
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // Find a small off-diagonal element to split.
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            if iter > 50 {
+                return Err(Error::numerical("tqli: too many iterations"));
+            }
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            g = d[m] - d[l] + e[l] / (g + r.copysign(g));
+            let (mut s, mut c) = (1.0f64, 1.0f64);
+            let mut p = 0.0f64;
+            for i in (l..m).rev() {
+                let mut f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+                // Accumulate eigenvector rotation.
+                for k in 0..n {
+                    f = z[(k, i + 1)];
+                    z[(k, i + 1)] = s * z[(k, i)] + c * f;
+                    z[(k, i)] = c * z[(k, i)] - s * f;
+                }
+            }
+            if r == 0.0 && m > l + 1 {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::matmul::{matmul, matmul_a_bt, syrk_at_a};
+    use crate::rng::Pcg64;
+
+    fn randsym(n: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        let mut a = Mat::from_fn(n, n, |_, _| rng.normal());
+        a.symmetrize();
+        a
+    }
+
+    fn check_decomposition(a: &Mat, r: &EighResult, tol: f64) {
+        // A V = V diag(λ)
+        let av = matmul(a, &r.vecs);
+        let n = a.rows();
+        for i in 0..n {
+            for j in 0..n {
+                let want = r.vecs[(i, j)] * r.vals[j];
+                assert!(
+                    (av[(i, j)] - want).abs() < tol,
+                    "AV != VΛ at ({i},{j}): {} vs {}",
+                    av[(i, j)],
+                    want
+                );
+            }
+        }
+        // Orthogonality.
+        let vtv = syrk_at_a(&r.vecs);
+        assert!(vtv.sub(&Mat::eye(n)).unwrap().max_abs() < tol);
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = Mat::diag(&[3.0, -1.0, 2.0]);
+        let r = eigh(&a).unwrap();
+        assert!((r.vals[0] + 1.0).abs() < 1e-12);
+        assert!((r.vals[1] - 2.0).abs() < 1e-12);
+        assert!((r.vals[2] - 3.0).abs() < 1e-12);
+        check_decomposition(&a, &r, 1e-10);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] → eigs 1, 3
+        let a = Mat::from_vec(2, 2, vec![2.0, 1.0, 1.0, 2.0]).unwrap();
+        let r = eigh(&a).unwrap();
+        assert!((r.vals[0] - 1.0).abs() < 1e-12);
+        assert!((r.vals[1] - 3.0).abs() < 1e-12);
+        check_decomposition(&a, &r, 1e-12);
+    }
+
+    #[test]
+    fn random_symmetric_various_sizes() {
+        for &n in &[1usize, 2, 3, 5, 10, 40, 97] {
+            let a = randsym(n, n as u64);
+            let r = eigh(&a).unwrap();
+            check_decomposition(&a, &r, 1e-8);
+            // Ascending order.
+            for w in r.vals.windows(2) {
+                assert!(w[0] <= w[1] + 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn psd_rank_and_pinv() {
+        // Rank-2 PSD 5x5.
+        let mut rng = Pcg64::new(42);
+        let g = Mat::from_fn(2, 5, |_, _| rng.normal());
+        let a = crate::linalg::matmul_at_b(&g, &g); // 5x5 rank 2
+        let r = eigh(&a).unwrap();
+        assert_eq!(r.rank(None), 2);
+        let pinv = r.pinv(None);
+        // A · A⁺ · A = A
+        let apa = matmul(&matmul(&a, &pinv), &a);
+        assert!(apa.sub(&a).unwrap().max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn pinv_sqrt_squares_to_pinv() {
+        let mut rng = Pcg64::new(43);
+        let g = Mat::from_fn(8, 4, |_, _| rng.normal());
+        let a = syrk_at_a(&g); // 4x4 full-rank PSD
+        let r = eigh(&a).unwrap();
+        let ph = r.pinv_sqrt(None);
+        let p = r.pinv(None);
+        let ph2 = matmul_a_bt(&ph, &ph);
+        assert!(ph2.sub(&p).unwrap().max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn sqrt_squares_back() {
+        let mut rng = Pcg64::new(44);
+        let g = Mat::from_fn(9, 5, |_, _| rng.normal());
+        let a = syrk_at_a(&g);
+        let r = eigh(&a).unwrap();
+        let s = r.sqrt();
+        let rec = matmul_a_bt(&s, &s);
+        assert!(rec.sub(&a).unwrap().max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn apply_spectral_function() {
+        let a = Mat::diag(&[1.0, 4.0]);
+        let r = eigh(&a).unwrap();
+        let sq = r.apply(|l| l * l);
+        assert!((sq[(0, 0)] - 1.0).abs() < 1e-12);
+        assert!((sq[(1, 1)] - 16.0).abs() < 1e-12);
+        assert!(sq[(0, 1)].abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_and_nonsquare() {
+        let r = eigh(&Mat::zeros(0, 0)).unwrap();
+        assert!(r.vals.is_empty());
+        assert!(eigh(&Mat::zeros(2, 3)).is_err());
+    }
+
+    #[test]
+    fn degenerate_eigenvalues() {
+        // Identity: all eigenvalues equal.
+        let a = Mat::eye(6);
+        let r = eigh(&a).unwrap();
+        for &v in &r.vals {
+            assert!((v - 1.0).abs() < 1e-12);
+        }
+        check_decomposition(&a, &r, 1e-10);
+    }
+}

@@ -1,0 +1,254 @@
+//! Blocked, multithreaded matrix multiplication.
+//!
+//! The hot products in this crate are tall-skinny: `C (n×p) · W^{+1/2} (p×p)`,
+//! `Bᵀ B (p×p from n×p)`, and kernel-block assembly feeding them. We use a
+//! cache-blocked i-k-j loop order (unit-stride inner loop over the output
+//! row) and split the row range over threads with `par_chunks_mut`. This is
+//! not a full BLAS, but it reaches a decent fraction of scalar-FMA roofline
+//! and — more importantly for the paper's claims — has the right asymptotics
+//! and parallel scaling for the O(np²) vs O(n³) comparisons.
+
+use super::Mat;
+use crate::util::parallel::par_chunks_mut;
+
+/// Panel size along the shared (k) dimension — sized so a `MC×KC` slice of A
+/// and a `KC×width` slice of B fit in L2.
+const KC: usize = 256;
+
+/// `A (m×k) · B (k×n)`.
+///
+/// i-k-j loop order with KC panels along k and a 4-row micro-kernel: each
+/// B row loaded from memory is reused across 4 output rows (4× arithmetic
+/// intensity vs the naive AXPY form — §Perf item 3 in EXPERIMENTS.md).
+pub fn matmul(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.rows(), "matmul inner dims {}x{} · {}x{}", a.rows(), a.cols(), b.rows(), b.cols());
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut out = Mat::zeros(m, n);
+    if m == 0 || n == 0 || k == 0 {
+        return out;
+    }
+    let a_data = a.as_slice();
+    let b_data = b.as_slice();
+    par_chunks_mut(out.as_mut_slice(), m, n, |_ci, row0, chunk| {
+        let rows_here = chunk.len() / n;
+        for kb in (0..k).step_by(KC) {
+            let kend = (kb + KC).min(k);
+            let mut r = 0usize;
+            // 4-row micro-kernel.
+            while r + 4 <= rows_here {
+                let (c01, c23) = chunk[r * n..(r + 4) * n].split_at_mut(2 * n);
+                let (c0, c1) = c01.split_at_mut(n);
+                let (c2, c3) = c23.split_at_mut(n);
+                let a0 = &a_data[(row0 + r) * k..(row0 + r + 1) * k];
+                let a1 = &a_data[(row0 + r + 1) * k..(row0 + r + 2) * k];
+                let a2 = &a_data[(row0 + r + 2) * k..(row0 + r + 3) * k];
+                let a3 = &a_data[(row0 + r + 3) * k..(row0 + r + 4) * k];
+                for kk in kb..kend {
+                    let (v0, v1, v2, v3) = (a0[kk], a1[kk], a2[kk], a3[kk]);
+                    let brow = &b_data[kk * n..(kk + 1) * n];
+                    for c in 0..n {
+                        let bv = brow[c];
+                        c0[c] += v0 * bv;
+                        c1[c] += v1 * bv;
+                        c2[c] += v2 * bv;
+                        c3[c] += v3 * bv;
+                    }
+                }
+                r += 4;
+            }
+            // Remainder rows.
+            while r < rows_here {
+                let arow = &a_data[(row0 + r) * k..(row0 + r + 1) * k];
+                let crow = &mut chunk[r * n..(r + 1) * n];
+                for kk in kb..kend {
+                    let aik = arow[kk];
+                    if aik == 0.0 {
+                        continue;
+                    }
+                    let brow = &b_data[kk * n..(kk + 1) * n];
+                    for (c, &bv) in crow.iter_mut().zip(brow.iter()) {
+                        *c += aik * bv;
+                    }
+                }
+                r += 1;
+            }
+        }
+    });
+    out
+}
+
+/// `Aᵀ (k×m)ᵀ · B (k×n)` i.e. `AᵀB` where A is k×m — avoids materializing Aᵀ.
+pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.rows(), b.rows(), "matmul_at_b shared dim");
+    let (k, m, n) = (a.rows(), a.cols(), b.cols());
+    let mut out = Mat::zeros(m, n);
+    if m == 0 || n == 0 || k == 0 {
+        return out;
+    }
+    // out[i][j] = Σ_t a[t][i] b[t][j]: accumulate rank-1 updates per t.
+    // Parallelize over output rows i by giving each thread a band of i and
+    // streaming over t.
+    let a_data = a.as_slice();
+    let b_data = b.as_slice();
+    par_chunks_mut(out.as_mut_slice(), m, n, |_ci, i0, chunk| {
+        let rows_here = chunk.len() / n;
+        for t in 0..k {
+            let arow = &a_data[t * m..(t + 1) * m];
+            let brow = &b_data[t * n..(t + 1) * n];
+            for r in 0..rows_here {
+                let ati = arow[i0 + r];
+                if ati == 0.0 {
+                    continue;
+                }
+                let crow = &mut chunk[r * n..(r + 1) * n];
+                for (c, &bv) in crow.iter_mut().zip(brow.iter()) {
+                    *c += ati * bv;
+                }
+            }
+        }
+    });
+    out
+}
+
+/// `A (m×k) · Bᵀ (n×k)ᵀ` — output m×n via row-dot-row (both unit stride).
+pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.cols(), "matmul_a_bt shared dim");
+    let (m, k, n) = (a.rows(), a.cols(), b.rows());
+    let mut out = Mat::zeros(m, n);
+    if m == 0 || n == 0 || k == 0 {
+        return out;
+    }
+    let a_data = a.as_slice();
+    let b_data = b.as_slice();
+    par_chunks_mut(out.as_mut_slice(), m, n, |_ci, row0, chunk| {
+        let rows_here = chunk.len() / n;
+        for r in 0..rows_here {
+            let arow = &a_data[(row0 + r) * k..(row0 + r + 1) * k];
+            let crow = &mut chunk[r * n..(r + 1) * n];
+            for j in 0..n {
+                let brow = &b_data[j * k..(j + 1) * k];
+                crow[j] = super::dot(arow, brow);
+            }
+        }
+    });
+    out
+}
+
+/// Symmetric rank-k update: `AᵀA` for A (n×p), returning p×p. Exploits
+/// symmetry (computes the upper triangle, mirrors it).
+pub fn syrk_at_a(a: &Mat) -> Mat {
+    let (n, p) = (a.rows(), a.cols());
+    let mut out = Mat::zeros(p, p);
+    if n == 0 || p == 0 {
+        return out;
+    }
+    let a_data = a.as_slice();
+    // Parallelize over rows i of the output; each computes entries j >= i.
+    par_chunks_mut(out.as_mut_slice(), p, p, |_ci, i0, chunk| {
+        let rows_here = chunk.len() / p;
+        for t in 0..n {
+            let arow = &a_data[t * p..(t + 1) * p];
+            for r in 0..rows_here {
+                let i = i0 + r;
+                let ati = arow[i];
+                if ati == 0.0 {
+                    continue;
+                }
+                let crow = &mut chunk[r * p..(r + 1) * p];
+                for j in i..p {
+                    crow[j] += ati * arow[j];
+                }
+            }
+        }
+    });
+    // Mirror the strict upper triangle.
+    for i in 0..p {
+        for j in (i + 1)..p {
+            out[(j, i)] = out[(i, j)];
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Pcg64;
+
+    fn naive(a: &Mat, b: &Mat) -> Mat {
+        let mut c = Mat::zeros(a.rows(), b.cols());
+        for i in 0..a.rows() {
+            for j in 0..b.cols() {
+                let mut s = 0.0;
+                for t in 0..a.cols() {
+                    s += a[(i, t)] * b[(t, j)];
+                }
+                c[(i, j)] = s;
+            }
+        }
+        c
+    }
+
+    fn randmat(r: usize, c: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        Mat::from_fn(r, c, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn matmul_matches_naive_various_shapes() {
+        for &(m, k, n) in &[(1, 1, 1), (3, 5, 2), (17, 33, 9), (64, 64, 64), (50, 300, 7)] {
+            let a = randmat(m, k, m as u64 * 7 + k as u64);
+            let b = randmat(k, n, n as u64 * 13 + 1);
+            let c = matmul(&a, &b);
+            let d = naive(&a, &b);
+            assert!(c.sub(&d).unwrap().max_abs() < 1e-10, "{m}x{k}x{n}");
+        }
+    }
+
+    #[test]
+    fn at_b_matches_explicit_transpose() {
+        let a = randmat(40, 13, 1);
+        let b = randmat(40, 21, 2);
+        let got = matmul_at_b(&a, &b);
+        let want = matmul(&a.transpose(), &b);
+        assert!(got.sub(&want).unwrap().max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn a_bt_matches_explicit_transpose() {
+        let a = randmat(23, 31, 3);
+        let b = randmat(11, 31, 4);
+        let got = matmul_a_bt(&a, &b);
+        let want = matmul(&a, &b.transpose());
+        assert!(got.sub(&want).unwrap().max_abs() < 1e-10);
+    }
+
+    #[test]
+    fn syrk_matches_and_is_symmetric() {
+        let a = randmat(57, 19, 5);
+        let got = syrk_at_a(&a);
+        let want = matmul(&a.transpose(), &a);
+        assert!(got.sub(&want).unwrap().max_abs() < 1e-10);
+        assert_eq!(got.asymmetry(), 0.0);
+    }
+
+    #[test]
+    fn empty_dims() {
+        let a = Mat::zeros(0, 3);
+        let b = Mat::zeros(3, 2);
+        assert_eq!(matmul(&a, &b).rows(), 0);
+        let a = Mat::zeros(2, 0);
+        let b = Mat::zeros(0, 2);
+        let c = matmul(&a, &b);
+        assert_eq!((c.rows(), c.cols()), (2, 2));
+        assert_eq!(c.max_abs(), 0.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(4, 2);
+        matmul(&a, &b);
+    }
+}

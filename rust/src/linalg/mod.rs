@@ -1,0 +1,441 @@
+//! Dense linear algebra substrate, written from scratch.
+//!
+//! The paper's pipeline needs: kernel-matrix assembly (n×n and n×p blocks),
+//! Cholesky factorization and triangular solves for `(K + nλI)^{-1}`-type
+//! quantities, a symmetric eigensolver for `W⁺` (the Nyström overlap can be
+//! numerically singular) and for spectra/pinv, and a fast blocked matmul for
+//! everything tall-skinny (`B = C·W^{+1/2}`, `BᵀB`, ...). All of it lives
+//! here; no external linear-algebra crates are used.
+//!
+//! Matrices are row-major `f64` ([`Mat`]); numerics are double precision on
+//! the Rust side (the AOT/PJRT artifacts run f32 — see `runtime`).
+
+mod cg;
+mod cholesky;
+mod eigh;
+mod matmul;
+
+pub use cg::{cg_solve, cg_solve_dense, CgResult};
+pub use cholesky::{Cholesky, solve_lower, solve_lower_transpose};
+pub use eigh::{eigh, EighResult};
+pub use matmul::{matmul, matmul_at_b, matmul_a_bt, syrk_at_a};
+
+use crate::util::{Error, Result};
+use std::fmt;
+
+/// Dense row-major matrix of `f64`.
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    rows: usize,
+    cols: usize,
+    data: Vec<f64>,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        writeln!(f, "Mat {}x{} [", self.rows, self.cols)?;
+        let rmax = self.rows.min(6);
+        let cmax = self.cols.min(8);
+        for r in 0..rmax {
+            write!(f, "  ")?;
+            for c in 0..cmax {
+                write!(f, "{:>10.4} ", self[(r, c)])?;
+            }
+            writeln!(f, "{}", if self.cols > cmax { "..." } else { "" })?;
+        }
+        if self.rows > rmax {
+            writeln!(f, "  ...")?;
+        }
+        write!(f, "]")
+    }
+}
+
+impl Mat {
+    /// Zero matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Self {
+        Self { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Identity.
+    pub fn eye(n: usize) -> Self {
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    /// From an existing row-major buffer.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Result<Self> {
+        if data.len() != rows * cols {
+            return Err(Error::invalid(format!(
+                "buffer length {} != {}x{}",
+                data.len(),
+                rows,
+                cols
+            )));
+        }
+        Ok(Self { rows, cols, data })
+    }
+
+    /// Build from a closure `f(row, col)`.
+    pub fn from_fn(rows: usize, cols: usize, mut f: impl FnMut(usize, usize) -> f64) -> Self {
+        let mut data = Vec::with_capacity(rows * cols);
+        for r in 0..rows {
+            for c in 0..cols {
+                data.push(f(r, c));
+            }
+        }
+        Self { rows, cols, data }
+    }
+
+    /// Diagonal matrix from a vector.
+    pub fn diag(d: &[f64]) -> Self {
+        let n = d.len();
+        let mut m = Self::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = d[i];
+        }
+        m
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+    pub fn cols(&self) -> usize {
+        self.cols
+    }
+    pub fn is_square(&self) -> bool {
+        self.rows == self.cols
+    }
+    pub fn as_slice(&self) -> &[f64] {
+        &self.data
+    }
+    pub fn as_mut_slice(&mut self) -> &mut [f64] {
+        &mut self.data
+    }
+    pub fn into_vec(self) -> Vec<f64> {
+        self.data
+    }
+
+    /// Borrow row `r` as a slice.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutable row.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Copy of column `c`.
+    pub fn col(&self, c: usize) -> Vec<f64> {
+        (0..self.rows).map(|r| self[(r, c)]).collect()
+    }
+
+    /// Extract the main diagonal.
+    pub fn diagonal(&self) -> Vec<f64> {
+        let n = self.rows.min(self.cols);
+        (0..n).map(|i| self[(i, i)]).collect()
+    }
+
+    /// Transpose (materialized).
+    pub fn transpose(&self) -> Mat {
+        let mut t = Mat::zeros(self.cols, self.rows);
+        // Blocked transpose for cache friendliness.
+        const B: usize = 32;
+        for rb in (0..self.rows).step_by(B) {
+            for cb in (0..self.cols).step_by(B) {
+                for r in rb..(rb + B).min(self.rows) {
+                    for c in cb..(cb + B).min(self.cols) {
+                        t.data[c * self.rows + r] = self.data[r * self.cols + c];
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Select rows by index (rows may repeat — used for sampled columns of
+    /// symmetric K via its transpose).
+    pub fn select_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (r, &i) in idx.iter().enumerate() {
+            out.row_mut(r).copy_from_slice(self.row(i));
+        }
+        out
+    }
+
+    /// Select columns by index.
+    pub fn select_cols(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(self.rows, idx.len());
+        for r in 0..self.rows {
+            let src = self.row(r);
+            let dst = out.row_mut(r);
+            for (c, &j) in idx.iter().enumerate() {
+                dst[c] = src[j];
+            }
+        }
+        out
+    }
+
+    /// `self += alpha * I` in place (square only).
+    pub fn add_scaled_identity(&mut self, alpha: f64) {
+        assert!(self.is_square(), "add_scaled_identity on non-square");
+        for i in 0..self.rows {
+            self.data[i * self.cols + i] += alpha;
+        }
+    }
+
+    /// Elementwise `self * alpha`.
+    pub fn scale(&mut self, alpha: f64) {
+        for x in &mut self.data {
+            *x *= alpha;
+        }
+    }
+
+    /// `self + other`.
+    pub fn add(&self, other: &Mat) -> Result<Mat> {
+        if self.rows != other.rows || self.cols != other.cols {
+            return Err(Error::invalid("shape mismatch in add"));
+        }
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a + b)
+            .collect();
+        Ok(Mat { rows: self.rows, cols: self.cols, data })
+    }
+
+    /// `self - other`.
+    pub fn sub(&self, other: &Mat) -> Result<Mat> {
+        if self.rows != other.rows || self.cols != other.cols {
+            return Err(Error::invalid("shape mismatch in sub"));
+        }
+        let data = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| a - b)
+            .collect();
+        Ok(Mat { rows: self.rows, cols: self.cols, data })
+    }
+
+    /// Matrix–vector product `self * x`.
+    pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.cols, "matvec shape");
+        let mut y = vec![0.0; self.rows];
+        for r in 0..self.rows {
+            y[r] = dot(self.row(r), x);
+        }
+        y
+    }
+
+    /// `selfᵀ * x`.
+    pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
+        assert_eq!(x.len(), self.rows, "matvec_t shape");
+        let mut y = vec![0.0; self.cols];
+        for r in 0..self.rows {
+            let xr = x[r];
+            let row = self.row(r);
+            for c in 0..self.cols {
+                y[c] += xr * row[c];
+            }
+        }
+        y
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    /// Max |entry|.
+    pub fn max_abs(&self) -> f64 {
+        self.data.iter().fold(0.0f64, |m, &x| m.max(x.abs()))
+    }
+
+    /// Trace (square only).
+    pub fn trace(&self) -> f64 {
+        assert!(self.is_square(), "trace on non-square");
+        (0..self.rows).map(|i| self[(i, i)]).sum()
+    }
+
+    /// Symmetrize in place: `(A + Aᵀ)/2` (square only). Useful after long
+    /// chains of floating-point ops that should preserve symmetry.
+    pub fn symmetrize(&mut self) {
+        assert!(self.is_square());
+        for r in 0..self.rows {
+            for c in (r + 1)..self.cols {
+                let v = 0.5 * (self.data[r * self.cols + c] + self.data[c * self.cols + r]);
+                self.data[r * self.cols + c] = v;
+                self.data[c * self.cols + r] = v;
+            }
+        }
+    }
+
+    /// Max |A - Aᵀ| — symmetry check.
+    pub fn asymmetry(&self) -> f64 {
+        assert!(self.is_square());
+        let mut m = 0.0f64;
+        for r in 0..self.rows {
+            for c in (r + 1)..self.cols {
+                m = m.max((self.data[r * self.cols + c] - self.data[c * self.cols + r]).abs());
+            }
+        }
+        m
+    }
+
+    /// Cast to f32 (runtime buffer prep).
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    /// From an f32 buffer.
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Result<Self> {
+        Self::from_vec(rows, cols, data.iter().map(|&x| x as f64).collect())
+    }
+}
+
+impl std::ops::Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl std::ops::IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f64 {
+        debug_assert!(r < self.rows && c < self.cols);
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+/// Dot product with 4-way unrolling (the compiler autovectorizes this form).
+#[inline]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let n = a.len();
+    let chunks = n / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for i in 0..chunks {
+        let j = i * 4;
+        s0 += a[j] * b[j];
+        s1 += a[j + 1] * b[j + 1];
+        s2 += a[j + 2] * b[j + 2];
+        s3 += a[j + 3] * b[j + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..n {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// `‖a - b‖₂` for vectors.
+pub fn vec_dist(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| (x - y) * (x - y))
+        .sum::<f64>()
+        .sqrt()
+}
+
+/// `‖a‖₂`.
+pub fn vec_norm(a: &[f64]) -> f64 {
+    dot(a, a).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_and_indexing() {
+        let m = Mat::from_fn(3, 2, |r, c| (r * 10 + c) as f64);
+        assert_eq!(m[(2, 1)], 21.0);
+        assert_eq!(m.row(1), &[10.0, 11.0]);
+        assert_eq!(m.col(0), vec![0.0, 10.0, 20.0]);
+        assert!(Mat::from_vec(2, 2, vec![1.0; 3]).is_err());
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let m = Mat::from_fn(37, 23, |r, c| (r * 100 + c) as f64);
+        let t = m.transpose();
+        assert_eq!(t.rows(), 23);
+        assert_eq!(t.cols(), 37);
+        assert_eq!(t.transpose(), m);
+        assert_eq!(t[(5, 7)], m[(7, 5)]);
+    }
+
+    #[test]
+    fn select_rows_cols() {
+        let m = Mat::from_fn(4, 4, |r, c| (r * 4 + c) as f64);
+        let s = m.select_rows(&[2, 0, 2]);
+        assert_eq!(s.rows(), 3);
+        assert_eq!(s.row(0), m.row(2));
+        assert_eq!(s.row(1), m.row(0));
+        let c = m.select_cols(&[3, 1]);
+        assert_eq!(c.col(0), m.col(3));
+        assert_eq!(c.col(1), m.col(1));
+    }
+
+    #[test]
+    fn matvec_both_ways() {
+        let m = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
+        assert_eq!(m.matvec(&[1.0, 0.0, -1.0]), vec![-2.0, -2.0]);
+        assert_eq!(m.matvec_t(&[1.0, 1.0]), vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn symmetrize_and_asymmetry() {
+        let mut m = Mat::from_vec(2, 2, vec![1.0, 2.0, 4.0, 5.0]).unwrap();
+        assert_eq!(m.asymmetry(), 2.0);
+        m.symmetrize();
+        assert_eq!(m.asymmetry(), 0.0);
+        assert_eq!(m[(0, 1)], 3.0);
+    }
+
+    #[test]
+    fn norms_trace_diag() {
+        let m = Mat::diag(&[3.0, 4.0]);
+        assert_eq!(m.fro_norm(), 5.0);
+        assert_eq!(m.trace(), 7.0);
+        assert_eq!(m.diagonal(), vec![3.0, 4.0]);
+        assert_eq!(m.max_abs(), 4.0);
+    }
+
+    #[test]
+    fn add_sub_shape_checked() {
+        let a = Mat::eye(2);
+        let b = Mat::zeros(2, 3);
+        assert!(a.add(&b).is_err());
+        let c = a.add(&Mat::eye(2)).unwrap();
+        assert_eq!(c[(0, 0)], 2.0);
+        let d = c.sub(&Mat::eye(2)).unwrap();
+        assert_eq!(d, Mat::eye(2));
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f64> = (0..17).map(|i| i as f64 * 0.3).collect();
+        let b: Vec<f64> = (0..17).map(|i| (i as f64).sin()).collect();
+        let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-12);
+    }
+
+    #[test]
+    fn f32_roundtrip() {
+        let m = Mat::from_fn(3, 3, |r, c| r as f64 - c as f64);
+        let back = Mat::from_f32(3, 3, &m.to_f32()).unwrap();
+        assert!(m.sub(&back).unwrap().max_abs() < 1e-6);
+    }
+}

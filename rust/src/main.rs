@@ -1,0 +1,358 @@
+//! `fastkrr` — CLI launcher for the training pipeline, prediction server,
+//! leverage-score tooling and paper-experiment drivers.
+
+use fastkrr::cli::{self, Args};
+use fastkrr::config::AppConfig;
+use fastkrr::coordinator::{
+    Backend, BatcherConfig, Engine, EngineConfig, ServingModel, TrainPipeline,
+    TrainPipelineConfig,
+};
+use fastkrr::data;
+use fastkrr::kernel::KernelKind;
+use fastkrr::krr::{mse, NystromKrr, NystromKrrConfig};
+use fastkrr::server::{Client, Server};
+use fastkrr::sketch::SketchStrategy;
+use fastkrr::util::Result;
+use std::path::Path;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(argv: Vec<String>) -> Result<()> {
+    if argv.is_empty() || argv[0] == "help" || argv[0] == "--help" {
+        println!("{}", cli::HELP);
+        return Ok(());
+    }
+    let args = Args::parse(argv)?;
+    match args.command.as_str() {
+        "train" => cmd_train(&args),
+        "serve" => cmd_serve(&args),
+        "predict" => cmd_predict(&args),
+        "leverage" => cmd_leverage(&args),
+        "experiment" => cmd_experiment(&args),
+        "datagen" => cmd_datagen(&args),
+        other => {
+            eprintln!("unknown command '{other}'\n{}", cli::HELP);
+            Err(fastkrr::util::Error::invalid("unknown command"))
+        }
+    }
+}
+
+fn load_config(args: &Args) -> Result<AppConfig> {
+    match args.flag("config") {
+        Some(path) => AppConfig::load(Path::new(path)),
+        None => Ok(AppConfig::default()),
+    }
+}
+
+fn load_dataset(args: &Args) -> Result<data::Dataset> {
+    let seed = args.flag_u64("seed")?.unwrap_or(0);
+    if let Some(path) = args.flag("data") {
+        return data::load_csv(Path::new(path));
+    }
+    let name = args.flag("synth").unwrap_or("bernoulli");
+    cli::synth_dataset(name, args.flag_usize("n")?, seed)
+}
+
+fn train_config(args: &Args, cfg: &AppConfig) -> Result<(KernelKind, NystromKrrConfig)> {
+    let mut kind = cfg.train.kernel;
+    if let Some(k) = args.flag("kernel") {
+        kind = KernelKind::parse(k)?;
+    }
+    let mut ncfg = NystromKrrConfig {
+        lambda: cfg.train.lambda,
+        p: cfg.train.p,
+        strategy: cfg.train.strategy,
+        gamma: 0.0,
+        seed: cfg.train.seed,
+    };
+    if let Some(l) = args.flag_f64("lambda")? {
+        ncfg.lambda = l;
+    }
+    if let Some(p) = args.flag_usize("p")? {
+        ncfg.p = p;
+    }
+    if let Some(s) = args.flag("strategy") {
+        ncfg.strategy = SketchStrategy::parse(s)?;
+    }
+    if let Some(s) = args.flag_u64("seed")? {
+        ncfg.seed = s;
+    }
+    Ok((kind, ncfg))
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    let mut ds = load_dataset(args)?;
+    ds.validate()?;
+    // A saved model receives raw features at serving time (the .fkrr format
+    // carries no standardization stats), so train on raw features when
+    // exporting; otherwise honour the config.
+    let saving = args.flag("save").is_some();
+    if saving && cfg.train.standardize && ds.d() > 1 {
+        eprintln!("note: --save disables feature standardization so the saved model matches raw queries");
+    }
+    if !saving && cfg.train.standardize && ds.d() > 1 {
+        ds.standardize();
+    }
+    let (kind, ncfg) = train_config(args, &cfg)?;
+    println!(
+        "training on {} (n={}, d={}), kernel={}, λ={}, p={}, strategy={}",
+        ds.name,
+        ds.n(),
+        ds.d(),
+        kind.name(),
+        ncfg.lambda,
+        ncfg.p,
+        ncfg.strategy.name()
+    );
+    if args.has("two-pass") {
+        let pipe = TrainPipeline::new(
+            kind,
+            TrainPipelineConfig {
+                lambda: ncfg.lambda,
+                p: ncfg.p,
+                p0: cfg.train.p0,
+                epsilon: cfg.train.epsilon,
+                seed: ncfg.seed,
+            },
+        );
+        let (model, report) = pipe.run(&ds.x, &ds.y)?;
+        println!("{}", report.render());
+        println!("train mse = {:.6}", mse(model.fitted(), &ds.y));
+    } else {
+        let t0 = std::time::Instant::now();
+        let model = NystromKrr::fit(&ds.x, &ds.y, kind, &ncfg)?;
+        println!(
+            "fit in {:?}; train mse = {:.6}",
+            t0.elapsed(),
+            mse(model.fitted(), &ds.y)
+        );
+        if let Some(path) = args.flag("save") {
+            let sm = ServingModel::from_nystrom(&model)?;
+            fastkrr::coordinator::model_io::save(&sm, Path::new(path))?;
+            println!("saved serving model (p={}, d={}) to {path}", sm.p(), sm.d());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = load_config(args)?;
+    // Serve a saved model directly when --model is given.
+    if let Some(path) = args.flag("model") {
+        let sm = fastkrr::coordinator::model_io::load(Path::new(path))?;
+        println!("loaded model from {path} (p={}, d={})", sm.p(), sm.d());
+        return serve_model(args, &cfg, sm, "loaded-model");
+    }
+    // Otherwise train a demo model. Default matches the compiled artifacts:
+    // d=8, p=64, rbf bw=1.0.
+    let seed = args.flag_u64("seed")?.unwrap_or(0);
+    let n = args.flag_usize("n")?.unwrap_or(1024);
+    let p = args.flag_usize("p")?.unwrap_or(64);
+    let ds = match args.flag("synth") {
+        Some(name) => cli::synth_dataset(name, Some(n), seed)?,
+        None => {
+            // Demo dataset with d=8 to match the artifacts.
+            let mut rng = fastkrr::rng::Pcg64::new(seed);
+            let x = fastkrr::linalg::Mat::from_fn(n, 8, |_, _| rng.normal());
+            let y: Vec<f64> = (0..n)
+                .map(|i| (x.row(i).iter().sum::<f64>() * 0.25).sin() + 0.05 * rng.normal())
+                .collect();
+            data::Dataset { x, y, f_star: None, sigma: None, name: "serve-demo".into() }
+        }
+    };
+    let ncfg = NystromKrrConfig {
+        lambda: cfg.train.lambda,
+        p,
+        strategy: SketchStrategy::ApproxRidgeLeverage { oversample: 2.0 },
+        gamma: 0.0,
+        seed,
+    };
+    let model = NystromKrr::fit(&ds.x, &ds.y, KernelKind::Rbf { bandwidth: 1.0 }, &ncfg)?;
+    let sm = ServingModel::from_nystrom(&model)?;
+    serve_model(args, &cfg, sm, &ds.name)
+}
+
+/// Start the engine + server around a ready ServingModel and block.
+fn serve_model(
+    args: &Args,
+    cfg: &AppConfig,
+    sm: ServingModel,
+    source: &str,
+) -> Result<()> {
+    let backend_name = args.flag("backend").unwrap_or(&cfg.serve.backend).to_string();
+    let backend = match backend_name.as_str() {
+        "native" => Backend::Native,
+        "pjrt" => Backend::Pjrt {
+            artifact_dir: cfg
+                .serve
+                .artifact_dir
+                .clone()
+                .map(Into::into)
+                .unwrap_or_else(fastkrr::runtime::default_artifact_dir),
+        },
+        other => {
+            return Err(fastkrr::util::Error::invalid(format!(
+                "unknown backend '{other}'"
+            )))
+        }
+    };
+    let (p, d) = (sm.p(), sm.d());
+    let engine = Engine::start(
+        sm,
+        EngineConfig {
+            backend,
+            batcher: BatcherConfig {
+                max_wait: std::time::Duration::from_millis(cfg.serve.max_wait_ms),
+                queue_cap: cfg.serve.queue_cap,
+                ..Default::default()
+            },
+        },
+    )?;
+    let addr = args.flag("addr").unwrap_or(&cfg.serve.addr).to_string();
+    let server = Server::start(&addr, engine)?;
+    println!(
+        "serving {source} (d={d}, p={p}) on {} [backend={backend_name}] — Ctrl-C to stop",
+        server.addr(),
+    );
+    // Block forever (demo server; Ctrl-C terminates the process).
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_predict(args: &Args) -> Result<()> {
+    let remote = args
+        .flag("remote")
+        .ok_or_else(|| fastkrr::util::Error::invalid("predict needs --remote host:port"))?;
+    let ds = load_dataset(args)?;
+    let mut client = Client::connect(remote)?;
+    let limit = args.flag_usize("limit")?.unwrap_or(16).min(ds.n());
+    let xs: Vec<Vec<f64>> = (0..limit).map(|i| ds.x.row(i).to_vec()).collect();
+    let ys = client.predict_batch(&xs)?;
+    for (i, y) in ys.iter().enumerate() {
+        println!("{i}: f̂={y:.6}  y={:.6}", ds.y[i]);
+    }
+    let stats = client.stats()?;
+    println!("server stats: {}", stats.dump());
+    Ok(())
+}
+
+fn cmd_leverage(args: &Args) -> Result<()> {
+    let ds = load_dataset(args)?;
+    let lambda = args.flag_f64("lambda")?.unwrap_or(1e-3);
+    let kind = match args.flag("kernel") {
+        Some(k) => KernelKind::parse(k)?,
+        None if ds.d() == 1 => KernelKind::Bernoulli { order: 2 },
+        None => KernelKind::Rbf { bandwidth: 1.0 },
+    };
+    let kernel = fastkrr::kernel::KernelFn::new(kind);
+    if args.has("approx") {
+        let p = match args.flag_usize("p")? {
+            Some(p) => p,
+            None => {
+                fastkrr::leverage::theorem4_sketch_size(&kernel, &ds.x, None, lambda, 1.0)
+            }
+        };
+        let mut rng = fastkrr::rng::Pcg64::new(args.flag_u64("seed")?.unwrap_or(0));
+        let t0 = std::time::Instant::now();
+        let approx =
+            fastkrr::leverage::approx_ridge_leverage(&kernel, &ds.x, lambda, p, &mut rng)?;
+        println!(
+            "approx scores in {:?} (p={p}): d_eff~{:.2}",
+            t0.elapsed(),
+            approx.d_eff_estimate
+        );
+        print_scores(&approx.scores);
+    } else {
+        let t0 = std::time::Instant::now();
+        let km = fastkrr::kernel::Kernel::matrix(&kernel, &ds.x);
+        let lev = fastkrr::leverage::exact_ridge_leverage(&km, lambda)?;
+        println!(
+            "exact scores in {:?}: d_eff={:.2} d_mof={:.2}",
+            t0.elapsed(),
+            lev.d_eff,
+            lev.d_mof
+        );
+        print_scores(&lev.scores);
+    }
+    Ok(())
+}
+
+fn print_scores(scores: &[f64]) {
+    let show = scores.len().min(20);
+    for (i, s) in scores.iter().take(show).enumerate() {
+        println!("  l[{i}] = {s:.6}");
+    }
+    if scores.len() > show {
+        println!("  … ({} total)", scores.len());
+    }
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let which = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .ok_or_else(|| {
+            fastkrr::util::Error::invalid("experiment needs a name: table1|figure1|dnc")
+        })?;
+    let scale = args.flag_f64("scale")?.unwrap_or(0.25);
+    let trials = args.flag_usize("trials")?.unwrap_or(3);
+    let seed = args.flag_u64("seed")?.unwrap_or(0);
+    match which {
+        "table1" => {
+            let rows = fastkrr::experiments::run_table1(scale, trials, seed)?;
+            println!("{}", fastkrr::experiments::table1::render(&rows));
+        }
+        "figure1" => {
+            let n = ((500.0 * scale) as usize).max(50);
+            let left = fastkrr::experiments::run_figure1_left(n, 1e-6, seed)?;
+            println!("{}", left.render_ascii(20));
+            let mut p_grid: Vec<usize> =
+                [10, 20, 40, 80, 160, 250].iter().map(|&p: &usize| p.min(n)).collect();
+            p_grid.dedup();
+            let right =
+                fastkrr::experiments::run_figure1_right(n, 1e-6, &p_grid, trials, seed)?;
+            println!("{}", right.render());
+        }
+        "dnc" => {
+            let n = ((500.0 * scale) as usize).max(50);
+            let ds = data::synth_bernoulli(n, 2, 0.1, seed);
+            let rows = fastkrr::experiments::run_dnc_comparison(
+                &ds,
+                KernelKind::Bernoulli { order: 2 },
+                1e-6,
+                trials,
+                seed,
+            )?;
+            println!("{}", fastkrr::experiments::dnc::render(&rows));
+        }
+        other => {
+            return Err(fastkrr::util::Error::invalid(format!(
+                "unknown experiment '{other}'"
+            )))
+        }
+    }
+    Ok(())
+}
+
+fn cmd_datagen(args: &Args) -> Result<()> {
+    let ds = load_dataset(args)?;
+    let out = args
+        .flag("out")
+        .ok_or_else(|| fastkrr::util::Error::invalid("datagen needs --out <path>"))?;
+    data::save_csv(&ds, Path::new(out))?;
+    println!("wrote {} (n={}, d={}) to {out}", ds.name, ds.n(), ds.d());
+    Ok(())
+}

@@ -1,0 +1,126 @@
+//! Criterion-style bench reporting for the `harness = false` bench targets
+//! (criterion itself is unavailable offline — DESIGN.md §2).
+//!
+//! Prints `name  time: [min median max]  mean ± stddev` lines compatible
+//! with eyeball-diffing across runs, plus helpers for throughput numbers.
+
+use std::time::{Duration, Instant};
+
+/// Measured statistics for one benchmark.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub stddev: Duration,
+}
+
+impl BenchStats {
+    pub fn render(&self) -> String {
+        format!(
+            "{:<44} time: [{:>10.3?} {:>10.3?} {:>10.3?}]  mean {:.3?} ± {:.3?} ({} iters)",
+            self.name, self.min, self.median, self.max, self.mean, self.stddev, self.iters
+        )
+    }
+
+    /// Mean time per iteration in seconds.
+    pub fn mean_secs(&self) -> f64 {
+        self.mean.as_secs_f64()
+    }
+}
+
+/// Run `f` with `warmup` throwaway iterations then `iters` timed ones.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<Duration> = Vec::with_capacity(iters.max(1));
+    for _ in 0..iters.max(1) {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed());
+    }
+    stats_from(name, &times)
+}
+
+/// Like [`bench`] but auto-scales iteration count to hit a time budget
+/// (~`budget` total measurement time, min 3 iters).
+pub fn bench_budget(name: &str, budget: Duration, mut f: impl FnMut()) -> BenchStats {
+    // One calibration run.
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed();
+    let iters = ((budget.as_secs_f64() / once.as_secs_f64().max(1e-9)) as usize)
+        .clamp(3, 10_000);
+    bench(name, 1, iters, f)
+}
+
+fn stats_from(name: &str, times: &[Duration]) -> BenchStats {
+    let mut sorted = times.to_vec();
+    sorted.sort();
+    let n = sorted.len();
+    let sum: Duration = sorted.iter().sum();
+    let mean = sum / n as u32;
+    let mean_s = mean.as_secs_f64();
+    let var = sorted
+        .iter()
+        .map(|t| {
+            let d = t.as_secs_f64() - mean_s;
+            d * d
+        })
+        .sum::<f64>()
+        / n as f64;
+    BenchStats {
+        name: name.to_string(),
+        iters: n,
+        mean,
+        median: sorted[n / 2],
+        min: sorted[0],
+        max: sorted[n - 1],
+        stddev: Duration::from_secs_f64(var.sqrt()),
+    }
+}
+
+/// Bench-scale knob: `FASTKRR_BENCH_SCALE` env (default given per-bench).
+pub fn bench_scale(default: f64) -> f64 {
+    std::env::var("FASTKRR_BENCH_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// Section header for bench output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let s = bench("noop", 2, 10, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.iters, 10);
+        assert!(s.min <= s.median && s.median <= s.max);
+        assert!(s.render().contains("noop"));
+    }
+
+    #[test]
+    fn bench_budget_scales_iters() {
+        let s = bench_budget("sleepy", Duration::from_millis(20), || {
+            std::thread::sleep(Duration::from_millis(2));
+        });
+        assert!(s.iters >= 3 && s.iters <= 20, "iters {}", s.iters);
+    }
+
+    #[test]
+    fn scale_default() {
+        assert_eq!(bench_scale(0.5), 0.5);
+    }
+}

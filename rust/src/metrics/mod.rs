@@ -1,0 +1,253 @@
+//! Metrics: counters, wall-clock timers, latency histograms with
+//! percentiles, and a simple throughput meter — the observability layer of
+//! the serving coordinator and the bench harness.
+
+pub mod bench;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+/// Monotonic event counter (thread-safe).
+#[derive(Debug, Default)]
+pub struct Counter {
+    value: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    pub fn inc(&self) {
+        self.add(1);
+    }
+    pub fn add(&self, n: u64) {
+        self.value.fetch_add(n, Ordering::Relaxed);
+    }
+    pub fn get(&self) -> u64 {
+        self.value.load(Ordering::Relaxed)
+    }
+}
+
+/// Scope timer: measure a closure, return (result, duration).
+pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, Duration) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed())
+}
+
+/// Run a closure `iters` times, returning per-iteration durations. Used by
+/// the criterion-style bench harness.
+pub fn time_n(iters: usize, mut f: impl FnMut()) -> Vec<Duration> {
+    let mut out = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed());
+    }
+    out
+}
+
+/// Fixed-bucket log-scale latency histogram: 1µs to ~100s, 5% resolution.
+/// Lock-free recording; percentile queries scan the buckets.
+#[derive(Debug)]
+pub struct LatencyHistogram {
+    buckets: Vec<AtomicU64>,
+    count: AtomicU64,
+    sum_nanos: AtomicU64,
+    max_nanos: AtomicU64,
+}
+
+const HIST_BUCKETS: usize = 400;
+const HIST_MIN_NANOS: f64 = 1_000.0; // 1 µs
+const HIST_GROWTH: f64 = 1.05; // 5% per bucket
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        Self {
+            buckets: (0..HIST_BUCKETS).map(|_| AtomicU64::new(0)).collect(),
+            count: AtomicU64::new(0),
+            sum_nanos: AtomicU64::new(0),
+            max_nanos: AtomicU64::new(0),
+        }
+    }
+
+    fn bucket_of(nanos: u64) -> usize {
+        if (nanos as f64) <= HIST_MIN_NANOS {
+            return 0;
+        }
+        let b = ((nanos as f64) / HIST_MIN_NANOS).ln() / HIST_GROWTH.ln();
+        (b.ceil() as usize).min(HIST_BUCKETS - 1)
+    }
+
+    fn bucket_upper_nanos(b: usize) -> f64 {
+        HIST_MIN_NANOS * HIST_GROWTH.powi(b as i32)
+    }
+
+    pub fn record(&self, d: Duration) {
+        let nanos = d.as_nanos().min(u64::MAX as u128) as u64;
+        self.buckets[Self::bucket_of(nanos)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_nanos.fetch_add(nanos, Ordering::Relaxed);
+        self.max_nanos.fetch_max(nanos, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Mean latency.
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.sum_nanos.load(Ordering::Relaxed) / c)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_nanos(self.max_nanos.load(Ordering::Relaxed))
+    }
+
+    /// Percentile in [0, 100]. Returns the upper edge of the bucket that
+    /// contains the q-th sample (≤5% overestimate by construction).
+    pub fn percentile(&self, q: f64) -> Duration {
+        let total = self.count();
+        if total == 0 {
+            return Duration::ZERO;
+        }
+        let target = ((q / 100.0) * total as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (b, bucket) in self.buckets.iter().enumerate() {
+            seen += bucket.load(Ordering::Relaxed);
+            if seen >= target {
+                return Duration::from_nanos(Self::bucket_upper_nanos(b) as u64);
+            }
+        }
+        self.max()
+    }
+
+    /// One-line summary for logs: count, mean, p50/p90/p99, max.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} mean={:.3?} p50={:.3?} p90={:.3?} p99={:.3?} max={:.3?}",
+            self.count(),
+            self.mean(),
+            self.percentile(50.0),
+            self.percentile(90.0),
+            self.percentile(99.0),
+            self.max()
+        )
+    }
+}
+
+/// Throughput meter: items over a wall-clock window.
+#[derive(Debug)]
+pub struct Throughput {
+    start: Instant,
+    items: Counter,
+}
+
+impl Default for Throughput {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Throughput {
+    pub fn new() -> Self {
+        Self { start: Instant::now(), items: Counter::new() }
+    }
+    pub fn record(&self, n: u64) {
+        self.items.add(n);
+    }
+    /// Items per second since construction.
+    pub fn rate(&self) -> f64 {
+        let secs = self.start.elapsed().as_secs_f64();
+        if secs <= 0.0 {
+            return 0.0;
+        }
+        self.items.get() as f64 / secs
+    }
+    pub fn total(&self) -> u64 {
+        self.items.get()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_concurrent() {
+        let c = Counter::new();
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..1000 {
+                        c.inc();
+                    }
+                });
+            }
+        });
+        assert_eq!(c.get(), 8000);
+    }
+
+    #[test]
+    fn histogram_percentiles_ordered() {
+        let h = LatencyHistogram::new();
+        for ms in 1..=100u64 {
+            h.record(Duration::from_millis(ms));
+        }
+        assert_eq!(h.count(), 100);
+        let p50 = h.percentile(50.0);
+        let p90 = h.percentile(90.0);
+        let p99 = h.percentile(99.0);
+        assert!(p50 <= p90 && p90 <= p99);
+        // p50 of 1..100ms is ~50ms; bucket overestimates by ≤5%.
+        let p50ms = p50.as_secs_f64() * 1e3;
+        assert!((45.0..=60.0).contains(&p50ms), "p50 = {p50ms}ms");
+        assert!(h.max() >= Duration::from_millis(100));
+        assert!(!h.summary().is_empty());
+    }
+
+    #[test]
+    fn histogram_empty() {
+        let h = LatencyHistogram::new();
+        assert_eq!(h.percentile(99.0), Duration::ZERO);
+        assert_eq!(h.mean(), Duration::ZERO);
+    }
+
+    #[test]
+    fn histogram_extremes() {
+        let h = LatencyHistogram::new();
+        h.record(Duration::from_nanos(1));
+        h.record(Duration::from_secs(1000));
+        assert_eq!(h.count(), 2);
+        assert!(h.percentile(100.0) >= Duration::from_secs(1));
+    }
+
+    #[test]
+    fn time_helpers() {
+        let (v, d) = time_it(|| 21 * 2);
+        assert_eq!(v, 42);
+        assert!(d < Duration::from_secs(1));
+        let ds = time_n(5, || {});
+        assert_eq!(ds.len(), 5);
+    }
+
+    #[test]
+    fn throughput_counts() {
+        let t = Throughput::new();
+        t.record(10);
+        t.record(5);
+        assert_eq!(t.total(), 15);
+        std::thread::sleep(Duration::from_millis(5));
+        assert!(t.rate() > 0.0);
+    }
+}

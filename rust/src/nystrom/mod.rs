@@ -1,0 +1,413 @@
+//! Nyström low-rank approximation `L = K S (Sᵀ K S)⁺ Sᵀ K`.
+//!
+//! Everything downstream (the fast leverage scores of §3.5, the Nyström KRR
+//! solver, the risk formulas) works through the **factor form**
+//! `L = B Bᵀ` with `B = C·(W⁺)^{1/2} ∈ ℝ^{n×p}`, which is all the paper's
+//! algorithm ever materializes — the n×n matrix `L` never exists in memory
+//! (step 4 of the §3.5 algorithm; also how we keep the O(np²) running-time
+//! claim honest).
+//!
+//! Two constructions:
+//! - [`NystromFactor::from_sketch`] — pseudo-inverse `W⁺` via the symmetric
+//!   eigensolver (handles rank-deficient W, the common case for RBF kernels
+//!   with duplicated sampled columns);
+//! - [`NystromFactor::from_sketch_regularized`] — the regularized variant
+//!   `L_γ = KS(SᵀKS + nγI)^{-1}SᵀK` from Theorem 1 / Appendix A, built with
+//!   a Cholesky solve (SPD by construction), satisfying `L_γ ⪯ L ⪯ K`.
+
+use crate::kernel::Kernel;
+use crate::linalg::{eigh, matmul, solve_lower, syrk_at_a, Cholesky, Mat};
+use crate::sketch::ColumnSketch;
+use crate::util::{Error, Result};
+
+/// Factored Nyström approximation `L = B Bᵀ` plus everything needed to
+/// evaluate the implied feature map on new points.
+#[derive(Debug, Clone)]
+pub struct NystromFactor {
+    /// n×p factor with `B Bᵀ = L`.
+    b: Mat,
+    /// The sampled (landmark) column indices.
+    indices: Vec<usize>,
+    /// Per-sample sketch weights `w_j = 1/√(p·p_{i_j})`.
+    weights: Vec<f64>,
+    /// p×p map from weighted kernel columns to features:
+    /// `B = C_w · fmap`, where `C_w[:, j] = w_j · K[:, i_j]`. Applied to new
+    /// points for out-of-sample prediction (the Nyström extension).
+    fmap: Mat,
+    /// Regularization γ used (0.0 for the pseudo-inverse construction).
+    gamma: f64,
+}
+
+impl NystromFactor {
+    /// Build `L = C W⁺ Cᵀ` in factor form from a column sketch.
+    ///
+    /// `x` is the n×d data matrix; kernel columns are computed on demand
+    /// (the full K is never formed).
+    pub fn from_sketch(
+        kernel: &dyn Kernel,
+        x: &Mat,
+        sketch: &ColumnSketch,
+    ) -> Result<Self> {
+        let (c_w, w) = Self::blocks(kernel, x, sketch)?;
+        // W⁺ via eigh; B = C_w · V diag(λ⁺^{1/2}) Vᵀ = C_w · (W⁺)^{1/2}.
+        let eig = eigh(&w)?;
+        let fmap = eig.pinv_sqrt(None);
+        let b = matmul(&c_w, &fmap);
+        Ok(Self {
+            b,
+            indices: sketch.indices.clone(),
+            weights: sketch.weights.clone(),
+            fmap,
+            gamma: 0.0,
+        })
+    }
+
+    /// Fast-path factor for the §3.5 leverage algorithm: `W⁺` is replaced
+    /// by `(W + δI)^{-1}` with the smallest jitter δ that makes the
+    /// Cholesky succeed (≥ ~1e-12·mean-diag). O(p³/3) instead of the
+    /// eigensolver's much larger O(p³) constant — §Perf item 2 in
+    /// EXPERIMENTS.md.
+    ///
+    /// Statistically safe for leverage scoring: `L_δ ⪯ L ⪯ K`, so the
+    /// one-sided Theorem 4 bound `l̃ ≤ l` is preserved (the δ-perturbation
+    /// only shrinks the scores further, by O(δ)).
+    pub fn from_sketch_fast(
+        kernel: &dyn Kernel,
+        x: &Mat,
+        sketch: &ColumnSketch,
+    ) -> Result<Self> {
+        let (c_w, w) = Self::blocks(kernel, x, sketch)?;
+        let ch = Cholesky::new_with_jitter(&w)?;
+        // fmap = R^{-ᵀ} so that B = C_w R^{-ᵀ} gives BBᵀ = C_w(W+δI)^{-1}C_wᵀ.
+        let fmap = crate::linalg::solve_lower_transpose(
+            ch.factor_l(),
+            &Mat::eye(w.rows()),
+        );
+        let b = matmul(&c_w, &fmap);
+        Ok(Self {
+            b,
+            indices: sketch.indices.clone(),
+            weights: sketch.weights.clone(),
+            fmap,
+            gamma: ch.jitter(),
+        })
+    }
+
+    /// Build the regularized `L_γ = C (W + nγI)^{-1} Cᵀ` in factor form.
+    /// `n_gamma` is the product `n·γ` (callers pass `n * lambda * eps` per
+    /// Theorem 3's remark).
+    pub fn from_sketch_regularized(
+        kernel: &dyn Kernel,
+        x: &Mat,
+        sketch: &ColumnSketch,
+        n_gamma: f64,
+    ) -> Result<Self> {
+        if n_gamma <= 0.0 {
+            return Err(Error::invalid("n_gamma must be > 0 (use from_sketch for γ=0)"));
+        }
+        let (c_w, mut w) = Self::blocks(kernel, x, sketch)?;
+        w.add_scaled_identity(n_gamma);
+        // (W + nγI) = R Rᵀ → B = C_w R^{-ᵀ}, so B Bᵀ = C_w (W+nγI)^{-1} C_wᵀ.
+        let ch = Cholesky::new_with_jitter(&w)?;
+        // fmap = R^{-ᵀ}: solve Rᵀ X = I, i.e. X = R^{-ᵀ}.
+        let fmap = crate::linalg::solve_lower_transpose(
+            ch.factor_l(),
+            &Mat::eye(w.rows()),
+        );
+        // B = C_w · R^{-ᵀ}; equivalently solve R Bᵀ = C_wᵀ. Use the fmap
+        // directly (p is small).
+        let b = matmul(&c_w, &fmap);
+        Ok(Self {
+            b,
+            indices: sketch.indices.clone(),
+            weights: sketch.weights.clone(),
+            fmap,
+            gamma: n_gamma,
+        })
+    }
+
+    /// Assemble the weighted column block `C_w (n×p)` and overlap
+    /// `W = C_w[I, :]` (p×p, symmetrized).
+    fn blocks(
+        kernel: &dyn Kernel,
+        x: &Mat,
+        sketch: &ColumnSketch,
+    ) -> Result<(Mat, Mat)> {
+        let p = sketch.p();
+        if p == 0 {
+            return Err(Error::invalid("empty sketch"));
+        }
+        if sketch.indices.iter().any(|&i| i >= x.rows()) {
+            return Err(Error::invalid("sketch index out of range"));
+        }
+        // C = K[:, I]; scale column j by w_j.
+        let mut c_w = kernel.columns(x, &sketch.indices);
+        for r in 0..c_w.rows() {
+            let row = c_w.row_mut(r);
+            for (j, v) in row.iter_mut().enumerate() {
+                *v *= sketch.weights[j];
+            }
+        }
+        // W = SᵀKS: W[j][k] = w_j w_k K[i_j, i_k] = rows I of C_w, scaled by w row-wise.
+        let mut w = c_w.select_rows(&sketch.indices);
+        for j in 0..p {
+            let row = w.row_mut(j);
+            let wj = sketch.weights[j];
+            for v in row.iter_mut() {
+                *v *= wj;
+            }
+        }
+        w.symmetrize();
+        Ok((c_w, w))
+    }
+
+    /// The n×p factor `B` (with `B Bᵀ = L`).
+    pub fn b(&self) -> &Mat {
+        &self.b
+    }
+
+    /// Rank bound p (columns of B).
+    pub fn p(&self) -> usize {
+        self.b.cols()
+    }
+
+    /// Number of data points n.
+    pub fn n(&self) -> usize {
+        self.b.rows()
+    }
+
+    /// Landmark indices.
+    pub fn indices(&self) -> &[usize] {
+        &self.indices
+    }
+
+    /// γ of the regularized construction (0 for pseudo-inverse).
+    pub fn gamma(&self) -> f64 {
+        self.gamma
+    }
+
+    /// Materialize the dense n×n `L` — tests and small-n diagnostics only.
+    pub fn dense(&self) -> Mat {
+        crate::linalg::matmul_a_bt(&self.b, &self.b)
+    }
+
+    /// `BᵀB` (p×p) — the small Gram matrix every downstream solve uses.
+    pub fn btb(&self) -> Mat {
+        syrk_at_a(&self.b)
+    }
+
+    /// Feature row for an out-of-sample point: `φ̃(x) = fmapᵀ · (w ⊙ k_I(x))`
+    /// so that `φ̃(x_i) = B_i` exactly on training points.
+    pub fn features(&self, kernel: &dyn Kernel, x_train: &Mat, x_new: &Mat) -> Mat {
+        let landmarks = x_train.select_rows(&self.indices);
+        let mut kx = kernel.cross(x_new, &landmarks); // m×p
+        for r in 0..kx.rows() {
+            let row = kx.row_mut(r);
+            for (j, v) in row.iter_mut().enumerate() {
+                *v *= self.weights[j];
+            }
+        }
+        matmul(&kx, &self.fmap)
+    }
+
+    /// Apply `L` to a vector without materializing it: `L v = B (Bᵀ v)`.
+    pub fn apply(&self, v: &[f64]) -> Vec<f64> {
+        let t = self.b.matvec_t(v);
+        self.b.matvec(&t)
+    }
+
+    /// Fold the feature map and primal weights into a single p-vector for
+    /// serving: `f̂(x) = Σ_j v_j·k(x, x_{i_j})` with
+    /// `v = diag(w)·(fmap·θ)` — so online prediction is one kernel block
+    /// plus a dot product (the `predict_*` AOT artifacts' contract).
+    pub fn serving_vector(&self, theta: &[f64]) -> Vec<f64> {
+        assert_eq!(theta.len(), self.p(), "theta length != p");
+        let ft = self.fmap.matvec(theta);
+        ft.iter().zip(&self.weights).map(|(f, w)| f * w).collect()
+    }
+}
+
+/// Nyström approximation from an **arbitrary dense sketching matrix**
+/// `S ∈ ℝ^{n×p}` (Gaussian projections, …): `L_γ = KS(SᵀKS + nγI)^{-1}SᵀK`
+/// in factor form, or the pseudo-inverse variant for `n_gamma = 0`.
+///
+/// This is the full generality of Theorem 1, which holds for any S
+/// satisfying the spectral condition — used by the Theorem 1 validator
+/// (`experiments::theorem1`) and the projection-sketch ablation. Needs the
+/// full kernel matrix (dense sketches touch every column).
+pub fn dense_sketch_factor(kmat: &Mat, s: &Mat, n_gamma: f64) -> Result<Mat> {
+    if !kmat.is_square() || kmat.rows() != s.rows() {
+        return Err(Error::invalid("dense sketch shape mismatch"));
+    }
+    let ks = matmul(kmat, s); // n×p
+    let mut w = crate::linalg::matmul_at_b(s, &ks); // SᵀKS (p×p)
+    w.symmetrize();
+    if n_gamma > 0.0 {
+        w.add_scaled_identity(n_gamma);
+        let ch = Cholesky::new_with_jitter(&w)?;
+        let fmap =
+            crate::linalg::solve_lower_transpose(ch.factor_l(), &Mat::eye(w.rows()));
+        Ok(matmul(&ks, &fmap))
+    } else {
+        let eig = eigh(&w)?;
+        Ok(matmul(&ks, &eig.pinv_sqrt(None)))
+    }
+}
+
+/// Spectral check `L ⪯ K` (Lemma 1): max eigenvalue of `K − L` must be
+/// ≥ −tol·‖K‖. Dense; test/diagnostic use.
+pub fn check_l_below_k(k: &Mat, l: &Mat, tol: f64) -> Result<f64> {
+    let mut diff = k.sub(l)?;
+    diff.symmetrize();
+    let eig = eigh(&diff)?;
+    let scale = k.max_abs().max(1.0);
+    if eig.min() < -tol * scale {
+        return Err(Error::numerical(format!(
+            "L ⪯ K violated: min eig of K−L = {:.3e}",
+            eig.min()
+        )));
+    }
+    Ok(eig.min())
+}
+
+/// Triangular-solve variant used by the fast-leverage pipeline when W is
+/// known SPD after jitter: `B = C_w · R^{-ᵀ}` with `W = RRᵀ`. Exposed for
+/// benchmarking against the eigh path.
+pub fn factor_via_cholesky(c_w: &Mat, w: &Mat) -> Result<Mat> {
+    let ch = Cholesky::new_with_jitter(w)?;
+    // Solve R Y = C_wᵀ → Y = R^{-1} C_wᵀ; B = Yᵀ = C_w R^{-ᵀ}.
+    let y = solve_lower(ch.factor_l(), &c_w.transpose());
+    Ok(y.transpose())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::{KernelFn, KernelKind};
+    use crate::rng::Pcg64;
+    use crate::sketch::draw_columns;
+
+    fn setup(n: usize, seed: u64) -> (Mat, KernelFn) {
+        let mut rng = Pcg64::new(seed);
+        let x = Mat::from_fn(n, 3, |_, _| rng.normal());
+        (x, KernelFn::new(KernelKind::Rbf { bandwidth: 1.2 }))
+    }
+
+    #[test]
+    fn full_sketch_recovers_k() {
+        // Sampling all columns exactly once with uniform weights ≈ exact K.
+        let (x, k) = setup(12, 1);
+        let km = k.matrix(&x);
+        let p = 12;
+        let sketch = ColumnSketch {
+            indices: (0..p).collect(),
+            weights: vec![1.0; p],
+            probs: vec![1.0 / p as f64; p],
+        };
+        let f = NystromFactor::from_sketch(&k, &x, &sketch).unwrap();
+        let l = f.dense();
+        assert!(l.sub(&km).unwrap().max_abs() < 1e-6, "L != K for full sketch");
+    }
+
+    #[test]
+    fn l_below_k_psd_order() {
+        let (x, k) = setup(25, 2);
+        let km = k.matrix(&x);
+        let mut rng = Pcg64::new(3);
+        let sketch = draw_columns(&vec![1.0; 25], 8, &mut rng).unwrap();
+        let f = NystromFactor::from_sketch(&k, &x, &sketch).unwrap();
+        let l = f.dense();
+        // Lemma 1: L ⪯ K.
+        check_l_below_k(&km, &l, 1e-8).unwrap();
+    }
+
+    #[test]
+    fn regularized_below_unregularized() {
+        let (x, k) = setup(20, 4);
+        let mut rng = Pcg64::new(5);
+        let sketch = draw_columns(&vec![1.0; 20], 10, &mut rng).unwrap();
+        let f = NystromFactor::from_sketch(&k, &x, &sketch).unwrap();
+        let fg = NystromFactor::from_sketch_regularized(&k, &x, &sketch, 0.5).unwrap();
+        // Lemma 1: L_γ ⪯ L.
+        let diff = f.dense().sub(&fg.dense()).unwrap();
+        let mut d = diff;
+        d.symmetrize();
+        let eig = eigh(&d).unwrap();
+        assert!(eig.min() > -1e-8, "L_γ ⪯ L violated: {}", eig.min());
+        assert!(fg.gamma() > 0.0);
+    }
+
+    #[test]
+    fn features_match_b_on_training_points() {
+        let (x, k) = setup(15, 6);
+        let mut rng = Pcg64::new(7);
+        let sketch = draw_columns(&vec![1.0; 15], 6, &mut rng).unwrap();
+        let f = NystromFactor::from_sketch(&k, &x, &sketch).unwrap();
+        let feats = f.features(&k, &x, &x);
+        let d = feats.sub(f.b()).unwrap().max_abs();
+        assert!(d < 1e-8, "training features != B rows: {d}");
+    }
+
+    #[test]
+    fn apply_matches_dense() {
+        let (x, k) = setup(18, 8);
+        let mut rng = Pcg64::new(9);
+        let sketch = draw_columns(&vec![1.0; 18], 5, &mut rng).unwrap();
+        let f = NystromFactor::from_sketch(&k, &x, &sketch).unwrap();
+        let v = rng.normal_vec(18);
+        let got = f.apply(&v);
+        let want = f.dense().matvec(&v);
+        for (a, b) in got.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn duplicate_columns_are_fine() {
+        // Sampling with replacement will repeat indices; W is then singular
+        // and the pseudo-inverse path must still work.
+        let (x, k) = setup(10, 10);
+        let sketch = ColumnSketch {
+            indices: vec![2, 2, 7, 7, 4],
+            weights: vec![0.9, 0.9, 1.1, 1.1, 1.0],
+            probs: vec![0.2; 5],
+        };
+        let f = NystromFactor::from_sketch(&k, &x, &sketch).unwrap();
+        let km = k.matrix(&x);
+        check_l_below_k(&km, &f.dense(), 1e-7).unwrap();
+    }
+
+    #[test]
+    fn cholesky_factor_path_matches_regularized() {
+        let (x, k) = setup(14, 11);
+        let mut rng = Pcg64::new(12);
+        let sketch = draw_columns(&vec![1.0; 14], 6, &mut rng).unwrap();
+        let (c_w, mut w) = NystromFactor::blocks(&k, &x, &sketch).unwrap();
+        w.add_scaled_identity(0.3);
+        let b = factor_via_cholesky(&c_w, &w).unwrap();
+        let f = NystromFactor::from_sketch_regularized(&k, &x, &sketch, 0.3).unwrap();
+        // B differs by an orthogonal transform but BBᵀ must agree.
+        let l1 = crate::linalg::matmul_a_bt(&b, &b);
+        let l2 = f.dense();
+        assert!(l1.sub(&l2).unwrap().max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn rejects_bad_inputs() {
+        let (x, k) = setup(5, 13);
+        let empty = ColumnSketch { indices: vec![], weights: vec![], probs: vec![] };
+        assert!(NystromFactor::from_sketch(&k, &x, &empty).is_err());
+        let oob = ColumnSketch {
+            indices: vec![99],
+            weights: vec![1.0],
+            probs: vec![1.0],
+        };
+        assert!(NystromFactor::from_sketch(&k, &x, &oob).is_err());
+        let s = ColumnSketch {
+            indices: vec![0],
+            weights: vec![1.0],
+            probs: vec![1.0],
+        };
+        assert!(NystromFactor::from_sketch_regularized(&k, &x, &s, 0.0).is_err());
+    }
+}

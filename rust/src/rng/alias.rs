@@ -1,0 +1,196 @@
+//! Walker's alias method: O(n) setup, O(1) weighted sampling with
+//! replacement.
+//!
+//! This is the inner primitive behind every sketching strategy in the
+//! paper — column `i` of `K` is drawn with probability `p_i` (uniform,
+//! `K_ii/Tr(K)`, or leverage-proportional), `p` times, with replacement
+//! (Theorem 2's setting). The alias table makes a p-column draw O(p)
+//! regardless of how skewed the distribution is.
+
+use super::Pcg64;
+use crate::util::{Error, Result};
+
+/// Precomputed alias table for a fixed discrete distribution.
+#[derive(Debug, Clone)]
+pub struct AliasTable {
+    prob: Vec<f64>,
+    alias: Vec<usize>,
+    /// The (normalized) probabilities the table was built from.
+    weights: Vec<f64>,
+}
+
+impl AliasTable {
+    /// Build from non-negative weights (not necessarily normalized).
+    ///
+    /// Errors if the weights are empty, contain negatives/NaN, or sum to 0.
+    pub fn new(weights: &[f64]) -> Result<Self> {
+        if weights.is_empty() {
+            return Err(Error::invalid("alias table needs at least one weight"));
+        }
+        let mut total = 0.0;
+        for &w in weights {
+            if !w.is_finite() || w < 0.0 {
+                return Err(Error::invalid(format!("bad sampling weight {w}")));
+            }
+            total += w;
+        }
+        if total <= 0.0 {
+            return Err(Error::invalid("sampling weights sum to zero"));
+        }
+        let n = weights.len();
+        let norm: Vec<f64> = weights.iter().map(|&w| w / total).collect();
+        // Scaled probabilities: mean 1.0.
+        let mut scaled: Vec<f64> = norm.iter().map(|&p| p * n as f64).collect();
+        let mut small: Vec<usize> = Vec::new();
+        let mut large: Vec<usize> = Vec::new();
+        for (i, &s) in scaled.iter().enumerate() {
+            if s < 1.0 {
+                small.push(i);
+            } else {
+                large.push(i);
+            }
+        }
+        let mut prob = vec![1.0f64; n];
+        let mut alias = vec![0usize; n];
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
+            prob[s] = scaled[s];
+            alias[s] = l;
+            scaled[l] = (scaled[l] + scaled[s]) - 1.0;
+            if scaled[l] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        // Whatever remains (numerical leftovers) gets probability 1.
+        for &i in small.iter().chain(large.iter()) {
+            prob[i] = 1.0;
+            alias[i] = i;
+        }
+        Ok(Self { prob, alias, weights: norm })
+    }
+
+    /// Number of categories.
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+
+    /// Normalized probability of category `i`.
+    pub fn probability(&self, i: usize) -> f64 {
+        self.weights[i]
+    }
+
+    /// The full normalized probability vector.
+    pub fn probabilities(&self) -> &[f64] {
+        &self.weights
+    }
+
+    /// Draw one index.
+    #[inline]
+    pub fn sample(&self, rng: &mut Pcg64) -> usize {
+        let i = rng.below(self.prob.len());
+        if rng.uniform() < self.prob[i] {
+            i
+        } else {
+            self.alias[i]
+        }
+    }
+
+    /// Draw `p` indices with replacement.
+    pub fn sample_many(&self, rng: &mut Pcg64, p: usize) -> Vec<usize> {
+        (0..p).map(|_| self.sample(rng)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn chi2(counts: &[usize], probs: &[f64], n: usize) -> f64 {
+        counts
+            .iter()
+            .zip(probs)
+            .map(|(&c, &p)| {
+                let e = p * n as f64;
+                if e > 0.0 {
+                    (c as f64 - e) * (c as f64 - e) / e
+                } else {
+                    // p == 0 must never be sampled.
+                    assert_eq!(c, 0);
+                    0.0
+                }
+            })
+            .sum()
+    }
+
+    #[test]
+    fn matches_distribution_chi2() {
+        let weights = [1.0, 2.0, 3.0, 4.0, 0.0, 10.0];
+        let t = AliasTable::new(&weights).unwrap();
+        let mut rng = Pcg64::new(11);
+        let n = 200_000;
+        let mut counts = vec![0usize; weights.len()];
+        for _ in 0..n {
+            counts[t.sample(&mut rng)] += 1;
+        }
+        // 4 effective dof (5 nonzero cats - 1); χ²(0.999, 4) ≈ 18.5.
+        let stat = chi2(&counts, t.probabilities(), n);
+        assert!(stat < 25.0, "chi2 = {stat}, counts = {counts:?}");
+    }
+
+    #[test]
+    fn uniform_weights_uniform_samples() {
+        let t = AliasTable::new(&[1.0; 8]).unwrap();
+        let mut rng = Pcg64::new(12);
+        let n = 80_000;
+        let mut counts = vec![0usize; 8];
+        for i in t.sample_many(&mut rng, n) {
+            counts[i] += 1;
+        }
+        for &c in &counts {
+            assert!((c as f64 - 10_000.0).abs() < 500.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn degenerate_single_category() {
+        let t = AliasTable::new(&[3.0]).unwrap();
+        let mut rng = Pcg64::new(13);
+        assert_eq!(t.sample(&mut rng), 0);
+        assert_eq!(t.len(), 1);
+        assert!((t.probability(0) - 1.0).abs() < 1e-15);
+    }
+
+    #[test]
+    fn extreme_skew_still_samples_rare() {
+        let mut weights = vec![1e-9; 100];
+        weights[42] = 1.0;
+        let t = AliasTable::new(&weights).unwrap();
+        let mut rng = Pcg64::new(14);
+        let samples = t.sample_many(&mut rng, 10_000);
+        let hits42 = samples.iter().filter(|&&i| i == 42).count();
+        assert!(hits42 > 9_900, "dominant category under-sampled: {hits42}");
+    }
+
+    #[test]
+    fn rejects_bad_weights() {
+        assert!(AliasTable::new(&[]).is_err());
+        assert!(AliasTable::new(&[0.0, 0.0]).is_err());
+        assert!(AliasTable::new(&[1.0, -0.5]).is_err());
+        assert!(AliasTable::new(&[f64::NAN]).is_err());
+        assert!(AliasTable::new(&[f64::INFINITY]).is_err());
+    }
+
+    #[test]
+    fn probabilities_normalized() {
+        let t = AliasTable::new(&[2.0, 6.0]).unwrap();
+        assert!((t.probability(0) - 0.25).abs() < 1e-15);
+        assert!((t.probability(1) - 0.75).abs() < 1e-15);
+        let s: f64 = t.probabilities().iter().sum();
+        assert!((s - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,237 @@
+//! Deterministic pseudo-random generators and sampling primitives.
+//!
+//! Everything in the paper's pipeline is randomized (column sampling with
+//! replacement, Gaussian sketches, synthetic noise), and reproducibility of
+//! experiments requires full control of seeding — so we implement the RNGs
+//! from scratch: SplitMix64 for seeding, PCG64 (XSL-RR 128/64) as the main
+//! generator, Box–Muller normals, and a Walker alias table for O(1)
+//! weighted sampling with replacement (the inner loop of Theorems 2–4).
+
+mod alias;
+
+pub use alias::AliasTable;
+
+/// SplitMix64 — used to expand a single `u64` seed into independent streams.
+#[derive(Debug, Clone)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+}
+
+/// PCG64 (XSL-RR 128/64). Fast, statistically strong, tiny state.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360ED051FC65DA44385DF649FCCF645;
+
+impl Pcg64 {
+    /// Construct from a seed; stream is derived from the seed via SplitMix64.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        let s0 = sm.next_u64() as u128;
+        let s1 = sm.next_u64() as u128;
+        let i0 = sm.next_u64() as u128;
+        let i1 = sm.next_u64() as u128;
+        let mut rng = Self {
+            state: (s0 << 64) | s1,
+            inc: ((i0 << 64) | i1) | 1,
+        };
+        // Warm up to decorrelate close seeds.
+        rng.next_u64();
+        rng.next_u64();
+        rng
+    }
+
+    /// Derive an independent child generator (for per-thread / per-trial use).
+    pub fn split(&mut self) -> Pcg64 {
+        Pcg64::new(self.next_u64())
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xored = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xored.rotate_right(rot)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        // 53 top bits → [0,1) with full double precision.
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Uniform integer in [0, n) via Lemire's multiply-shift (unbiased).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        assert!(n > 0, "below(0)");
+        let n = n as u64;
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as usize
+    }
+
+    /// Standard normal via Box–Muller (pairs cached).
+    pub fn normal(&mut self) -> f64 {
+        // Marsaglia polar method — avoids trig, rejects ~21.5%.
+        loop {
+            let u = 2.0 * self.uniform() - 1.0;
+            let v = 2.0 * self.uniform() - 1.0;
+            let s = u * u + v * v;
+            if s > 0.0 && s < 1.0 {
+                return u * (-2.0 * s.ln() / s).sqrt();
+            }
+        }
+    }
+
+    /// Vector of standard normals.
+    pub fn normal_vec(&mut self, n: usize) -> Vec<f64> {
+        (0..n).map(|_| self.normal()).collect()
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from [0, n) (partial Fisher–Yates).
+    pub fn sample_without_replacement(&mut self, n: usize, k: usize) -> Vec<usize> {
+        assert!(k <= n, "cannot sample {k} from {n} without replacement");
+        let mut idx: Vec<usize> = (0..n).collect();
+        for i in 0..k {
+            let j = i + self.below(n - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Pcg64::new(7);
+        let mut b = Pcg64::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Pcg64::new(8);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn uniform_in_range_and_roughly_uniform() {
+        let mut rng = Pcg64::new(1);
+        let n = 100_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = rng.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let m = sum / n as f64;
+        assert!((m - 0.5).abs() < 0.01, "mean {m}");
+    }
+
+    #[test]
+    fn below_is_unbiased_ish() {
+        let mut rng = Pcg64::new(2);
+        let mut counts = [0usize; 7];
+        let n = 70_000;
+        for _ in 0..n {
+            counts[rng.below(7)] += 1;
+        }
+        for &c in &counts {
+            let expect = n as f64 / 7.0;
+            assert!((c as f64 - expect).abs() < 5.0 * expect.sqrt(), "count {c}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut rng = Pcg64::new(3);
+        let n = 200_000;
+        let xs: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.01, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.02, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut rng = Pcg64::new(4);
+        let mut xs: Vec<usize> = (0..50).collect();
+        rng.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn swr_distinct() {
+        let mut rng = Pcg64::new(5);
+        let s = rng.sample_without_replacement(100, 30);
+        assert_eq!(s.len(), 30);
+        let mut d = s.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 30);
+        assert!(d.iter().all(|&i| i < 100));
+    }
+
+    #[test]
+    fn split_streams_differ() {
+        let mut a = Pcg64::new(9);
+        let mut b = a.split();
+        let mut c = a.split();
+        let xs: Vec<u64> = (0..10).map(|_| b.next_u64()).collect();
+        let ys: Vec<u64> = (0..10).map(|_| c.next_u64()).collect();
+        assert_ne!(xs, ys);
+    }
+
+    #[test]
+    #[should_panic]
+    fn below_zero_panics() {
+        Pcg64::new(0).below(0);
+    }
+}

@@ -1,0 +1,164 @@
+//! `manifest.json` schema: the contract between `python/compile/aot.py` and
+//! the Rust runtime. Parsed with the in-crate JSON codec.
+
+use crate::util::json::Json;
+use crate::util::{Error, Result};
+use std::path::Path;
+
+/// One AOT artifact: an HLO-text file plus its static shapes and constants.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    /// Registry key, e.g. `predict_b32_d8_p64`.
+    pub name: String,
+    /// File name within the artifact directory.
+    pub file: String,
+    /// Entry-point kind: `predict`, `kernel_block`, `leverage`, `features`.
+    pub kind: String,
+    /// Input shapes, in call order (row-major f32).
+    pub arg_shapes: Vec<Vec<usize>>,
+    /// Baked RBF bandwidth, when the entrypoint has one.
+    pub bandwidth: Option<f64>,
+    /// Compiled batch size (predict/features kinds).
+    pub batch: Option<usize>,
+    /// Feature dimension d (when applicable).
+    pub d: Option<usize>,
+    /// Landmark / sketch size p (when applicable).
+    pub p: Option<usize>,
+}
+
+/// Parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub format: usize,
+    pub set: String,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load and validate a manifest file.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::io(format!("read {}: {e}", path.display())))?;
+        Self::parse(&text)
+    }
+
+    /// Parse from JSON text.
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Json::parse(text)?;
+        let format = v.get("format")?.as_usize()?;
+        if format != 1 {
+            return Err(Error::invalid(format!("unsupported manifest format {format}")));
+        }
+        let set = v.get("set")?.as_str()?.to_string();
+        let mut artifacts = Vec::new();
+        for a in v.get("artifacts")?.as_arr()? {
+            let name = a.get("name")?.as_str()?.to_string();
+            let file = a.get("file")?.as_str()?.to_string();
+            if file.contains('/') || file.contains("..") {
+                return Err(Error::invalid(format!("suspicious artifact path '{file}'")));
+            }
+            let kind = a.get("kind")?.as_str()?.to_string();
+            let dtype = a.get("dtype")?.as_str()?;
+            if dtype != "f32" {
+                return Err(Error::invalid(format!("unsupported dtype '{dtype}'")));
+            }
+            let mut arg_shapes = Vec::new();
+            for s in a.get("arg_shapes")?.as_arr()? {
+                let dims: Result<Vec<usize>> =
+                    s.as_arr()?.iter().map(|d| d.as_usize()).collect();
+                arg_shapes.push(dims?);
+            }
+            if arg_shapes.is_empty() {
+                return Err(Error::invalid(format!("artifact '{name}' has no inputs")));
+            }
+            let get_usize = |k: &str| -> Option<usize> {
+                a.opt(k).and_then(|x| x.as_usize().ok())
+            };
+            artifacts.push(ArtifactSpec {
+                name,
+                file,
+                kind,
+                arg_shapes,
+                bandwidth: a.opt("bandwidth").and_then(|x| x.as_f64().ok()),
+                batch: get_usize("batch"),
+                d: get_usize("d"),
+                p: get_usize("p"),
+            });
+        }
+        Ok(Self { format, set, artifacts })
+    }
+
+    /// All predict-kind artifacts sorted by batch size ascending — the
+    /// batcher picks the smallest compiled batch ≥ the queue depth.
+    pub fn predict_batches(&self) -> Vec<&ArtifactSpec> {
+        let mut v: Vec<&ArtifactSpec> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.kind == "predict")
+            .collect();
+        v.sort_by_key(|a| a.batch.unwrap_or(usize::MAX));
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1, "set": "default",
+      "artifacts": [
+        {"name": "predict_b8_d8_p64", "file": "predict_b8_d8_p64.hlo.txt",
+         "kind": "predict", "batch": 8, "d": 8, "p": 64, "bandwidth": 1.0,
+         "dtype": "f32", "inputs": ["x","landmarks","v"],
+         "arg_shapes": [[8,8],[64,8],[64]]},
+        {"name": "leverage_n256_p64", "file": "leverage_n256_p64.hlo.txt",
+         "kind": "leverage", "n_tile": 256, "p": 64, "dtype": "f32",
+         "inputs": ["b","m"], "arg_shapes": [[256,64],[64,64]]}
+      ]
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.format, 1);
+        assert_eq!(m.artifacts.len(), 2);
+        let p = &m.artifacts[0];
+        assert_eq!(p.kind, "predict");
+        assert_eq!(p.batch, Some(8));
+        assert_eq!(p.bandwidth, Some(1.0));
+        assert_eq!(p.arg_shapes[2], vec![64]);
+        let l = &m.artifacts[1];
+        assert_eq!(l.kind, "leverage");
+        assert_eq!(l.bandwidth, None);
+    }
+
+    #[test]
+    fn predict_batches_sorted() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let pb = m.predict_batches();
+        assert_eq!(pb.len(), 1);
+        assert_eq!(pb[0].batch, Some(8));
+    }
+
+    #[test]
+    fn rejects_bad_manifests() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse(r#"{"format": 2, "set": "x", "artifacts": []}"#).is_err());
+        let bad_dtype = SAMPLE.replace("\"f32\"", "\"f64\"");
+        assert!(Manifest::parse(&bad_dtype).is_err());
+        let traversal = SAMPLE.replace("predict_b8_d8_p64.hlo.txt", "../evil");
+        assert!(Manifest::parse(&traversal).is_err());
+    }
+
+    #[test]
+    fn real_manifest_if_present() {
+        let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        let path = dir.join("manifest.json");
+        if path.exists() {
+            let m = Manifest::load(&path).unwrap();
+            assert!(!m.artifacts.is_empty());
+            assert!(!m.predict_batches().is_empty());
+        }
+    }
+}

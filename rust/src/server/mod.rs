@@ -1,0 +1,400 @@
+//! TCP prediction server + client.
+//!
+//! Newline-delimited JSON over TCP (std::net + threads — no tokio in this
+//! environment, and the engine already owns the batching concurrency):
+//!
+//! ```text
+//! → {"op":"predict","x":[0.1, ...]}          ← {"ok":true,"y":1.23}
+//! → {"op":"predict_batch","xs":[[...],...]}  ← {"ok":true,"ys":[...]}
+//! → {"op":"stats"}                           ← {"ok":true,"requests":...,...}
+//! → {"op":"ping"}                            ← {"ok":true}
+//! ```
+//!
+//! Malformed requests get `{"ok":false,"error":"..."}` and the connection
+//! stays open; socket errors close only that connection.
+
+use crate::coordinator::Engine;
+use crate::util::json::Json;
+use crate::util::{Error, Result};
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+
+/// A running server bound to a port, owning the engine.
+pub struct Server {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Bind and start serving on `addr` (e.g. `127.0.0.1:0` for an
+    /// OS-assigned test port). The engine must already be started.
+    pub fn start(addr: &str, engine: Engine) -> Result<Self> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| Error::io(format!("bind {addr}: {e}")))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| Error::io(e.to_string()))?;
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| Error::io(e.to_string()))?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let accept_thread = {
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name("fastkrr-accept".into())
+                .spawn(move || accept_loop(listener, engine, stop))
+                .map_err(|e| Error::runtime(format!("spawn accept: {e}")))?
+        };
+        Ok(Self { addr: local, stop, accept_thread: Some(accept_thread) })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    /// Signal shutdown and join the accept loop.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+fn accept_loop(listener: TcpListener, engine: Engine, stop: Arc<AtomicBool>) {
+    let engine = Arc::new(engine);
+    let mut conn_threads = Vec::new();
+    while !stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let engine = engine.clone();
+                let stop = stop.clone();
+                if let Ok(t) = std::thread::Builder::new()
+                    .name("fastkrr-conn".into())
+                    .spawn(move || {
+                        let _ = handle_conn(stream, &engine, &stop);
+                    })
+                {
+                    conn_threads.push(t);
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            Err(_) => break,
+        }
+    }
+    for t in conn_threads {
+        let _ = t.join();
+    }
+}
+
+fn handle_conn(
+    stream: TcpStream,
+    engine: &Engine,
+    stop: &AtomicBool,
+) -> std::io::Result<()> {
+    stream.set_nodelay(true)?; // line-protocol RPC: Nagle adds ~40ms stalls
+    stream.set_read_timeout(Some(std::time::Duration::from_millis(100)))?;
+    let mut writer = stream.try_clone()?;
+    let mut reader = BufReader::new(stream);
+    let mut line = String::new();
+    loop {
+        if stop.load(Ordering::Acquire) {
+            return Ok(());
+        }
+        line.clear();
+        match reader.read_line(&mut line) {
+            Ok(0) => return Ok(()), // EOF
+            Ok(_) => {
+                let reply = handle_request(line.trim(), engine);
+                writer.write_all(reply.dump().as_bytes())?;
+                writer.write_all(b"\n")?;
+                writer.flush()?;
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue; // poll the stop flag
+            }
+            Err(e) => return Err(e),
+        }
+    }
+}
+
+fn handle_request(line: &str, engine: &Engine) -> Json {
+    match handle_request_inner(line, engine) {
+        Ok(j) => j,
+        Err(e) => Json::obj(vec![
+            ("ok", Json::Bool(false)),
+            ("error", Json::str(e.to_string())),
+        ]),
+    }
+}
+
+fn handle_request_inner(line: &str, engine: &Engine) -> Result<Json> {
+    if line.is_empty() {
+        return Err(Error::invalid("empty request"));
+    }
+    let req = Json::parse(line)?;
+    let op = req.get("op")?.as_str()?;
+    match op {
+        "ping" => Ok(Json::obj(vec![("ok", Json::Bool(true))])),
+        "predict" => {
+            let xs: Result<Vec<f64>> =
+                req.get("x")?.as_arr()?.iter().map(|v| v.as_f64()).collect();
+            let y = engine.predict(&xs?)?;
+            Ok(Json::obj(vec![("ok", Json::Bool(true)), ("y", Json::num(y))]))
+        }
+        "predict_batch" => {
+            let rows = req.get("xs")?.as_arr()?;
+            if rows.is_empty() {
+                return Err(Error::invalid("empty batch"));
+            }
+            let mut parsed: Vec<Vec<f64>> = Vec::with_capacity(rows.len());
+            for r in rows {
+                let xs: Result<Vec<f64>> =
+                    r.as_arr()?.iter().map(|v| v.as_f64()).collect();
+                parsed.push(xs?);
+            }
+            let d = parsed[0].len();
+            if parsed.iter().any(|r| r.len() != d) {
+                return Err(Error::invalid("ragged batch"));
+            }
+            let mut flat = Vec::with_capacity(parsed.len() * d);
+            for r in &parsed {
+                flat.extend_from_slice(r);
+            }
+            let m = crate::linalg::Mat::from_vec(parsed.len(), d, flat)?;
+            let results = engine.predict_many(&m);
+            let mut ys = Vec::with_capacity(results.len());
+            for r in results {
+                ys.push(r?);
+            }
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("ys", Json::arr_f64(&ys)),
+            ]))
+        }
+        "stats" => {
+            let s = engine.stats();
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("requests", Json::num(s.requests.get() as f64)),
+                ("batches", Json::num(s.batches.get() as f64)),
+                ("padded_slots", Json::num(s.padded_slots.get() as f64)),
+                ("errors", Json::num(s.errors.get() as f64)),
+                ("mean_batch", Json::num(s.mean_batch_size())),
+                (
+                    "p50_us",
+                    Json::num(s.latency.percentile(50.0).as_micros() as f64),
+                ),
+                (
+                    "p99_us",
+                    Json::num(s.latency.percentile(99.0).as_micros() as f64),
+                ),
+            ]))
+        }
+        other => Err(Error::invalid(format!("unknown op '{other}'"))),
+    }
+}
+
+/// Blocking line-protocol client (examples, tests, CLI `predict --remote`).
+pub struct Client {
+    writer: TcpStream,
+    reader: BufReader<TcpStream>,
+}
+
+impl Client {
+    pub fn connect(addr: &str) -> Result<Self> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| Error::io(format!("connect {addr}: {e}")))?;
+        stream
+            .set_nodelay(true)
+            .map_err(|e| Error::io(e.to_string()))?;
+        let reader = BufReader::new(
+            stream.try_clone().map_err(|e| Error::io(e.to_string()))?,
+        );
+        Ok(Self { writer: stream, reader })
+    }
+
+    fn roundtrip(&mut self, req: Json) -> Result<Json> {
+        let mut line = req.dump();
+        line.push('\n');
+        self.writer
+            .write_all(line.as_bytes())
+            .map_err(|e| Error::io(e.to_string()))?;
+        let mut reply = String::new();
+        self.reader
+            .read_line(&mut reply)
+            .map_err(|e| Error::io(e.to_string()))?;
+        let v = Json::parse(reply.trim())?;
+        if !v.get("ok")?.as_bool()? {
+            let msg = v
+                .opt("error")
+                .and_then(|e| e.as_str().ok())
+                .unwrap_or("unknown server error");
+            return Err(Error::runtime(msg.to_string()));
+        }
+        Ok(v)
+    }
+
+    pub fn ping(&mut self) -> Result<()> {
+        self.roundtrip(Json::obj(vec![("op", Json::str("ping"))]))?;
+        Ok(())
+    }
+
+    pub fn predict(&mut self, x: &[f64]) -> Result<f64> {
+        let v = self.roundtrip(Json::obj(vec![
+            ("op", Json::str("predict")),
+            ("x", Json::arr_f64(x)),
+        ]))?;
+        v.get("y")?.as_f64()
+    }
+
+    pub fn predict_batch(&mut self, xs: &[Vec<f64>]) -> Result<Vec<f64>> {
+        let rows: Vec<Json> = xs.iter().map(|r| Json::arr_f64(r)).collect();
+        let v = self.roundtrip(Json::obj(vec![
+            ("op", Json::str("predict_batch")),
+            ("xs", Json::Arr(rows)),
+        ]))?;
+        v.get("ys")?.as_arr()?.iter().map(|y| y.as_f64()).collect()
+    }
+
+    pub fn stats(&mut self) -> Result<Json> {
+        self.roundtrip(Json::obj(vec![("op", Json::str("stats"))]))
+    }
+
+    /// Send a raw line (failure-injection tests).
+    pub fn raw(&mut self, line: &str) -> Result<String> {
+        self.writer
+            .write_all(format!("{line}\n").as_bytes())
+            .map_err(|e| Error::io(e.to_string()))?;
+        let mut reply = String::new();
+        self.reader
+            .read_line(&mut reply)
+            .map_err(|e| Error::io(e.to_string()))?;
+        Ok(reply.trim().to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{Backend, BatcherConfig, EngineConfig, ServingModel};
+    use crate::kernel::KernelKind;
+    use crate::krr::{NystromKrr, NystromKrrConfig};
+    use crate::linalg::Mat;
+    use crate::rng::Pcg64;
+    use crate::sketch::SketchStrategy;
+
+    fn test_server() -> (Server, Mat, Vec<f64>) {
+        let mut rng = Pcg64::new(21);
+        let x = Mat::from_fn(60, 4, |_, _| rng.normal());
+        let y: Vec<f64> = (0..60).map(|i| x.row(i)[0].tanh()).collect();
+        let cfg = NystromKrrConfig {
+            lambda: 1e-3,
+            p: 12,
+            strategy: SketchStrategy::DiagK,
+            gamma: 0.0,
+            seed: 3,
+        };
+        let model =
+            NystromKrr::fit(&x, &y, KernelKind::Rbf { bandwidth: 1.0 }, &cfg).unwrap();
+        let sm = ServingModel::from_nystrom(&model).unwrap();
+        let want = sm.predict_native(&x);
+        let engine = Engine::start(
+            sm,
+            EngineConfig { backend: Backend::Native, batcher: BatcherConfig::default() },
+        )
+        .unwrap();
+        let server = Server::start("127.0.0.1:0", engine).unwrap();
+        (server, x, want)
+    }
+
+    #[test]
+    fn predict_roundtrip() {
+        let (server, x, want) = test_server();
+        let mut client = Client::connect(&server.addr().to_string()).unwrap();
+        client.ping().unwrap();
+        for i in 0..5 {
+            let y = client.predict(x.row(i)).unwrap();
+            assert!((y - want[i]).abs() < 1e-5);
+        }
+        let stats = client.stats().unwrap();
+        assert!(stats.get("requests").unwrap().as_f64().unwrap() >= 5.0);
+        server.shutdown();
+    }
+
+    #[test]
+    fn batch_roundtrip() {
+        let (server, x, want) = test_server();
+        let mut client = Client::connect(&server.addr().to_string()).unwrap();
+        let xs: Vec<Vec<f64>> = (0..10).map(|i| x.row(i).to_vec()).collect();
+        let ys = client.predict_batch(&xs).unwrap();
+        for (i, y) in ys.iter().enumerate() {
+            assert!((y - want[i]).abs() < 1e-5);
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn malformed_requests_keep_connection_alive() {
+        let (server, x, want) = test_server();
+        let mut client = Client::connect(&server.addr().to_string()).unwrap();
+        for bad in [
+            "not json",
+            "{}",
+            r#"{"op":"wat"}"#,
+            r#"{"op":"predict"}"#,
+            r#"{"op":"predict","x":"nope"}"#,
+            r#"{"op":"predict","x":[1.0]}"#,          // wrong dim
+            r#"{"op":"predict_batch","xs":[]}"#,      // empty
+            r#"{"op":"predict_batch","xs":[[1],[1,2]]}"#, // ragged
+        ] {
+            let reply = client.raw(bad).unwrap();
+            assert!(reply.contains("\"ok\":false"), "bad={bad} reply={reply}");
+        }
+        // Still serves good requests afterwards.
+        let y = client.predict(x.row(0)).unwrap();
+        assert!((y - want[0]).abs() < 1e-5);
+        server.shutdown();
+    }
+
+    #[test]
+    fn concurrent_clients() {
+        let (server, x, want) = test_server();
+        let addr = server.addr().to_string();
+        std::thread::scope(|s| {
+            for t in 0..4 {
+                let addr = addr.clone();
+                let x = &x;
+                let want = &want;
+                s.spawn(move || {
+                    let mut c = Client::connect(&addr).unwrap();
+                    for i in 0..10 {
+                        let idx = (t * 10 + i) % x.rows();
+                        let y = c.predict(x.row(idx)).unwrap();
+                        assert!((y - want[idx]).abs() < 1e-5);
+                    }
+                });
+            }
+        });
+        server.shutdown();
+    }
+}

@@ -1,0 +1,330 @@
+//! Sketching matrices and column-sampling strategies.
+//!
+//! The paper analyzes Nyström approximations `L = KS(SᵀKS)⁺SᵀK` built from a
+//! sketching matrix `S ∈ ℝ^{n×p}`. For sampling sketches, S has one nonzero
+//! per column: `S[i_j, j] = 1/√(p·p_{i_j})` where `i_j` is drawn from a
+//! probability vector `(p_i)` with replacement (Theorem 2's construction).
+//!
+//! The four sampling strategies compared in the paper's experiments:
+//! - **Uniform** — Bach '13's vanilla Nyström (`p = O(d_mof)` needed);
+//! - **DiagK** — squared-kernel-length `p_i = K_ii / Tr(K)` (the bootstrap
+//!   distribution of Theorem 4's fast leverage algorithm);
+//! - **ExactLeverage** — `p_i ∝ l_i(λ)`, the λ-ridge leverage scores of
+//!   Definition 1 (`p = O(d_eff)` suffices, Theorem 3);
+//! - **ApproxLeverage** — `p_i ∝ l̃_i`, the O(np²) approximation (§3.5) —
+//!   the paper's "best of both worlds" configuration.
+//!
+//! A dense Gaussian sketch is also provided for the structural Theorem 1,
+//! which holds for arbitrary S.
+
+use crate::kernel::Kernel;
+use crate::linalg::Mat;
+use crate::rng::{AliasTable, Pcg64};
+use crate::util::{Error, Result};
+
+/// Column-sampling strategy (configuration-level).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SketchStrategy {
+    /// `p_i = 1/n` — vanilla Nyström.
+    Uniform,
+    /// `p_i = K_ii / Tr(K)` — squared length in feature space.
+    DiagK,
+    /// `p_i = l_i(λ) / d_eff` — exact λ-ridge leverage scores (O(n³) setup;
+    /// reference strategy for experiments).
+    ExactRidgeLeverage,
+    /// `p_i = l̃_i / Σl̃` via the fast O(np²) approximation of §3.5.
+    /// `oversample` multiplies the internal sketch size `p₀` used to build
+    /// the approximation (Theorem 4's `p ≥ 8(Tr(K)/(nλε)+1/6)log(n/ρ)`).
+    ApproxRidgeLeverage {
+        /// Multiplier on the internal approximation sketch size.
+        oversample: f64,
+    },
+}
+
+impl Default for SketchStrategy {
+    fn default() -> Self {
+        SketchStrategy::ApproxRidgeLeverage { oversample: 2.0 }
+    }
+}
+
+impl SketchStrategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SketchStrategy::Uniform => "uniform",
+            SketchStrategy::DiagK => "diag-k",
+            SketchStrategy::ExactRidgeLeverage => "exact-leverage",
+            SketchStrategy::ApproxRidgeLeverage { .. } => "approx-leverage",
+        }
+    }
+
+    /// Parse CLI/config syntax: `uniform`, `diagk`, `exact-leverage`,
+    /// `approx-leverage[:oversample]`.
+    pub fn parse(s: &str) -> Result<Self> {
+        let parts: Vec<&str> = s.split(':').collect();
+        match parts[0] {
+            "uniform" => Ok(SketchStrategy::Uniform),
+            "diagk" | "diag-k" => Ok(SketchStrategy::DiagK),
+            "exact-leverage" | "exact" => Ok(SketchStrategy::ExactRidgeLeverage),
+            "approx-leverage" | "approx" => {
+                let ov = parts
+                    .get(1)
+                    .map(|t| t.parse::<f64>())
+                    .transpose()
+                    .map_err(|_| Error::invalid("bad oversample factor"))?
+                    .unwrap_or(2.0);
+                if ov <= 0.0 {
+                    return Err(Error::invalid("oversample must be > 0"));
+                }
+                Ok(SketchStrategy::ApproxRidgeLeverage { oversample: ov })
+            }
+            other => Err(Error::invalid(format!("unknown strategy '{other}'"))),
+        }
+    }
+}
+
+/// A drawn column sketch: indices `i_1..i_p` (with replacement) plus the
+/// rescaling weights `w_j = 1/√(p·p_{i_j})` that define the sampling matrix
+/// `S` of Theorem 2.
+#[derive(Debug, Clone)]
+pub struct ColumnSketch {
+    /// Sampled column indices (may repeat).
+    pub indices: Vec<usize>,
+    /// Per-sample weight `1/√(p·p_{i_j})`.
+    pub weights: Vec<f64>,
+    /// The probability each sample was drawn with (`p_{i_j}`).
+    pub probs: Vec<f64>,
+}
+
+impl ColumnSketch {
+    /// Number of sampled columns p.
+    pub fn p(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Materialize the dense n×p sampling matrix S (tests / Theorem 1 checks).
+    pub fn dense(&self, n: usize) -> Mat {
+        let mut s = Mat::zeros(n, self.p());
+        for (j, (&i, &w)) in self.indices.iter().zip(&self.weights).enumerate() {
+            s[(i, j)] = w;
+        }
+        s
+    }
+
+    /// Number of *distinct* columns in the sketch.
+    pub fn distinct(&self) -> usize {
+        let mut v = self.indices.clone();
+        v.sort_unstable();
+        v.dedup();
+        v.len()
+    }
+}
+
+/// Draw a `p`-column sketch from an (unnormalized) probability vector.
+pub fn draw_columns(weights: &[f64], p: usize, rng: &mut Pcg64) -> Result<ColumnSketch> {
+    if p == 0 {
+        return Err(Error::invalid("sketch size p must be >= 1"));
+    }
+    let table = AliasTable::new(weights)?;
+    let indices = table.sample_many(rng, p);
+    let probs: Vec<f64> = indices.iter().map(|&i| table.probability(i)).collect();
+    let weights = probs
+        .iter()
+        .map(|&pi| 1.0 / (p as f64 * pi).sqrt())
+        .collect();
+    Ok(ColumnSketch { indices, weights, probs })
+}
+
+/// Compute the sampling distribution for a strategy.
+///
+/// `kmat` is the precomputed full kernel matrix — required for
+/// `ExactRidgeLeverage` (and used opportunistically for `DiagK` when
+/// available); other strategies never touch it and it may be `None`.
+pub fn strategy_distribution(
+    strategy: SketchStrategy,
+    kernel: &dyn Kernel,
+    x: &Mat,
+    kmat: Option<&Mat>,
+    lambda: f64,
+    rng: &mut Pcg64,
+) -> Result<Vec<f64>> {
+    let n = x.rows();
+    match strategy {
+        SketchStrategy::Uniform => Ok(vec![1.0; n]),
+        SketchStrategy::DiagK => {
+            let d = match kmat {
+                Some(k) => k.diagonal(),
+                None => kernel.diag(x),
+            };
+            if d.iter().any(|&v| v < 0.0) {
+                return Err(Error::numerical("negative kernel diagonal"));
+            }
+            Ok(d)
+        }
+        SketchStrategy::ExactRidgeLeverage => {
+            let k = kmat.ok_or_else(|| {
+                Error::invalid("exact-leverage strategy needs the full kernel matrix")
+            })?;
+            let lev = crate::leverage::exact_ridge_leverage(k, lambda)?;
+            Ok(lev.scores)
+        }
+        SketchStrategy::ApproxRidgeLeverage { oversample } => {
+            // Theorem 4's sufficient size, capped for practicality: at
+            // small λ the bound reaches n, which would make the bootstrap
+            // O(n³) — the β-robustness of Theorem 3 tolerates the coarser
+            // scores a capped sketch produces (oversampling by 1/β
+            // compensates). Callers needing the full bound use
+            // `leverage::approx_ridge_leverage` directly.
+            const P0_CAP: usize = 1024;
+            let p0 = crate::leverage::theorem4_sketch_size(
+                kernel, x, kmat, lambda, oversample,
+            )
+            .min(P0_CAP)
+            .min(x.rows());
+            let approx =
+                crate::leverage::approx_ridge_leverage(kernel, x, lambda, p0, rng)?;
+            Ok(approx.scores)
+        }
+    }
+}
+
+/// Dense Gaussian sketch `S = G/√p`, `G_{ij} ~ N(0,1)` — satisfies the
+/// conditions of Theorem 1 with high probability; used for the structural
+/// tests and the projection-based baseline.
+pub fn gaussian_sketch(n: usize, p: usize, rng: &mut Pcg64) -> Mat {
+    let scale = 1.0 / (p as f64).sqrt();
+    Mat::from_fn(n, p, |_, _| rng.normal() * scale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::{KernelFn, KernelKind};
+
+    fn data(n: usize, d: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        Mat::from_fn(n, d, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn parse_strategies() {
+        assert_eq!(SketchStrategy::parse("uniform").unwrap(), SketchStrategy::Uniform);
+        assert_eq!(SketchStrategy::parse("diagk").unwrap(), SketchStrategy::DiagK);
+        assert_eq!(
+            SketchStrategy::parse("exact-leverage").unwrap(),
+            SketchStrategy::ExactRidgeLeverage
+        );
+        match SketchStrategy::parse("approx-leverage:3.5").unwrap() {
+            SketchStrategy::ApproxRidgeLeverage { oversample } => {
+                assert!((oversample - 3.5).abs() < 1e-15)
+            }
+            _ => panic!(),
+        }
+        assert!(SketchStrategy::parse("approx-leverage:-1").is_err());
+        assert!(SketchStrategy::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn draw_columns_weights_match_theorem2() {
+        let mut rng = Pcg64::new(1);
+        let w = [1.0, 3.0, 6.0];
+        let s = draw_columns(&w, 50, &mut rng).unwrap();
+        assert_eq!(s.p(), 50);
+        for (j, &i) in s.indices.iter().enumerate() {
+            let pi = w[i] / 10.0;
+            assert!((s.probs[j] - pi).abs() < 1e-12);
+            assert!((s.weights[j] - 1.0 / (50.0 * pi).sqrt()).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn dense_sketch_shape_and_sparsity() {
+        let mut rng = Pcg64::new(2);
+        let s = draw_columns(&[1.0; 10], 4, &mut rng).unwrap();
+        let m = s.dense(10);
+        assert_eq!((m.rows(), m.cols()), (10, 4));
+        // Each column has exactly one nonzero = 1/sqrt(p * 1/n) = sqrt(n/p).
+        for j in 0..4 {
+            let col = m.col(j);
+            let nz: Vec<f64> = col.into_iter().filter(|&v| v != 0.0).collect();
+            assert_eq!(nz.len(), 1);
+            assert!((nz[0] - (10.0f64 / 4.0).sqrt()).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn uniform_distribution_flat() {
+        let x = data(20, 3, 3);
+        let k = KernelFn::new(KernelKind::Rbf { bandwidth: 1.0 });
+        let mut rng = Pcg64::new(4);
+        let d = strategy_distribution(
+            SketchStrategy::Uniform,
+            &k,
+            &x,
+            None,
+            0.1,
+            &mut rng,
+        )
+        .unwrap();
+        assert!(d.iter().all(|&v| (v - 1.0).abs() < 1e-15));
+    }
+
+    #[test]
+    fn diagk_matches_kernel_diag() {
+        let x = data(15, 4, 5);
+        let k = KernelFn::new(KernelKind::Linear);
+        let mut rng = Pcg64::new(6);
+        let d = strategy_distribution(SketchStrategy::DiagK, &k, &x, None, 0.1, &mut rng)
+            .unwrap();
+        let want = k.diag(&x);
+        for (a, b) in d.iter().zip(&want) {
+            assert!((a - b).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn exact_leverage_requires_kmat() {
+        let x = data(10, 2, 7);
+        let k = KernelFn::new(KernelKind::Rbf { bandwidth: 1.0 });
+        let mut rng = Pcg64::new(8);
+        assert!(strategy_distribution(
+            SketchStrategy::ExactRidgeLeverage,
+            &k,
+            &x,
+            None,
+            0.1,
+            &mut rng
+        )
+        .is_err());
+        let km = k.matrix(&x);
+        let d = strategy_distribution(
+            SketchStrategy::ExactRidgeLeverage,
+            &k,
+            &x,
+            Some(&km),
+            0.1,
+            &mut rng,
+        )
+        .unwrap();
+        assert_eq!(d.len(), 10);
+        assert!(d.iter().all(|&v| v > 0.0 && v <= 1.0 + 1e-12));
+    }
+
+    #[test]
+    fn gaussian_sketch_moments() {
+        let mut rng = Pcg64::new(9);
+        let s = gaussian_sketch(200, 50, &mut rng);
+        // E[SSᵀ] = I → columns have squared norm ≈ 1... rows: E‖row‖² = p · (1/p) = 1
+        let mut mean_sq = 0.0;
+        for i in 0..200 {
+            mean_sq += crate::linalg::dot(s.row(i), s.row(i));
+        }
+        mean_sq /= 200.0;
+        assert!((mean_sq - 1.0).abs() < 0.1, "{mean_sq}");
+    }
+
+    #[test]
+    fn zero_p_rejected() {
+        let mut rng = Pcg64::new(10);
+        assert!(draw_columns(&[1.0, 1.0], 0, &mut rng).is_err());
+    }
+}

@@ -1,0 +1,153 @@
+//! Seeded property-testing mini-framework plus structured random-input
+//! generators for the crate's invariants.
+//!
+//! `proptest`/`quickcheck` are unavailable offline (DESIGN.md §2), so this
+//! module provides the 90% we need: run a property over many seeded random
+//! cases, report the failing seed, and re-run a single seed for debugging
+//! (set `FASTKRR_PROP_SEED`). Case counts default to 32 and can be raised
+//! with `FASTKRR_PROP_CASES` for deeper soak runs.
+
+use crate::kernel::{KernelFn, KernelKind};
+use crate::linalg::{syrk_at_a, Mat};
+use crate::rng::Pcg64;
+
+/// Number of cases per property (env-overridable).
+pub fn default_cases() -> usize {
+    std::env::var("FASTKRR_PROP_CASES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(32)
+}
+
+/// Run `prop(rng, case_index)` over `cases` seeded cases; panics with the
+/// failing seed on the first failure so it can be replayed.
+pub fn forall(name: &str, cases: usize, mut prop: impl FnMut(&mut Pcg64, usize)) {
+    // Single-seed replay mode.
+    if let Ok(s) = std::env::var("FASTKRR_PROP_SEED") {
+        if let Ok(seed) = s.parse::<u64>() {
+            let mut rng = Pcg64::new(seed);
+            prop(&mut rng, 0);
+            return;
+        }
+    }
+    for case in 0..cases {
+        let seed = fnv1a(name) ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Pcg64::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            prop(&mut rng, case)
+        }));
+        if let Err(e) = result {
+            eprintln!(
+                "property '{name}' failed at case {case}; replay with \
+                 FASTKRR_PROP_SEED={seed}"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+// ---- generators ----------------------------------------------------------
+
+/// Random dimension in [lo, hi].
+pub fn gen_dim(rng: &mut Pcg64, lo: usize, hi: usize) -> usize {
+    lo + rng.below(hi - lo + 1)
+}
+
+/// Random data matrix with entries ~ N(0, scale²).
+pub fn gen_data(rng: &mut Pcg64, n: usize, d: usize, scale: f64) -> Mat {
+    Mat::from_fn(n, d, |_, _| rng.normal() * scale)
+}
+
+/// Random SPD matrix `GᵀG + δI` with condition control via `ridge`.
+pub fn gen_spd(rng: &mut Pcg64, n: usize, ridge: f64) -> Mat {
+    let g = gen_data(rng, n + 3, n, 1.0);
+    let mut a = syrk_at_a(&g);
+    a.add_scaled_identity(ridge);
+    a
+}
+
+/// Random PSD matrix of the given rank (`GᵀG` with G rank×n) — exercises the
+/// rank-deficient paths (W⁺, jittered Cholesky).
+pub fn gen_psd_rank(rng: &mut Pcg64, n: usize, rank: usize) -> Mat {
+    let g = gen_data(rng, rank.max(1), n, 1.0);
+    syrk_at_a(&g)
+}
+
+/// A random kernel from the set used in experiments.
+pub fn gen_kernel(rng: &mut Pcg64) -> KernelFn {
+    let kind = match rng.below(4) {
+        0 => KernelKind::Linear,
+        1 => KernelKind::Rbf { bandwidth: 0.5 + rng.uniform() * 2.0 },
+        2 => KernelKind::Laplacian { bandwidth: 0.5 + rng.uniform() * 2.0 },
+        _ => KernelKind::Polynomial { degree: 2, offset: 1.0 },
+    };
+    KernelFn::new(kind)
+}
+
+/// Random probability weights bounded away from zero.
+pub fn gen_weights(rng: &mut Pcg64, n: usize) -> Vec<f64> {
+    (0..n).map(|_| 0.05 + rng.uniform()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let count = AtomicUsize::new(0);
+        forall("count-cases", 10, |_rng, _case| {
+            count.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn forall_propagates_failure() {
+        forall("always-fails", 3, |_rng, _case| {
+            panic!("expected failure");
+        });
+    }
+
+    #[test]
+    fn generators_produce_valid_shapes() {
+        let mut rng = Pcg64::new(1);
+        let n = gen_dim(&mut rng, 3, 10);
+        assert!((3..=10).contains(&n));
+        let a = gen_spd(&mut rng, 6, 0.1);
+        assert!(a.is_square());
+        assert_eq!(a.asymmetry(), 0.0);
+        // SPD: Cholesky must succeed.
+        crate::linalg::Cholesky::new(&a).unwrap();
+        let p = gen_psd_rank(&mut rng, 8, 3);
+        let eig = crate::linalg::eigh(&p).unwrap();
+        assert_eq!(eig.rank(Some(1e-8)), 3);
+        let w = gen_weights(&mut rng, 5);
+        assert!(w.iter().all(|&v| v >= 0.05));
+    }
+
+    #[test]
+    fn seeds_are_deterministic_per_name_and_case() {
+        let mut first: Vec<f64> = Vec::new();
+        forall("det-check", 4, |rng, case| {
+            let v = rng.uniform();
+            if first.len() <= case {
+                first.push(v);
+            }
+        });
+        forall("det-check", 4, |rng, case| {
+            assert_eq!(rng.uniform(), first[case]);
+        });
+    }
+}

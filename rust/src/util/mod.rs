@@ -1,0 +1,164 @@
+//! Small shared utilities: error type, JSON mini-codec, scoped parallelism.
+
+pub mod json;
+pub mod parallel;
+
+use std::fmt;
+
+/// Crate-wide error type. We keep it simple (string payload + kind) so the
+/// library has zero required dependencies; `anyhow` interops via `std::error`.
+#[derive(Debug)]
+pub struct Error {
+    kind: ErrorKind,
+    msg: String,
+}
+
+/// Broad category of a [`Error`]; used by callers that dispatch on failure
+/// class (e.g. the server maps `InvalidInput` to a 4xx-style reply).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorKind {
+    /// Caller handed us something malformed (bad shape, bad config, ...).
+    InvalidInput,
+    /// A numerical routine could not complete (not SPD, no convergence, ...).
+    Numerical,
+    /// I/O (file, socket) failure.
+    Io,
+    /// PJRT / artifact runtime failure.
+    Runtime,
+    /// Internal invariant violated — a bug in this crate.
+    Internal,
+}
+
+impl Error {
+    pub fn new(kind: ErrorKind, msg: impl Into<String>) -> Self {
+        Self { kind, msg: msg.into() }
+    }
+    pub fn invalid(msg: impl Into<String>) -> Self {
+        Self::new(ErrorKind::InvalidInput, msg)
+    }
+    pub fn numerical(msg: impl Into<String>) -> Self {
+        Self::new(ErrorKind::Numerical, msg)
+    }
+    pub fn io(msg: impl Into<String>) -> Self {
+        Self::new(ErrorKind::Io, msg)
+    }
+    pub fn runtime(msg: impl Into<String>) -> Self {
+        Self::new(ErrorKind::Runtime, msg)
+    }
+    pub fn internal(msg: impl Into<String>) -> Self {
+        Self::new(ErrorKind::Internal, msg)
+    }
+    pub fn kind(&self) -> ErrorKind {
+        self.kind
+    }
+    pub fn message(&self) -> &str {
+        &self.msg
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:?}: {}", self.kind, self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::io(e.to_string())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Format a float compactly for report tables (3 significant digits,
+/// scientific below 1e-3 or above 1e5).
+pub fn fmt_sig(x: f64) -> String {
+    if x == 0.0 {
+        return "0".to_string();
+    }
+    let a = x.abs();
+    if a < 1e-3 || a >= 1e5 {
+        format!("{:.2e}", x)
+    } else if a < 1.0 {
+        format!("{:.4}", x)
+    } else if a < 100.0 {
+        format!("{:.2}", x)
+    } else {
+        format!("{:.1}", x)
+    }
+}
+
+/// Mean of a slice (0.0 for empty — callers validate).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased sample standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64).sqrt()
+}
+
+/// Median (copies + sorts; fine for report-sized slices).
+pub fn median(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = v.len();
+    if n % 2 == 1 {
+        v[n / 2]
+    } else {
+        0.5 * (v[n / 2 - 1] + v[n / 2])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_roundtrip_kind_and_message() {
+        let e = Error::invalid("bad shape");
+        assert_eq!(e.kind(), ErrorKind::InvalidInput);
+        assert_eq!(e.message(), "bad shape");
+        assert!(e.to_string().contains("bad shape"));
+    }
+
+    #[test]
+    fn io_error_converts() {
+        let ioe = std::io::Error::new(std::io::ErrorKind::NotFound, "nope");
+        let e: Error = ioe.into();
+        assert_eq!(e.kind(), ErrorKind::Io);
+    }
+
+    #[test]
+    fn stats_helpers() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((median(&xs) - 2.5).abs() < 1e-12);
+        assert!((stddev(&xs) - (5.0f64 / 3.0).sqrt()).abs() < 1e-12);
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+
+    #[test]
+    fn fmt_sig_ranges() {
+        assert_eq!(fmt_sig(0.0), "0");
+        assert!(fmt_sig(1.0e-5).contains('e'));
+        assert!(fmt_sig(123456.0).contains('e'));
+        assert_eq!(fmt_sig(0.5), "0.5000");
+        assert_eq!(fmt_sig(42.0), "42.00");
+        assert_eq!(fmt_sig(420.0), "420.0");
+    }
+}

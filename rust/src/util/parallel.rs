@@ -1,0 +1,174 @@
+//! Scoped data-parallel helpers built on `std::thread::scope`.
+//!
+//! We cannot use rayon (offline environment), so this module provides the
+//! two shapes the hot paths need: a chunked parallel-for over disjoint
+//! mutable output slices, and a parallel map-reduce over index ranges.
+//! Threads are spawned per call; for the matrix sizes in this crate
+//! (n ≥ 512) spawn cost is negligible versus the O(n²..n³) work inside.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Number of worker threads to use: `FASTKRR_THREADS` env override, else
+/// available parallelism, clamped to [1, 64].
+pub fn num_threads() -> usize {
+    if let Ok(s) = std::env::var("FASTKRR_THREADS") {
+        if let Ok(n) = s.parse::<usize>() {
+            return n.clamp(1, 64);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(4)
+        .clamp(1, 64)
+}
+
+/// Run `f(chunk_index, start_row, out_chunk)` in parallel over contiguous
+/// chunks of `out`, splitting it into `rows` logical rows of width `width`.
+///
+/// Each chunk receives a disjoint `&mut [T]` window aligned to row
+/// boundaries, so `f` can fill rows `start_row .. start_row + chunk_rows`.
+pub fn par_chunks_mut<T: Send, F>(out: &mut [T], rows: usize, width: usize, f: F)
+where
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
+    assert_eq!(out.len(), rows * width, "output length must be rows*width");
+    let nt = num_threads().min(rows.max(1));
+    if nt <= 1 || rows == 0 {
+        f(0, 0, out);
+        return;
+    }
+    let rows_per = rows.div_ceil(nt);
+    std::thread::scope(|s| {
+        let mut rest = out;
+        let mut start_row = 0usize;
+        let mut idx = 0usize;
+        while !rest.is_empty() {
+            let take_rows = rows_per.min(rows - start_row);
+            let (head, tail) = rest.split_at_mut(take_rows * width);
+            let fr = &f;
+            let sr = start_row;
+            let ci = idx;
+            s.spawn(move || fr(ci, sr, head));
+            rest = tail;
+            start_row += take_rows;
+            idx += 1;
+        }
+    });
+}
+
+/// Parallel map over `0..n` with per-thread accumulators folded by `combine`.
+///
+/// `work(i)` is dispatched dynamically (atomic counter, grain-sized batches)
+/// so irregular per-index cost still balances.
+pub fn par_map_reduce<A, W, C>(n: usize, grain: usize, init: A, work: W, combine: C) -> A
+where
+    A: Send + Clone,
+    W: Fn(usize, &mut A) + Sync,
+    C: Fn(A, A) -> A,
+{
+    let nt = num_threads().min(n.max(1));
+    if nt <= 1 || n == 0 {
+        let mut acc = init;
+        for i in 0..n {
+            work(i, &mut acc);
+        }
+        return acc;
+    }
+    let grain = grain.max(1);
+    let counter = AtomicUsize::new(0);
+    let accs: Vec<A> = std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(nt);
+        for _ in 0..nt {
+            let counter = &counter;
+            let work = &work;
+            let mut acc = init.clone();
+            handles.push(s.spawn(move || {
+                loop {
+                    let start = counter.fetch_add(grain, Ordering::Relaxed);
+                    if start >= n {
+                        break;
+                    }
+                    let end = (start + grain).min(n);
+                    for i in start..end {
+                        work(i, &mut acc);
+                    }
+                }
+                acc
+            }));
+        }
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    accs.into_iter().fold(init, combine)
+}
+
+/// Parallel fill of an `f64` output vector: `out[i] = work(i)`.
+/// (`_grain` is accepted for call-site symmetry with `par_map_reduce`;
+/// chunking is row-contiguous.)
+pub fn par_fill(n: usize, _grain: usize, work: impl Fn(usize) -> f64 + Sync) -> Vec<f64> {
+    let mut out = vec![0.0f64; n];
+    par_chunks_mut(&mut out, n, 1, |_ci, start, chunk| {
+        for (j, slot) in chunk.iter_mut().enumerate() {
+            *slot = work(start + j);
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_chunks_fills_all_rows() {
+        let rows = 103;
+        let width = 7;
+        let mut out = vec![0.0f64; rows * width];
+        par_chunks_mut(&mut out, rows, width, |_ci, start, chunk| {
+            let chunk_rows = chunk.len() / width;
+            for r in 0..chunk_rows {
+                for c in 0..width {
+                    chunk[r * width + c] = (start + r) as f64 * 10.0 + c as f64;
+                }
+            }
+        });
+        for r in 0..rows {
+            for c in 0..width {
+                assert_eq!(out[r * width + c], r as f64 * 10.0 + c as f64);
+            }
+        }
+    }
+
+    #[test]
+    fn par_map_reduce_sums() {
+        let n = 10_000;
+        let total = par_map_reduce(
+            n,
+            64,
+            0u64,
+            |i, acc| *acc += i as u64,
+            |a, b| a + b,
+        );
+        assert_eq!(total, (n as u64 - 1) * n as u64 / 2);
+    }
+
+    #[test]
+    fn par_fill_matches_serial() {
+        let v = par_fill(1000, 32, |i| (i as f64).sqrt());
+        for (i, x) in v.iter().enumerate() {
+            assert_eq!(*x, (i as f64).sqrt());
+        }
+    }
+
+    #[test]
+    fn handles_empty_and_single() {
+        let v = par_fill(0, 8, |_| 1.0);
+        assert!(v.is_empty());
+        let v = par_fill(1, 8, |_| 2.5);
+        assert_eq!(v, vec![2.5]);
+    }
+
+    #[test]
+    fn num_threads_positive() {
+        assert!(num_threads() >= 1);
+    }
+}

@@ -1,0 +1,157 @@
+//! Integration: the full training path (data → leverage pipeline → model →
+//! serving export → engine) with every layer exercised together, plus the
+//! paper's statistical claims checked end-to-end at test scale.
+
+use fastkrr::coordinator::{
+    Backend, BatcherConfig, Engine, EngineConfig, ServingModel, TrainPipeline,
+    TrainPipelineConfig,
+};
+use fastkrr::data;
+use fastkrr::kernel::{Kernel, KernelFn, KernelKind};
+use fastkrr::krr::risk::{exact_risk, nystrom_risk};
+use fastkrr::krr::{mse, ExactKrr};
+use fastkrr::leverage;
+use fastkrr::rng::Pcg64;
+
+#[test]
+fn theorem3_shape_risk_ratio_close_to_one() {
+    // n=300 synthetic, p = 2·d_eff leverage columns → ratio within (1+2ε)².
+    let ds = data::synth_bernoulli(300, 2, 0.1, 1);
+    let kind = KernelKind::Bernoulli { order: 2 };
+    let lambda = 1e-6;
+    let kernel = KernelFn::new(kind);
+    let km = kernel.matrix(&ds.x);
+    let lev = leverage::exact_ridge_leverage(&km, lambda).unwrap();
+    let p = (2.0 * lev.d_eff).ceil() as usize;
+    let f_star = ds.f_star.as_ref().unwrap();
+    let sigma = ds.sigma.unwrap();
+    let rk = exact_risk(&km, f_star, sigma, lambda).unwrap().total();
+    let mut ratios = Vec::new();
+    let mut rng = Pcg64::new(5);
+    for _ in 0..5 {
+        let sketch = fastkrr::sketch::draw_columns(&lev.scores, p, &mut rng).unwrap();
+        let factor =
+            fastkrr::nystrom::NystromFactor::from_sketch(&kernel, &ds.x, &sketch)
+                .unwrap();
+        let rl = nystrom_risk(&factor, f_star, sigma, lambda).unwrap().total();
+        ratios.push(rl / rk);
+    }
+    let mean_ratio = ratios.iter().sum::<f64>() / ratios.len() as f64;
+    // ε=1/2 in Theorem 3 gives (1+2ε)² = 4; in practice ≈ 1. Allow 2.
+    assert!(
+        mean_ratio < 2.0 && mean_ratio > 0.8,
+        "risk ratio {mean_ratio} violates the Theorem 3 band: {ratios:?}"
+    );
+}
+
+#[test]
+fn pipeline_to_engine_full_stack_native() {
+    // Train with the two-pass pipeline at artifact shapes and serve through
+    // the native engine; agreement with direct model predictions.
+    let mut rng = Pcg64::new(2);
+    let x = fastkrr::linalg::Mat::from_fn(300, 8, |_, _| rng.normal());
+    let y: Vec<f64> = (0..300)
+        .map(|i| (x.row(i)[0] + x.row(i)[1]).tanh() + 0.02 * rng.normal())
+        .collect();
+    let pipe = TrainPipeline::new(
+        KernelKind::Rbf { bandwidth: 1.0 },
+        TrainPipelineConfig { lambda: 1e-3, p: 64, p0: Some(128), epsilon: 0.5, seed: 3 },
+    );
+    let (model, report) = pipe.run(&x, &y).unwrap();
+    assert!(report.kernel_evals < 300 * 300);
+    let direct = model.predict(&x);
+    let sm = ServingModel::from_nystrom(&model).unwrap();
+    let engine = Engine::start(
+        sm,
+        EngineConfig { backend: Backend::Native, batcher: BatcherConfig::default() },
+    )
+    .unwrap();
+    for i in (0..300).step_by(37) {
+        let served = engine.predict(x.row(i)).unwrap();
+        assert!(
+            (served - direct[i]).abs() < 1e-6,
+            "i={i}: served {served} vs direct {}",
+            direct[i]
+        );
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn pipeline_to_engine_full_stack_pjrt() {
+    // Same but through the AOT artifacts (skips when not built).
+    let dir = fastkrr::runtime::default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let mut rng = Pcg64::new(4);
+    let x = fastkrr::linalg::Mat::from_fn(400, 8, |_, _| rng.normal());
+    let y: Vec<f64> = (0..400)
+        .map(|i| (x.row(i).iter().sum::<f64>() * 0.2).cos() + 0.02 * rng.normal())
+        .collect();
+    let pipe = TrainPipeline::new(
+        KernelKind::Rbf { bandwidth: 1.0 },
+        TrainPipelineConfig { lambda: 1e-3, p: 64, p0: Some(128), epsilon: 0.5, seed: 5 },
+    );
+    let (model, _) = pipe.run(&x, &y).unwrap();
+    let direct = model.predict(&x);
+    let sm = ServingModel::from_nystrom(&model).unwrap();
+    let engine = Engine::start(
+        sm,
+        EngineConfig {
+            backend: Backend::Pjrt { artifact_dir: dir },
+            batcher: BatcherConfig::default(),
+        },
+    )
+    .unwrap();
+    let served = engine.predict_many(&x.select_rows(&(0..64).collect::<Vec<_>>()));
+    for (i, r) in served.iter().enumerate() {
+        let v = r.as_ref().unwrap();
+        // f32 artifact vs f64 native: tolerance 1e-3.
+        assert!((v - direct[i]).abs() < 1e-3, "i={i}: {v} vs {}", direct[i]);
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn cross_dataset_generalization_sanity() {
+    // Nyström KRR must generalize on the pumadyn surrogate comparably to
+    // exact KRR (within 25% test MSE at p=n/4).
+    let mut ds = data::pumadyn_surrogate(data::PumadynVariant::Fm, 400, 7);
+    ds.standardize();
+    let mut rng = Pcg64::new(8);
+    let (train, test) = ds.split(0.75, &mut rng);
+    let kind = KernelKind::Rbf { bandwidth: 5.0 };
+    let exact = ExactKrr::fit(&train.x, &train.y, kind, 0.5).unwrap();
+    let exact_mse = mse(&exact.predict(&test.x), &test.y);
+    let pipe = TrainPipeline::new(
+        kind,
+        TrainPipelineConfig { lambda: 0.5, p: 100, p0: Some(150), epsilon: 0.5, seed: 9 },
+    );
+    let (model, _) = pipe.run(&train.x, &train.y).unwrap();
+    let ny_mse = mse(&model.predict(&test.x), &test.y);
+    assert!(
+        ny_mse < exact_mse * 1.25,
+        "nystrom test mse {ny_mse} vs exact {exact_mse}"
+    );
+}
+
+#[test]
+fn csv_roundtrip_through_training() {
+    // datagen → CSV → load → train: the CLI's data path.
+    let ds = data::synth_bernoulli(120, 2, 0.1, 10);
+    let path = std::env::temp_dir().join(format!("fastkrr_it_{}.csv", std::process::id()));
+    data::save_csv(&ds, &path).unwrap();
+    let loaded = data::load_csv(&path).unwrap();
+    assert_eq!(loaded.n(), 120);
+    let m = ExactKrr::fit(
+        &loaded.x,
+        &loaded.y,
+        KernelKind::Bernoulli { order: 2 },
+        1e-5,
+    )
+    .unwrap();
+    assert!(mse(m.fitted(), &loaded.y) < 0.2);
+    std::fs::remove_file(&path).ok();
+}

@@ -1,0 +1,113 @@
+//! Integration: the AOT artifact contract — every artifact in the manifest
+//! loads, compiles, executes, and matches the Rust-native oracle. This is
+//! the Rust half of the L1/L2 correctness story (the Python half is
+//! pytest vs ref.py).
+
+use fastkrr::rng::Pcg64;
+use fastkrr::runtime::{Manifest, Runtime};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = fastkrr::runtime::default_artifact_dir();
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[test]
+fn every_manifest_artifact_loads_and_runs() {
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let manifest = Manifest::load(&dir.join("manifest.json")).unwrap();
+    assert!(!manifest.artifacts.is_empty());
+    let rt = Runtime::load(&dir).unwrap();
+    let mut rng = Pcg64::new(99);
+    for spec in &manifest.artifacts {
+        // Random (finite) inputs of the declared shapes.
+        let inputs: Vec<Vec<f32>> = spec
+            .arg_shapes
+            .iter()
+            .map(|shape| {
+                let len: usize = shape.iter().product();
+                (0..len).map(|_| rng.normal() as f32 * 0.5).collect()
+            })
+            .collect();
+        let out = rt.execute(&spec.name, &inputs).unwrap();
+        assert!(!out.is_empty(), "{}: empty output", spec.name);
+        assert!(
+            out.iter().all(|v| v.is_finite()),
+            "{}: non-finite output",
+            spec.name
+        );
+    }
+}
+
+#[test]
+fn predict_artifacts_consistent_across_batch_sizes() {
+    // The same (landmarks, v, x) must give the same prediction whether it
+    // rides in the b=1, b=8 or b=32 artifact (padding excess slots).
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let manifest = Manifest::load(&dir.join("manifest.json")).unwrap();
+    let predicts = manifest.predict_batches();
+    if predicts.len() < 2 {
+        return;
+    }
+    let d = predicts[0].d.unwrap();
+    let p = predicts[0].p.unwrap();
+    let mut rng = Pcg64::new(3);
+    let x1: Vec<f32> = (0..d).map(|_| rng.normal() as f32).collect();
+    let lm: Vec<f32> = (0..p * d).map(|_| rng.normal() as f32).collect();
+    let v: Vec<f32> = (0..p).map(|_| rng.normal() as f32 * 0.2).collect();
+    let names: Vec<&str> = predicts.iter().map(|s| s.name.as_str()).collect();
+    let rt = Runtime::load_subset(&dir, &names).unwrap();
+    let mut results = Vec::new();
+    for spec in &predicts {
+        let b = spec.batch.unwrap();
+        let mut xbatch = vec![0.0f32; b * d];
+        xbatch[..d].copy_from_slice(&x1);
+        let out = rt
+            .execute(&spec.name, &[xbatch, lm.clone(), v.clone()])
+            .unwrap();
+        results.push(out[0]);
+    }
+    for w in results.windows(2) {
+        assert!(
+            (w[0] - w[1]).abs() < 1e-5,
+            "batch-size inconsistency: {results:?}"
+        );
+    }
+}
+
+#[test]
+fn leverage_artifact_agrees_with_rust_leverage_path() {
+    // Cross-layer check: the AOT leverage artifact computes the same scores
+    // as leverage::leverage_from_factor's inner formula.
+    let Some(dir) = artifacts_dir() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    let manifest = Manifest::load(&dir.join("manifest.json")).unwrap();
+    let Some(spec) = manifest.artifacts.iter().find(|a| a.kind == "leverage") else {
+        return;
+    };
+    let (n_tile, p) = (spec.arg_shapes[0][0], spec.arg_shapes[0][1]);
+    let mut rng = Pcg64::new(17);
+    let b = fastkrr::linalg::Mat::from_fn(n_tile, p, |_, _| rng.normal() * 0.3);
+    // Symmetric PSD M.
+    let g = fastkrr::linalg::Mat::from_fn(p, p, |_, _| rng.normal() * 0.1);
+    let m = fastkrr::linalg::syrk_at_a(&g);
+    let rt = Runtime::load_subset(&dir, &[&spec.name]).unwrap();
+    let got = rt.execute(&spec.name, &[b.to_f32(), m.to_f32()]).unwrap();
+    // Native: diag(B M Bᵀ).
+    let bm = fastkrr::linalg::matmul(&b, &m);
+    for i in 0..n_tile {
+        let want = fastkrr::linalg::dot(bm.row(i), b.row(i));
+        assert!(
+            (got[i] as f64 - want).abs() < 1e-3,
+            "i={i}: {} vs {want}",
+            got[i]
+        );
+    }
+}

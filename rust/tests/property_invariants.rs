@@ -1,0 +1,341 @@
+//! Property tests over the paper's mathematical invariants, run across
+//! randomized kernels/datasets/sketches via the seeded `testing::forall`
+//! harness (replay any failure with `FASTKRR_PROP_SEED=<seed>`).
+
+use fastkrr::kernel::Kernel;
+use fastkrr::krr::risk::{exact_risk, nystrom_risk};
+use fastkrr::leverage::{approx_ridge_leverage, exact_ridge_leverage, leverage_from_factor};
+use fastkrr::linalg::{eigh, matmul, matmul_a_bt, Cholesky, Mat};
+use fastkrr::nystrom::NystromFactor;
+use fastkrr::rng::{AliasTable, Pcg64};
+use fastkrr::sketch::{draw_columns, ColumnSketch};
+use fastkrr::testing::{forall, gen_data, gen_dim, gen_kernel, gen_spd, gen_weights};
+
+fn cases() -> usize {
+    fastkrr::testing::default_cases().min(24)
+}
+
+/// Lemma 1: every Nyström approximation satisfies L ⪯ K (min eig of K−L
+/// ≥ −tol) and L_γ ⪯ L.
+#[test]
+fn prop_nystrom_psd_order() {
+    forall("nystrom-psd-order", cases(), |rng, _case| {
+        let n = gen_dim(rng, 8, 28);
+        let d = gen_dim(rng, 1, 5);
+        let p = gen_dim(rng, 2, n);
+        let x = gen_data(rng, n, d, 1.0);
+        let kernel = gen_kernel(rng);
+        let km = kernel.matrix(&x);
+        let sketch = draw_columns(&gen_weights(rng, n), p, rng).unwrap();
+        let f = NystromFactor::from_sketch(&kernel, &x, &sketch).unwrap();
+        let mut diff = km.sub(&f.dense()).unwrap();
+        diff.symmetrize();
+        let min_eig = eigh(&diff).unwrap().min();
+        let scale = km.max_abs().max(1.0);
+        assert!(min_eig > -1e-6 * scale, "L ⪯ K violated: {min_eig}");
+        // Regularized variant sits below the pseudo-inverse one.
+        let fg =
+            NystromFactor::from_sketch_regularized(&kernel, &x, &sketch, 0.1 * scale)
+                .unwrap();
+        let mut diff2 = f.dense().sub(&fg.dense()).unwrap();
+        diff2.symmetrize();
+        let min2 = eigh(&diff2).unwrap().min();
+        assert!(min2 > -1e-6 * scale, "L_γ ⪯ L violated: {min2}");
+    });
+}
+
+/// Theorem 4 (one-sided): approximate scores never exceed exact scores,
+/// for every kernel and sketch size; both lie in [0, 1].
+#[test]
+fn prop_approx_leverage_upper_bounded() {
+    forall("approx-leverage-bound", cases(), |rng, _case| {
+        let n = gen_dim(rng, 10, 40);
+        let d = gen_dim(rng, 1, 4);
+        let p = gen_dim(rng, 2, n);
+        let lambda = 10f64.powf(rng.uniform_in(-4.0, -0.5));
+        let x = gen_data(rng, n, d, 1.0);
+        let kernel = gen_kernel(rng);
+        let km = kernel.matrix(&x);
+        let exact = exact_ridge_leverage(&km, lambda).unwrap();
+        let approx = approx_ridge_leverage(&kernel, &x, lambda, p, rng).unwrap();
+        for (i, (a, e)) in approx.scores.iter().zip(&exact.scores).enumerate() {
+            assert!((0.0..=1.0).contains(a), "l̃[{i}]={a} out of [0,1]");
+            assert!((0.0..=1.0 + 1e-12).contains(e));
+            assert!(*a <= e + 1e-5, "Thm4 upper bound violated at {i}: {a} > {e}");
+        }
+        assert!(approx.d_eff_estimate <= exact.d_eff + 1e-4);
+    });
+}
+
+/// d_eff and every leverage score are monotone non-increasing in λ.
+#[test]
+fn prop_leverage_monotone_in_lambda() {
+    forall("leverage-monotone-lambda", cases(), |rng, _case| {
+        let n = gen_dim(rng, 8, 30);
+        let x = gen_data(rng, n, 2, 1.0);
+        let kernel = gen_kernel(rng);
+        let km = kernel.matrix(&x);
+        let l1 = 10f64.powf(rng.uniform_in(-5.0, -1.0));
+        let l2 = l1 * rng.uniform_in(1.5, 20.0);
+        let a = exact_ridge_leverage(&km, l1).unwrap();
+        let b = exact_ridge_leverage(&km, l2).unwrap();
+        assert!(b.d_eff <= a.d_eff + 1e-9);
+        for (sa, sb) in a.scores.iter().zip(&b.scores) {
+            assert!(sb <= &(sa + 1e-9), "score grew with λ: {sa} → {sb}");
+        }
+    });
+}
+
+/// The Woodbury p-dimensional solve used by NystromKrr equals the direct
+/// dense solve of (L + nλI)α = y.
+#[test]
+fn prop_woodbury_matches_dense_solve() {
+    forall("woodbury-vs-dense", cases(), |rng, _case| {
+        let n = gen_dim(rng, 8, 26);
+        let d = gen_dim(rng, 1, 4);
+        let p = gen_dim(rng, 2, n);
+        let lambda = 10f64.powf(rng.uniform_in(-3.0, -0.5));
+        let x = gen_data(rng, n, d, 1.0);
+        let y = rng.normal_vec(n);
+        let kernel = gen_kernel(rng);
+        let sketch = draw_columns(&gen_weights(rng, n), p, rng).unwrap();
+        let factor = NystromFactor::from_sketch(&kernel, &x, &sketch).unwrap();
+        let l = factor.dense();
+        let model = fastkrr::krr::NystromKrr::from_factor(
+            x.clone(),
+            &y,
+            kernel.clone(),
+            lambda,
+            factor,
+        )
+        .unwrap();
+        // Dense reference: f̂ = L (L + nλI)^{-1} y.
+        let mut reg = l.clone();
+        reg.symmetrize();
+        reg.add_scaled_identity(n as f64 * lambda);
+        let alpha = Cholesky::new_with_jitter(&reg).unwrap().solve_vec(&y);
+        let want = l.matvec(&alpha);
+        for (a, b) in model.fitted().iter().zip(&want) {
+            assert!((a - b).abs() < 1e-5, "woodbury {a} vs dense {b}");
+        }
+    });
+}
+
+/// Risk decomposition invariants under approximation: variance(L) ≤
+/// variance(K) and bias(L) ≥ bias(K) (§2 monotonicity arguments).
+#[test]
+fn prop_risk_bias_variance_monotonicity() {
+    forall("risk-monotonicity", cases(), |rng, _case| {
+        let n = gen_dim(rng, 10, 28);
+        let d = gen_dim(rng, 1, 4);
+        let p = gen_dim(rng, 2, n.saturating_sub(1).max(2));
+        let lambda = 10f64.powf(rng.uniform_in(-3.0, -0.7));
+        let sigma = rng.uniform_in(0.05, 1.0);
+        let x = gen_data(rng, n, d, 1.0);
+        let kernel = gen_kernel(rng);
+        let km = kernel.matrix(&x);
+        let f_star = km.matvec(&rng.normal_vec(n)); // f* in the RKHS span
+        let sketch = draw_columns(&gen_weights(rng, n), p, rng).unwrap();
+        let factor = NystromFactor::from_sketch(&kernel, &x, &sketch).unwrap();
+        let rk = exact_risk(&km, &f_star, sigma, lambda).unwrap();
+        let rl = nystrom_risk(&factor, &f_star, sigma, lambda).unwrap();
+        let tol = 1e-8 * (1.0 + rk.variance.abs());
+        assert!(rl.variance <= rk.variance + tol, "variance grew under L");
+        assert!(
+            rl.bias_sq >= rk.bias_sq - 1e-8 * (1.0 + rk.bias_sq),
+            "bias shrank under L: {} < {}",
+            rl.bias_sq,
+            rk.bias_sq
+        );
+    });
+}
+
+/// leverage_from_factor with the full identity sketch reproduces exact
+/// scores for arbitrary kernels (algebraic identity, not approximation).
+#[test]
+fn prop_full_sketch_leverage_identity() {
+    forall("full-sketch-identity", cases(), |rng, _case| {
+        let n = gen_dim(rng, 6, 18);
+        let x = gen_data(rng, n, 2, 1.0);
+        let kernel = gen_kernel(rng);
+        let km = kernel.matrix(&x);
+        let lambda = 10f64.powf(rng.uniform_in(-3.0, -1.0));
+        let sketch = ColumnSketch {
+            indices: (0..n).collect(),
+            weights: vec![1.0; n],
+            probs: vec![1.0 / n as f64; n],
+        };
+        let factor = NystromFactor::from_sketch(&kernel, &x, &sketch).unwrap();
+        let approx = leverage_from_factor(&factor, lambda).unwrap();
+        let exact = exact_ridge_leverage(&km, lambda).unwrap();
+        for (a, e) in approx.iter().zip(&exact.scores) {
+            assert!((a - e).abs() < 1e-5, "identity violated: {a} vs {e}");
+        }
+    });
+}
+
+/// Alias-table sampling matches its distribution (χ² over random weights).
+#[test]
+fn prop_alias_sampler_chi2() {
+    forall("alias-chi2", 8, |rng, _case| {
+        let k = gen_dim(rng, 2, 12);
+        let weights = gen_weights(rng, k);
+        let t = AliasTable::new(&weights).unwrap();
+        let n = 60_000;
+        let mut counts = vec![0usize; k];
+        for _ in 0..n {
+            counts[t.sample(rng)] += 1;
+        }
+        let stat: f64 = counts
+            .iter()
+            .zip(t.probabilities())
+            .map(|(&c, &p)| {
+                let e = p * n as f64;
+                (c as f64 - e) * (c as f64 - e) / e
+            })
+            .sum();
+        // χ² with ≤ 11 dof; 0.9999 quantile ≈ 36. Seeded, so deterministic.
+        assert!(stat < 40.0, "chi2 {stat} for k={k}");
+    });
+}
+
+/// eigh reconstruction + Cholesky solve residuals on random SPD matrices.
+#[test]
+fn prop_linalg_identities() {
+    forall("linalg-identities", cases(), |rng, _case| {
+        let n = gen_dim(rng, 2, 24);
+        let a = gen_spd(rng, n, 0.3);
+        // eigh: A = VΛVᵀ.
+        let e = eigh(&a).unwrap();
+        let rec = {
+            let mut scaled = e.vecs.clone();
+            for r in 0..n {
+                for c in 0..n {
+                    scaled[(r, c)] *= e.vals[c];
+                }
+            }
+            matmul_a_bt(&scaled, &e.vecs)
+        };
+        assert!(rec.sub(&a).unwrap().max_abs() < 1e-7 * a.max_abs().max(1.0));
+        // Cholesky: solve residual.
+        let ch = Cholesky::new(&a).unwrap();
+        let b = rng.normal_vec(n);
+        let xv = ch.solve_vec(&b);
+        let r = a.matvec(&xv);
+        for (ri, bi) in r.iter().zip(&b) {
+            assert!((ri - bi).abs() < 1e-6 * (1.0 + bi.abs()));
+        }
+        // matmul associativity smoke: (A·I) = A.
+        let id = Mat::eye(n);
+        assert!(matmul(&a, &id).sub(&a).unwrap().max_abs() < 1e-12);
+    });
+}
+
+/// ServingModel's folded vector reproduces the model's own predictions on
+/// fresh points (the export path used by the engine).
+#[test]
+fn prop_serving_export_consistent() {
+    forall("serving-export", cases(), |rng, _case| {
+        let n = gen_dim(rng, 12, 40);
+        let d = gen_dim(rng, 1, 6);
+        let p = gen_dim(rng, 2, n);
+        let x = gen_data(rng, n, d, 1.0);
+        let y = rng.normal_vec(n);
+        let bw = rng.uniform_in(0.5, 3.0);
+        let cfg = fastkrr::krr::NystromKrrConfig {
+            lambda: 10f64.powf(rng.uniform_in(-3.0, -1.0)),
+            p,
+            strategy: fastkrr::sketch::SketchStrategy::DiagK,
+            gamma: 0.0,
+            seed: rng.next_u64(),
+        };
+        let model = fastkrr::krr::NystromKrr::fit(
+            &x,
+            &y,
+            fastkrr::kernel::KernelKind::Rbf { bandwidth: bw },
+            &cfg,
+        )
+        .unwrap();
+        let sm = fastkrr::coordinator::ServingModel::from_nystrom(&model).unwrap();
+        let xt = gen_data(rng, 7, d, 1.0);
+        let a = model.predict(&xt);
+        let b = sm.predict_native(&xt);
+        for (u, v) in a.iter().zip(&b) {
+            assert!((u - v).abs() < 1e-7, "export mismatch {u} vs {v}");
+        }
+    });
+}
+
+/// JSON codec round-trips arbitrary nested values built from the RNG.
+#[test]
+fn prop_json_roundtrip_fuzz() {
+    use fastkrr::util::json::Json;
+    fn gen_value(rng: &mut Pcg64, depth: usize) -> Json {
+        match if depth == 0 { rng.below(4) } else { rng.below(6) } {
+            0 => Json::Null,
+            1 => Json::Bool(rng.uniform() < 0.5),
+            2 => Json::Num((rng.normal() * 100.0 * 8.0).round() / 8.0),
+            3 => {
+                let len = rng.below(12);
+                let s: String = (0..len)
+                    .map(|_| {
+                        let c = rng.below(38);
+                        match c {
+                            0 => '"',
+                            1 => '\\',
+                            2 => '\n',
+                            3 => 'é',
+                            _ => (b'a' + (c as u8 - 4) % 26) as char,
+                        }
+                    })
+                    .collect();
+                Json::Str(s)
+            }
+            4 => Json::Arr((0..rng.below(4)).map(|_| gen_value(rng, depth - 1)).collect()),
+            _ => {
+                let mut m = std::collections::BTreeMap::new();
+                for i in 0..rng.below(4) {
+                    m.insert(format!("k{i}"), gen_value(rng, depth - 1));
+                }
+                Json::Obj(m)
+            }
+        }
+    }
+    forall("json-roundtrip", 64, |rng, _case| {
+        let v = gen_value(rng, 3);
+        let parsed = Json::parse(&v.dump()).unwrap();
+        assert_eq!(parsed, v);
+    });
+}
+
+/// Batcher drain plans always cover the queue exactly, never exceed the
+/// ladder max, and pick the smallest covering size.
+#[test]
+fn prop_batcher_plans_cover() {
+    use fastkrr::coordinator::{Batcher, BatcherConfig};
+    forall("batcher-cover", 64, |rng, _case| {
+        // Random ascending ladder.
+        let mut sizes = vec![1usize];
+        let mut cur = 1usize;
+        for _ in 0..rng.below(4) {
+            cur *= 2 + rng.below(3);
+            sizes.push(cur);
+        }
+        let cfg = BatcherConfig { batch_sizes: sizes.clone(), ..Default::default() };
+        let b = Batcher::new(&cfg).unwrap();
+        let queued = rng.below(200);
+        let plans = b.drain_plan(queued);
+        let total: usize = plans.iter().map(|p| p.real).sum();
+        assert_eq!(total, queued);
+        for plan in &plans {
+            assert!(sizes.contains(&plan.compiled));
+            assert!(plan.real <= plan.compiled);
+            // Smallest covering size (unless it's a full max batch).
+            if plan.compiled != *sizes.last().unwrap() {
+                let smaller_cover =
+                    sizes.iter().any(|&s| s >= plan.real && s < plan.compiled);
+                assert!(!smaller_cover, "not minimal: {plan:?} ladder {sizes:?}");
+            }
+        }
+    });
+}
