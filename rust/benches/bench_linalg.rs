@@ -4,9 +4,12 @@
 //!
 //! Run: `cargo bench --bench bench_linalg`
 
-use fastkrr::linalg::{eigh, matmul, matmul_a_bt, syrk_at_a, Cholesky, Mat};
+use fastkrr::linalg::{
+    eigh, matmul, matmul_a_bt, matmul_serial, syrk_at_a, syrk_at_a_serial, Cholesky, Mat,
+};
 use fastkrr::metrics::bench::{bench, bench_scale, section};
 use fastkrr::rng::Pcg64;
+use fastkrr::util::parallel::num_threads;
 
 fn randmat(r: usize, c: usize, seed: u64) -> Mat {
     let mut rng = Pcg64::new(seed);
@@ -47,6 +50,43 @@ fn matmul_axpy_baseline(a: &Mat, b: &Mat) -> Mat {
 
 fn main() {
     let scale = bench_scale(1.0);
+    // Thread count is configurable per run: FASTKRR_THREADS=<n> bounds the
+    // chunk count of every parallel region (1 = fully serial).
+    println!(
+        "threads: {} (override with FASTKRR_THREADS; pool workers are fixed at \
+         hardware parallelism)",
+        num_threads()
+    );
+
+    section("parallel scaling (pool-scheduled vs serial reference)");
+    {
+        let m = ((768.0 * scale) as usize).max(128);
+        let a = randmat(m, m, 20);
+        let b = randmat(m, m, 21);
+        let flops = 2.0 * (m as f64).powi(3);
+        let s_ser = bench(&format!("matmul_serial {m}^3"), 1, 3, || {
+            std::hint::black_box(matmul_serial(&a, &b));
+        });
+        println!("{}  [{:.2} GFLOP/s]", s_ser.render(), gflops(flops, s_ser.mean_secs()));
+        let s_par = bench(&format!("matmul (pool, {} threads) {m}^3", num_threads()), 1, 3, || {
+            std::hint::black_box(matmul(&a, &b));
+        });
+        println!("{}  [{:.2} GFLOP/s]", s_par.render(), gflops(flops, s_par.mean_secs()));
+        println!("  parallel speedup: {:.2}×", s_ser.mean_secs() / s_par.mean_secs());
+
+        let n = ((4096.0 * scale) as usize).max(256);
+        let g = randmat(n, 128, 22);
+        let sflops = n as f64 * 128.0 * 128.0;
+        let s_ser = bench(&format!("syrk_at_a_serial {n}x128"), 1, 3, || {
+            std::hint::black_box(syrk_at_a_serial(&g));
+        });
+        println!("{}  [{:.2} GFLOP/s]", s_ser.render(), gflops(sflops, s_ser.mean_secs()));
+        let s_par = bench(&format!("syrk_at_a (pool) {n}x128"), 1, 3, || {
+            std::hint::black_box(syrk_at_a(&g));
+        });
+        println!("{}  [{:.2} GFLOP/s]", s_par.render(), gflops(sflops, s_par.mean_secs()));
+        println!("  parallel speedup: {:.2}×", s_ser.mean_secs() / s_par.mean_secs());
+    }
 
     section("matmul micro-kernel ablation (old AXPY vs 4-row panel reuse)");
     {

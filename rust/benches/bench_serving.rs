@@ -61,8 +61,17 @@ fn main() {
     let (x, sm) = model_at_artifact_shapes();
     let artifact_dir = fastkrr::runtime::default_artifact_dir();
     let have_artifacts = artifact_dir.join("manifest.json").exists();
+    // Worker count is configurable per run: FASTKRR_BENCH_WORKERS=<n>
+    // (default 1) sizes the engine's executor pool for the fixed-worker
+    // sections; a sweep section below varies it explicitly.
+    let bench_workers: usize = std::env::var("FASTKRR_BENCH_WORKERS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
 
-    section("engine throughput (8 clients × 400 reqs)");
+    section(&format!(
+        "engine throughput (8 clients × 400 reqs, {bench_workers} worker(s))"
+    ));
     for (name, backend) in [
         ("native", Some(Backend::Native)),
         (
@@ -82,12 +91,35 @@ fn main() {
                     max_wait: Duration::from_millis(1),
                     ..Default::default()
                 },
+                workers: bench_workers,
             },
         )
         .unwrap();
         let (thr, p50, p99) = run_load(&engine, &x, 8, 400);
         println!(
             "  {name:<7} {thr:>9.0} req/s   p50 {p50:?}  p99 {p99:?}  mean batch {:.1}",
+            engine.stats().mean_batch_size()
+        );
+        engine.shutdown();
+    }
+
+    section("throughput vs executor-pool size (native backend, 16 clients)");
+    for workers in [1usize, 2, 4, 8] {
+        let engine = Engine::start(
+            sm.clone(),
+            EngineConfig {
+                backend: Backend::Native,
+                batcher: BatcherConfig {
+                    max_wait: Duration::from_millis(1),
+                    ..Default::default()
+                },
+                workers,
+            },
+        )
+        .unwrap();
+        let (thr, p50, p99) = run_load(&engine, &x, 16, 200);
+        println!(
+            "  workers={workers:<3} {thr:>9.0} req/s   p50 {p50:?}  p99 {p99:?}  mean batch {:.1}",
             engine.stats().mean_batch_size()
         );
         engine.shutdown();
@@ -103,6 +135,7 @@ fn main() {
                     max_wait: Duration::from_millis(1),
                     ..Default::default()
                 },
+                workers: bench_workers,
             },
         )
         .unwrap();

@@ -57,6 +57,7 @@ fn main() {
         eprintln!("WARNING: artifacts missing — run `make artifacts`; using native backend");
         (Backend::Native, "native")
     };
+    let workers = 2;
     let engine = Engine::start(
         sm,
         EngineConfig {
@@ -65,12 +66,13 @@ fn main() {
                 max_wait: std::time::Duration::from_millis(1),
                 ..Default::default()
             },
+            workers,
         },
     )
     .unwrap();
     let server = Server::start("127.0.0.1:0", engine).unwrap();
     let addr = server.addr().to_string();
-    println!("\n== serving == backend={backend_name} addr={addr}");
+    println!("\n== serving == backend={backend_name} workers={workers} addr={addr}");
 
     // ---- 3. Correctness: PJRT path vs native oracle ----------------------
     let mut probe = Client::connect(&addr).unwrap();

@@ -127,6 +127,7 @@ COMMANDS:
   serve       start the prediction server
                 [--model <model.fkrr>]  (else trains a demo model)
                 [--config <toml>] [--addr host:port] [--backend pjrt|native]
+                [--workers N]  (engine executor-pool size, default 1)
                 [--synth <name>] [--p P]
   predict     query a running server: --remote host:port --data <csv>
   leverage    print λ-ridge leverage scores

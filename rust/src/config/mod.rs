@@ -51,6 +51,9 @@ pub struct ServeConfig {
     /// `pjrt` or `native`.
     pub backend: String,
     pub artifact_dir: Option<String>,
+    /// Executor-pool size: how many engine workers serve batches in
+    /// parallel (each owns its own backend instance).
+    pub workers: usize,
 }
 
 impl Default for ServeConfig {
@@ -61,6 +64,7 @@ impl Default for ServeConfig {
             queue_cap: 1024,
             backend: "pjrt".into(),
             artifact_dir: None,
+            workers: 1,
         }
     }
 }
@@ -130,6 +134,9 @@ impl AppConfig {
             if let Some(v) = s.get("artifact_dir") {
                 cfg.serve.artifact_dir = Some(v.as_str()?.to_string());
             }
+            if let Some(v) = s.get("workers") {
+                cfg.serve.workers = v.as_usize()?;
+            }
         }
         cfg.validate()?;
         Ok(cfg)
@@ -147,6 +154,12 @@ impl AppConfig {
         }
         if self.serve.queue_cap == 0 {
             return Err(Error::invalid("serve.queue_cap must be >= 1"));
+        }
+        if self.serve.workers == 0 {
+            return Err(Error::invalid("serve.workers must be >= 1"));
+        }
+        if self.serve.workers > 256 {
+            return Err(Error::invalid("serve.workers must be <= 256"));
         }
         Ok(())
     }
@@ -172,6 +185,7 @@ addr = "127.0.0.1:9999"
 max_wait_ms = 5
 queue_cap = 256
 backend = "native"
+workers = 4
 "#;
 
     #[test]
@@ -184,6 +198,7 @@ backend = "native"
         assert_eq!(cfg.serve.addr, "127.0.0.1:9999");
         assert_eq!(cfg.serve.backend, "native");
         assert_eq!(cfg.serve.queue_cap, 256);
+        assert_eq!(cfg.serve.workers, 4);
     }
 
     #[test]
@@ -191,6 +206,7 @@ backend = "native"
         let cfg = AppConfig::parse("").unwrap();
         assert_eq!(cfg.train.p, 64);
         assert_eq!(cfg.serve.backend, "pjrt");
+        assert_eq!(cfg.serve.workers, 1);
     }
 
     #[test]
@@ -200,5 +216,7 @@ backend = "native"
         assert!(AppConfig::parse("[train]\nkernel = \"bogus\"\n").is_err());
         assert!(AppConfig::parse("[serve]\nbackend = \"gpu\"\n").is_err());
         assert!(AppConfig::parse("[train]\nepsilon = 2.0\n").is_err());
+        assert!(AppConfig::parse("[serve]\nworkers = 0\n").is_err());
+        assert!(AppConfig::parse("[serve]\nworkers = 1000\n").is_err());
     }
 }

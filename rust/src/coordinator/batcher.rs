@@ -34,6 +34,13 @@ impl Default for BatcherConfig {
 }
 
 impl BatcherConfig {
+    /// Per-worker queue capacity when the request queue is sharded across
+    /// an executor pool: `ceil(queue_cap / workers)`, at least 1, so the
+    /// aggregate bound stays ≈ `queue_cap` at any worker count.
+    pub fn queue_cap_per_worker(&self, workers: usize) -> usize {
+        self.queue_cap.div_ceil(workers.max(1)).max(1)
+    }
+
     pub fn validate(&self) -> Result<()> {
         if self.batch_sizes.is_empty() {
             return Err(Error::invalid("no compiled batch sizes"));
@@ -178,6 +185,17 @@ mod tests {
         assert_eq!(padded.len(), 8);
         assert_eq!(&padded[..4], &flat[..]);
         assert!(padded[4..].iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn queue_cap_sharding() {
+        let mut cfg = BatcherConfig::default();
+        cfg.queue_cap = 10;
+        assert_eq!(cfg.queue_cap_per_worker(1), 10);
+        assert_eq!(cfg.queue_cap_per_worker(3), 4); // ceil(10/3)
+        assert_eq!(cfg.queue_cap_per_worker(0), 10); // 0 treated as 1
+        cfg.queue_cap = 1;
+        assert_eq!(cfg.queue_cap_per_worker(8), 1); // never 0
     }
 
     #[test]

@@ -1,13 +1,22 @@
-//! The serving engine: a dedicated executor thread that owns the PJRT
-//! [`Runtime`] (whose handles are not `Send`) and drains a bounded request
-//! queue through the dynamic [`Batcher`].
+//! The serving engine: an **executor pool** of N worker threads, each
+//! owning its own backend instance (the PJRT [`Runtime`] handles are not
+//! `Send`, and the native path clones the small `ServingModel`), draining
+//! per-worker bounded request queues through the dynamic [`Batcher`].
 //!
 //! Request flow:
-//!   caller → `Engine::predict` → bounded mpsc queue → executor thread
-//!   (collect up to `max_wait` / batch ladder) → PJRT `predict_b*` artifact
-//!   (or the native fallback) → per-request oneshot reply.
+//!   caller → `Engine::predict` → round-robin pick of a worker queue
+//!   (bounded mpsc; on a full queue the other workers are tried once) →
+//!   executor worker (collect up to `max_wait` / batch ladder) → PJRT
+//!   `predict_b*` artifact (or the native fallback) → per-request oneshot
+//!   reply.
 //!
-//! Backpressure: the queue is a `sync_channel(queue_cap)`; when full,
+//! Scaling: workers batch independently, so N workers execute N batches
+//! concurrently; stats ([`EngineStats`]) are shared atomics across the
+//! pool. Worker count comes from `EngineConfig::workers` (config key
+//! `serve.workers`, CLI `--workers`).
+//!
+//! Backpressure: the aggregate queue bound is `queue_cap`, sharded as
+//! `ceil(queue_cap / workers)` per queue; when every queue is full,
 //! `predict` returns `ErrorKind::Runtime` ("queue full") instead of
 //! blocking forever — callers decide whether to retry.
 
@@ -18,8 +27,8 @@ use crate::metrics::{Counter, LatencyHistogram};
 use crate::runtime::Runtime;
 use crate::util::{Error, Result};
 use std::path::PathBuf;
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -37,6 +46,9 @@ pub enum Backend {
 pub struct EngineConfig {
     pub backend: Backend,
     pub batcher: BatcherConfig,
+    /// Number of executor workers. Each owns its own backend instance and
+    /// batches independently; 0 is treated as 1.
+    pub workers: usize,
 }
 
 impl Default for EngineConfig {
@@ -46,11 +58,12 @@ impl Default for EngineConfig {
                 artifact_dir: crate::runtime::default_artifact_dir(),
             },
             batcher: BatcherConfig::default(),
+            workers: 1,
         }
     }
 }
 
-/// Live counters exposed by the engine.
+/// Live counters exposed by the engine (shared across all workers).
 #[derive(Debug, Default)]
 pub struct EngineStats {
     pub requests: Counter,
@@ -77,49 +90,89 @@ struct Job {
     reply: SyncSender<Result<f64>>,
 }
 
-/// Handle to a running serving engine.
+/// Handle to a running serving engine (the executor pool).
 pub struct Engine {
-    tx: Option<SyncSender<Job>>,
-    worker: Option<std::thread::JoinHandle<()>>,
+    senders: Vec<SyncSender<Job>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    next: AtomicUsize,
     stats: Arc<EngineStats>,
+    /// Requests served per worker — dispatch-balance observability.
+    worker_requests: Arc<Vec<Counter>>,
     dim: usize,
     ready: Arc<AtomicBool>,
+    n_workers: usize,
 }
 
 impl Engine {
-    /// Start the engine. Fails fast (before returning) if the backend
-    /// cannot initialize — e.g. missing artifacts or a model/artifact shape
-    /// mismatch.
+    /// Start the engine. Fails fast (before returning) if any worker's
+    /// backend cannot initialize — e.g. missing artifacts or a
+    /// model/artifact shape mismatch.
     pub fn start(model: ServingModel, cfg: EngineConfig) -> Result<Self> {
         cfg.batcher.validate()?;
+        let n_workers = cfg.workers.max(1);
+        if n_workers > 256 {
+            return Err(Error::invalid(format!(
+                "workers {n_workers} exceeds the sanity cap of 256"
+            )));
+        }
         let stats = Arc::new(EngineStats::default());
-        let (tx, rx) = sync_channel::<Job>(cfg.batcher.queue_cap);
-        let dim = model.d();
         let ready = Arc::new(AtomicBool::new(false));
-        let (init_tx, init_rx) = sync_channel::<Result<()>>(1);
-        let worker = {
+        let dim = model.d();
+        let per_cap = cfg.batcher.queue_cap_per_worker(n_workers);
+        let worker_requests: Arc<Vec<Counter>> =
+            Arc::new((0..n_workers).map(|_| Counter::new()).collect());
+        let (init_tx, init_rx) = sync_channel::<Result<()>>(n_workers);
+        let mut senders = Vec::with_capacity(n_workers);
+        let mut workers = Vec::with_capacity(n_workers);
+        for w in 0..n_workers {
+            let (tx, rx) = sync_channel::<Job>(per_cap);
+            senders.push(tx);
             let stats = stats.clone();
-            let ready = ready.clone();
-            std::thread::Builder::new()
-                .name("fastkrr-engine".into())
-                .spawn(move || {
-                    executor_main(model, cfg, rx, stats, ready, init_tx);
-                })
-                .map_err(|e| Error::runtime(format!("spawn engine: {e}")))?
-        };
-        // Wait for backend init so startup errors surface synchronously.
-        match init_rx.recv() {
-            Ok(Ok(())) => {}
-            Ok(Err(e)) => {
-                let _ = worker.join();
-                return Err(e);
-            }
-            Err(_) => {
-                let _ = worker.join();
-                return Err(Error::runtime("engine died during init"));
+            let init_tx = init_tx.clone();
+            let model = model.clone();
+            let cfg = cfg.clone();
+            let worker_requests = worker_requests.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("fastkrr-engine-{w}"))
+                .spawn(move || executor_main(model, cfg, rx, stats, worker_requests, w, init_tx))
+                .map_err(|e| Error::runtime(format!("spawn engine worker {w}: {e}")))?;
+            workers.push(handle);
+        }
+        drop(init_tx);
+        // Wait for every worker's backend init so startup errors surface
+        // synchronously; the first failure aborts the whole pool.
+        let mut failure: Option<Error> = None;
+        for _ in 0..n_workers {
+            match init_rx.recv() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => {
+                    failure = Some(e);
+                    break;
+                }
+                Err(_) => {
+                    failure = Some(Error::runtime("engine worker died during init"));
+                    break;
+                }
             }
         }
-        Ok(Self { tx: Some(tx), worker: Some(worker), stats, dim, ready })
+        if let Some(e) = failure {
+            senders.clear(); // close the queues → surviving workers exit
+            for h in workers {
+                let _ = h.join();
+            }
+            return Err(e);
+        }
+        ready.store(true, Ordering::Release);
+        Ok(Self {
+            senders,
+            workers,
+            next: AtomicUsize::new(0),
+            stats,
+            worker_requests,
+            dim,
+            ready,
+            n_workers,
+        })
     }
 
     /// Predict a single point (blocks until the batch containing it runs).
@@ -131,24 +184,40 @@ impl Engine {
                 self.dim
             )));
         }
+        let n = self.senders.len();
+        if n == 0 {
+            return Err(Error::runtime("engine stopped"));
+        }
         let (reply_tx, reply_rx) = sync_channel(1);
-        let job = Job { x: x.to_vec(), enqueued: Instant::now(), reply: reply_tx };
-        let tx = self.tx.as_ref().ok_or_else(|| Error::runtime("engine stopped"))?;
-        tx.try_send(job).map_err(|e| match e {
-            std::sync::mpsc::TrySendError::Full(_) => {
-                Error::runtime("queue full (backpressure)")
+        let mut job = Job { x: x.to_vec(), enqueued: Instant::now(), reply: reply_tx };
+        // Round-robin dispatch; when the chosen worker's queue is full,
+        // try the remaining workers once before reporting backpressure.
+        let start = self.next.fetch_add(1, Ordering::Relaxed);
+        let mut disconnected = 0usize;
+        for k in 0..n {
+            let tx = &self.senders[(start + k) % n];
+            match tx.try_send(job) {
+                Ok(()) => {
+                    return reply_rx
+                        .recv()
+                        .map_err(|_| Error::runtime("engine dropped request"))?;
+                }
+                Err(TrySendError::Full(j)) => job = j,
+                Err(TrySendError::Disconnected(j)) => {
+                    job = j;
+                    disconnected += 1;
+                }
             }
-            std::sync::mpsc::TrySendError::Disconnected(_) => {
-                Error::runtime("engine stopped")
-            }
-        })?;
-        reply_rx
-            .recv()
-            .map_err(|_| Error::runtime("engine dropped request"))?
+        }
+        if disconnected == n {
+            Err(Error::runtime("engine stopped"))
+        } else {
+            Err(Error::runtime("queue full (backpressure)"))
+        }
     }
 
     /// Convenience: predict many points (submitted concurrently so the
-    /// batcher can coalesce them).
+    /// batchers can coalesce them across the worker pool).
     pub fn predict_many(&self, xs: &Mat) -> Vec<Result<f64>> {
         let n = xs.rows();
         let mut out: Vec<Result<f64>> = Vec::with_capacity(n);
@@ -166,25 +235,37 @@ impl Engine {
         out
     }
 
-    /// Live stats.
+    /// Live stats (aggregated over all workers).
     pub fn stats(&self) -> &EngineStats {
         &self.stats
     }
 
-    /// Whether the backend initialized (always true after `start` returns).
+    /// Number of executor workers in the pool.
+    pub fn workers(&self) -> usize {
+        self.n_workers
+    }
+
+    /// Requests served by each worker (index = worker id) — shows whether
+    /// round-robin dispatch is actually balancing the pool.
+    pub fn worker_request_counts(&self) -> Vec<u64> {
+        self.worker_requests.iter().map(|c| c.get()).collect()
+    }
+
+    /// Whether every backend initialized (always true after `start`
+    /// returns).
     pub fn ready(&self) -> bool {
         self.ready.load(Ordering::Acquire)
     }
 
-    /// Stop the executor and wait for it to drain.
+    /// Stop the executor pool and wait for it to drain.
     pub fn shutdown(mut self) {
         self.shutdown_inner();
     }
 
     fn shutdown_inner(&mut self) {
-        self.tx.take(); // close the queue
-        if let Some(w) = self.worker.take() {
-            let _ = w.join();
+        self.senders.clear(); // close every queue
+        for h in self.workers.drain(..) {
+            let _ = h.join();
         }
     }
 }
@@ -213,13 +294,13 @@ fn executor_main(
     cfg: EngineConfig,
     rx: Receiver<Job>,
     stats: Arc<EngineStats>,
-    ready: Arc<AtomicBool>,
+    worker_requests: Arc<Vec<Counter>>,
+    widx: usize,
     init_tx: SyncSender<Result<()>>,
 ) {
     // ---- backend init (inside the thread: PJRT handles are !Send) -------
     let (backend, batcher) = match init_backend(&model, &cfg) {
         Ok(pair) => {
-            ready.store(true, Ordering::Release);
             let _ = init_tx.send(Ok(()));
             pair
         }
@@ -261,6 +342,7 @@ fn executor_main(
         stats.batches.inc();
         stats.requests.add(plan.real as u64);
         stats.padded_slots.add((plan.compiled - plan.real) as u64);
+        worker_requests[widx].add(plan.real as u64);
         match result {
             Ok(ys) => {
                 for (i, job) in jobs.into_iter().enumerate() {
@@ -387,16 +469,21 @@ mod tests {
         (x, ServingModel::from_nystrom(&m).unwrap())
     }
 
+    fn native_cfg(workers: usize) -> EngineConfig {
+        EngineConfig {
+            backend: Backend::Native,
+            batcher: BatcherConfig::default(),
+            workers,
+        }
+    }
+
     #[test]
     fn native_engine_serves_and_matches_direct() {
         let (x, sm) = serving_model(50, 8, 16);
         let want = sm.predict_native(&x);
-        let engine = Engine::start(
-            sm,
-            EngineConfig { backend: Backend::Native, batcher: BatcherConfig::default() },
-        )
-        .unwrap();
+        let engine = Engine::start(sm, native_cfg(1)).unwrap();
         assert!(engine.ready());
+        assert_eq!(engine.workers(), 1);
         for i in 0..x.rows() {
             let got = engine.predict(x.row(i)).unwrap();
             assert!((got - want[i]).abs() < 1e-5, "i={i}: {got} vs {}", want[i]);
@@ -414,7 +501,7 @@ mod tests {
         bcfg.max_wait = std::time::Duration::from_millis(5);
         let engine = Engine::start(
             sm,
-            EngineConfig { backend: Backend::Native, batcher: bcfg },
+            EngineConfig { backend: Backend::Native, batcher: bcfg, workers: 1 },
         )
         .unwrap();
         let got = engine.predict_many(&x);
@@ -432,20 +519,56 @@ mod tests {
     }
 
     #[test]
-    fn dimension_mismatch_rejected() {
-        let (_, sm) = serving_model(30, 8, 8);
+    fn multi_worker_pool_matches_native_and_counts() {
+        let (x, sm) = serving_model(120, 8, 16);
+        let want = sm.predict_native(&x);
+        let engine = Engine::start(sm, native_cfg(4)).unwrap();
+        assert_eq!(engine.workers(), 4);
+        let got = engine.predict_many(&x);
+        for (i, r) in got.iter().enumerate() {
+            let v = r.as_ref().unwrap();
+            assert!((v - want[i]).abs() < 1e-5, "i={i}");
+        }
+        // Shared stats: every request counted exactly once across workers.
+        assert_eq!(engine.stats().requests.get(), 120);
+        assert_eq!(engine.stats().errors.get(), 0);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn round_robin_spreads_across_workers() {
+        // Serial blocking predicts never hit a full queue, so dispatch is
+        // pure round-robin: 60 requests over 3 workers must land exactly
+        // 20 on each (this fails if dispatch collapses onto one worker).
+        let (x, sm) = serving_model(60, 8, 16);
+        let mut bcfg = BatcherConfig::default();
+        bcfg.max_wait = std::time::Duration::from_micros(100);
         let engine = Engine::start(
             sm,
-            EngineConfig { backend: Backend::Native, batcher: BatcherConfig::default() },
+            EngineConfig { backend: Backend::Native, batcher: bcfg, workers: 3 },
         )
         .unwrap();
+        for i in 0..x.rows() {
+            engine.predict(x.row(i)).unwrap();
+        }
+        assert_eq!(engine.stats().requests.get(), 60);
+        let per_worker = engine.worker_request_counts();
+        assert_eq!(per_worker, vec![20, 20, 20], "dispatch imbalance: {per_worker:?}");
+        engine.shutdown();
+    }
+
+    #[test]
+    fn dimension_mismatch_rejected() {
+        let (_, sm) = serving_model(30, 8, 8);
+        let engine = Engine::start(sm, native_cfg(2)).unwrap();
         assert!(engine.predict(&[0.0; 5]).is_err());
         engine.shutdown();
     }
 
     #[test]
     fn pjrt_backend_fails_fast_on_shape_mismatch() {
-        // Model p=16 ≠ artifact p=64 → start must error, not hang.
+        // Model p=16 ≠ artifact p=64 → start must error, not hang — for a
+        // multi-worker pool too (every worker joins before the error).
         let (_, sm) = serving_model(30, 8, 16);
         let dir = crate::runtime::default_artifact_dir();
         if !dir.join("manifest.json").exists() {
@@ -457,6 +580,7 @@ mod tests {
             EngineConfig {
                 backend: Backend::Pjrt { artifact_dir: dir },
                 batcher: BatcherConfig::default(),
+                workers: 3,
             },
         );
         assert!(res.is_err());
@@ -477,6 +601,7 @@ mod tests {
             EngineConfig {
                 backend: Backend::Pjrt { artifact_dir: dir },
                 batcher: BatcherConfig::default(),
+                workers: 2,
             },
         )
         .unwrap();
@@ -495,11 +620,7 @@ mod tests {
     #[test]
     fn shutdown_then_predict_errors() {
         let (_, sm) = serving_model(20, 8, 8);
-        let engine = Engine::start(
-            sm,
-            EngineConfig { backend: Backend::Native, batcher: BatcherConfig::default() },
-        )
-        .unwrap();
+        let engine = Engine::start(sm, native_cfg(2)).unwrap();
         let stats_requests = engine.stats().requests.get();
         engine.shutdown();
         assert_eq!(stats_requests, 0);

@@ -1,11 +1,14 @@
-//! L3 coordinator: the serving engine (dynamic batcher + PJRT executor) and
+//! L3 coordinator: the serving engine (dynamic batcher + executor pool) and
 //! the two-pass leverage-sampled training pipeline.
 //!
 //! This is the systems half of the paper: §3.5's O(np²) algorithm becomes a
 //! staged [`pipeline::TrainPipeline`]; Theorem 3's leverage-sampled Nyström
 //! estimator becomes a deployable [`ServingModel`] behind an
-//! [`engine::Engine`] that batches concurrent prediction requests onto the
-//! fixed-shape AOT artifacts (Python never runs at request time).
+//! [`engine::Engine`] — a pool of N executor workers (config
+//! `serve.workers` / CLI `--workers`), each owning its own PJRT runtime or
+//! native fallback, batching concurrent prediction requests onto the
+//! fixed-shape AOT artifacts behind round-robin dispatch with shared
+//! stats and sharded backpressure (Python never runs at request time).
 
 pub mod batcher;
 pub mod engine;

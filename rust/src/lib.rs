@@ -21,7 +21,34 @@
 //! - **L1 (python/compile/kernels/)** — Pallas kernels for the pairwise
 //!   kernel block and Nyström leverage scoring (interpret=True on CPU).
 //! - **Runtime ([`runtime`])** — loads `artifacts/*.hlo.txt` via the PJRT
-//!   CPU client (`xla` crate) and executes them from the Rust hot path.
+//!   CPU client (`xla` crate, behind the off-by-default `pjrt` feature;
+//!   the default build substitutes a fail-fast stub) and executes them
+//!   from the Rust hot path.
+//!
+//! ## Parallel substrate & worker-pool design
+//!
+//! Two layers run concurrently, on separate thread populations:
+//!
+//! - **Dense math** ([`util::parallel`]) — one persistent crate-wide
+//!   [`util::parallel::ThreadPool`]; `matmul`/`syrk`/triangular solves
+//!   shard row panels onto it via `par_chunks_mut`. Callers waiting on a
+//!   parallel region *help* by running their own scope's unclaimed tasks,
+//!   so nested regions cannot deadlock and a waiting caller never executes
+//!   another scope's work. `FASTKRR_THREADS` bounds the per-region chunk count
+//!   (1 = serial); results are chunk-count-invariant (per-row op order is
+//!   fixed), which `tests/property_parallel.rs` soaks.
+//! - **Serving** ([`coordinator::engine`]) — an executor pool of
+//!   `serve.workers` engine threads (CLI `--workers`), each owning its own
+//!   non-`Send` PJRT runtime (or a native-model clone) and its own bounded
+//!   request queue (`ceil(queue_cap / workers)`), fed by round-robin
+//!   dispatch that falls over to sibling queues before reporting
+//!   backpressure; stats are shared atomics.
+//!
+//! ## Replaying property-test failures
+//!
+//! The seeded suites print `replay with FASTKRR_PROP_SEED=<seed>` on
+//! failure; set that env var to re-run exactly the failing case, and
+//! `FASTKRR_PROP_CASES=<n>` (default 32, CI soak uses 64) to deepen a run.
 
 pub mod cli;
 pub mod config;

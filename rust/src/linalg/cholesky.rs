@@ -196,6 +196,29 @@ fn solve_lower_transpose_inplace(l: &Mat, b: &mut [f64]) {
     }
 }
 
+/// Serial reference for [`solve_lower`]: identical per-RHS arithmetic, no
+/// threading — the oracle for the parallel-solve property tests.
+pub fn solve_lower_serial(l: &Mat, b: &Mat) -> Mat {
+    assert_eq!(l.rows(), b.rows());
+    let mut xt = b.transpose();
+    let n = l.rows();
+    for row in xt.as_mut_slice().chunks_mut(n.max(1)) {
+        solve_lower_inplace(l, row);
+    }
+    xt.transpose()
+}
+
+/// Serial reference for [`solve_lower_transpose`].
+pub fn solve_lower_transpose_serial(l: &Mat, b: &Mat) -> Mat {
+    assert_eq!(l.rows(), b.rows());
+    let mut xt = b.transpose();
+    let n = l.rows();
+    for row in xt.as_mut_slice().chunks_mut(n.max(1)) {
+        solve_lower_transpose_inplace(l, row);
+    }
+    xt.transpose()
+}
+
 /// Solve `L Y = B` for matrix B (B overwritten semantics: returns new Mat).
 pub fn solve_lower(l: &Mat, b: &Mat) -> Mat {
     assert_eq!(l.rows(), b.rows());
@@ -323,6 +346,22 @@ mod tests {
         let x = solve_lower_transpose(l, &b);
         let rec2 = matmul(&l.transpose(), &x);
         assert!(rec2.sub(&b).unwrap().max_abs() < 1e-9);
+    }
+
+    #[test]
+    fn parallel_triangular_solves_match_serial() {
+        let a = spd(33, 17);
+        let ch = Cholesky::new(&a).unwrap();
+        let l = ch.factor_l();
+        let mut rng = Pcg64::new(18);
+        let b = Mat::from_fn(33, 9, |_, _| rng.normal());
+        let d1 = solve_lower(l, &b).sub(&solve_lower_serial(l, &b)).unwrap().max_abs();
+        assert!(d1 < 1e-12, "solve_lower drift {d1}");
+        let d2 = solve_lower_transpose(l, &b)
+            .sub(&solve_lower_transpose_serial(l, &b))
+            .unwrap()
+            .max_abs();
+        assert!(d2 < 1e-12, "solve_lower_transpose drift {d2}");
     }
 
     #[test]

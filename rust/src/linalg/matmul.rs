@@ -134,6 +134,92 @@ pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
     out
 }
 
+// ---- serial reference paths ----------------------------------------------
+//
+// Single-threaded twins of the parallel kernels above, using the same
+// per-element accumulation order, so the property suite can assert that the
+// pool-scheduled versions are (bitwise-or-1e-12) identical across chunk
+// counts. They are also the ablation baselines in `bench_linalg`.
+
+/// Serial `A (m×k) · B (k×n)` — same k-ascending accumulation order as
+/// [`matmul`], no threading.
+pub fn matmul_serial(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.rows(), "matmul_serial inner dims");
+    let (m, k, n) = (a.rows(), a.cols(), b.cols());
+    let mut out = Mat::zeros(m, n);
+    if m == 0 || n == 0 || k == 0 {
+        return out;
+    }
+    let a_data = a.as_slice();
+    let b_data = b.as_slice();
+    let chunk = out.as_mut_slice();
+    for kb in (0..k).step_by(KC) {
+        let kend = (kb + KC).min(k);
+        for r in 0..m {
+            let arow = &a_data[r * k..(r + 1) * k];
+            let crow = &mut chunk[r * n..(r + 1) * n];
+            for kk in kb..kend {
+                let aik = arow[kk];
+                let brow = &b_data[kk * n..(kk + 1) * n];
+                for (c, &bv) in crow.iter_mut().zip(brow.iter()) {
+                    *c += aik * bv;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Serial `A · Bᵀ` — same row-dot-row kernel as [`matmul_a_bt`].
+pub fn matmul_a_bt_serial(a: &Mat, b: &Mat) -> Mat {
+    assert_eq!(a.cols(), b.cols(), "matmul_a_bt_serial shared dim");
+    let (m, k, n) = (a.rows(), a.cols(), b.rows());
+    let mut out = Mat::zeros(m, n);
+    if m == 0 || n == 0 || k == 0 {
+        return out;
+    }
+    let a_data = a.as_slice();
+    let b_data = b.as_slice();
+    for r in 0..m {
+        let arow = &a_data[r * k..(r + 1) * k];
+        let crow = out.row_mut(r);
+        for j in 0..n {
+            crow[j] = super::dot(arow, &b_data[j * k..(j + 1) * k]);
+        }
+    }
+    out
+}
+
+/// Serial `AᵀA` — same t-major accumulation order as [`syrk_at_a`].
+pub fn syrk_at_a_serial(a: &Mat) -> Mat {
+    let (n, p) = (a.rows(), a.cols());
+    let mut out = Mat::zeros(p, p);
+    if n == 0 || p == 0 {
+        return out;
+    }
+    let a_data = a.as_slice();
+    let chunk = out.as_mut_slice();
+    for t in 0..n {
+        let arow = &a_data[t * p..(t + 1) * p];
+        for i in 0..p {
+            let ati = arow[i];
+            if ati == 0.0 {
+                continue;
+            }
+            let crow = &mut chunk[i * p..(i + 1) * p];
+            for j in i..p {
+                crow[j] += ati * arow[j];
+            }
+        }
+    }
+    for i in 0..p {
+        for j in (i + 1)..p {
+            out[(j, i)] = out[(i, j)];
+        }
+    }
+    out
+}
+
 /// Symmetric rank-k update: `AᵀA` for A (n×p), returning p×p. Exploits
 /// symmetry (computes the upper triangle, mirrors it).
 pub fn syrk_at_a(a: &Mat) -> Mat {
@@ -230,6 +316,19 @@ mod tests {
         let want = matmul(&a.transpose(), &a);
         assert!(got.sub(&want).unwrap().max_abs() < 1e-10);
         assert_eq!(got.asymmetry(), 0.0);
+    }
+
+    #[test]
+    fn serial_references_match_parallel() {
+        let a = randmat(61, 45, 21);
+        let b = randmat(45, 18, 22);
+        assert!(matmul(&a, &b).sub(&matmul_serial(&a, &b)).unwrap().max_abs() < 1e-12);
+        let c = randmat(29, 45, 23);
+        assert!(
+            matmul_a_bt(&a, &c).sub(&matmul_a_bt_serial(&a, &c)).unwrap().max_abs()
+                < 1e-12
+        );
+        assert!(syrk_at_a(&a).sub(&syrk_at_a_serial(&a)).unwrap().max_abs() < 1e-12);
     }
 
     #[test]

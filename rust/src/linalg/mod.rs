@@ -16,9 +16,15 @@ mod eigh;
 mod matmul;
 
 pub use cg::{cg_solve, cg_solve_dense, CgResult};
-pub use cholesky::{Cholesky, solve_lower, solve_lower_transpose};
+pub use cholesky::{
+    solve_lower, solve_lower_serial, solve_lower_transpose, solve_lower_transpose_serial,
+    Cholesky,
+};
 pub use eigh::{eigh, EighResult};
-pub use matmul::{matmul, matmul_at_b, matmul_a_bt, syrk_at_a};
+pub use matmul::{
+    matmul, matmul_a_bt, matmul_a_bt_serial, matmul_at_b, matmul_serial, syrk_at_a,
+    syrk_at_a_serial,
+};
 
 use crate::util::{Error, Result};
 use std::fmt;
@@ -224,9 +230,18 @@ impl Mat {
         Ok(Mat { rows: self.rows, cols: self.cols, data })
     }
 
-    /// Matrix–vector product `self * x`.
+    /// Matrix–vector product `self * x`. Row-parallel above a work
+    /// threshold (each row is an independent `dot`, so the result is
+    /// identical to the serial loop); this feeds `fitted`, CG iterations
+    /// and the native serving path.
     pub fn matvec(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.cols, "matvec shape");
+        const PAR_THRESHOLD: usize = 64 * 1024;
+        if self.rows * self.cols >= PAR_THRESHOLD && self.rows >= 8 {
+            return crate::util::parallel::par_fill(self.rows, 32, |r| {
+                dot(self.row(r), x)
+            });
+        }
         let mut y = vec![0.0; self.rows];
         for r in 0..self.rows {
             y[r] = dot(self.row(r), x);
@@ -393,6 +408,18 @@ mod tests {
         let m = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]).unwrap();
         assert_eq!(m.matvec(&[1.0, 0.0, -1.0]), vec![-2.0, -2.0]);
         assert_eq!(m.matvec_t(&[1.0, 1.0]), vec![5.0, 7.0, 9.0]);
+    }
+
+    #[test]
+    fn large_matvec_parallel_matches_serial() {
+        // Above the parallel threshold, per-row dots must equal the serial
+        // loop exactly (identical op order per row).
+        let m = Mat::from_fn(512, 256, |r, c| ((r * 31 + c * 7) % 13) as f64 - 6.0);
+        let x: Vec<f64> = (0..256).map(|i| (i as f64 * 0.37).sin()).collect();
+        let got = m.matvec(&x);
+        for r in 0..512 {
+            assert_eq!(got[r], dot(m.row(r), &x), "row {r}");
+        }
     }
 
     #[test]

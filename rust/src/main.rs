@@ -208,6 +208,13 @@ fn serve_model(
         }
     };
     let (p, d) = (sm.p(), sm.d());
+    // Same bounds the config-file path enforces in AppConfig::validate.
+    let workers = args.flag_usize("workers")?.unwrap_or(cfg.serve.workers);
+    if workers == 0 || workers > 256 {
+        return Err(fastkrr::util::Error::invalid(
+            "--workers must be in [1, 256]",
+        ));
+    }
     let engine = Engine::start(
         sm,
         EngineConfig {
@@ -217,12 +224,13 @@ fn serve_model(
                 queue_cap: cfg.serve.queue_cap,
                 ..Default::default()
             },
+            workers,
         },
     )?;
     let addr = args.flag("addr").unwrap_or(&cfg.serve.addr).to_string();
     let server = Server::start(&addr, engine)?;
     println!(
-        "serving {source} (d={d}, p={p}) on {} [backend={backend_name}] — Ctrl-C to stop",
+        "serving {source} (d={d}, p={p}) on {} [backend={backend_name}, workers={workers}] — Ctrl-C to stop",
         server.addr(),
     );
     // Block forever (demo server; Ctrl-C terminates the process).

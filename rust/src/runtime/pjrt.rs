@@ -1,0 +1,296 @@
+//! Real PJRT runtime (behind the `pjrt` cargo feature): load AOT-compiled
+//! HLO-text artifacts and execute them through the `xla` crate's PJRT CPU
+//! client — text → `HloModuleProto` → `XlaComputation` → compile →
+//! execute, keeping the compiled executables in a registry keyed by
+//! artifact name.
+//!
+//! The PJRT handle types are not `Send`, so the [`Runtime`] is owned by
+//! whichever thread created it; the coordinator gives each executor-pool
+//! worker its own instance (see `coordinator::engine`).
+
+use super::{ArtifactSpec, Manifest};
+use crate::util::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A loaded artifact registry bound to a PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    specs: HashMap<String, ArtifactSpec>,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a runtime over an artifact directory, compiling every
+    /// artifact in the manifest eagerly.
+    pub fn load(dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        Self::load_manifest(dir, manifest, None)
+    }
+
+    /// Load only the named artifacts (serving wants just the predict set).
+    pub fn load_subset(dir: &Path, names: &[&str]) -> Result<Self> {
+        let manifest = Manifest::load(&dir.join("manifest.json"))?;
+        Self::load_manifest(dir, manifest, Some(names))
+    }
+
+    fn load_manifest(
+        dir: &Path,
+        manifest: Manifest,
+        filter: Option<&[&str]>,
+    ) -> Result<Self> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| Error::runtime(format!("PJRT client: {e}")))?;
+        let mut specs = HashMap::new();
+        let mut executables = HashMap::new();
+        for spec in manifest.artifacts {
+            if let Some(names) = filter {
+                if !names.contains(&spec.name.as_str()) {
+                    continue;
+                }
+            }
+            let path = dir.join(&spec.file);
+            let exe = compile_hlo_file(&client, &path)?;
+            executables.insert(spec.name.clone(), exe);
+            specs.insert(spec.name.clone(), spec);
+        }
+        if executables.is_empty() {
+            return Err(Error::runtime("no artifacts loaded"));
+        }
+        Ok(Self { client, specs, executables, dir: dir.to_path_buf() })
+    }
+
+    /// Platform string of the PJRT backend (diagnostics).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Names of loaded artifacts.
+    pub fn names(&self) -> Vec<&str> {
+        self.specs.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Spec of a loaded artifact.
+    pub fn spec(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.specs.get(name)
+    }
+
+    /// Artifact directory this runtime was loaded from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Execute an artifact with f32 row-major input buffers.
+    ///
+    /// `inputs` must match the manifest's `arg_shapes` exactly (shape check
+    /// enforced here — PJRT would otherwise abort on mismatch). Returns the
+    /// flattened f32 contents of the first tuple output.
+    pub fn execute(&self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        let spec = self
+            .specs
+            .get(name)
+            .ok_or_else(|| Error::runtime(format!("unknown artifact '{name}'")))?;
+        if inputs.len() != spec.arg_shapes.len() {
+            return Err(Error::invalid(format!(
+                "artifact '{name}' wants {} inputs, got {}",
+                spec.arg_shapes.len(),
+                inputs.len()
+            )));
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (buf, shape)) in inputs.iter().zip(&spec.arg_shapes).enumerate() {
+            let want: usize = shape.iter().product();
+            if buf.len() != want {
+                return Err(Error::invalid(format!(
+                    "artifact '{name}' input {i}: {} elements, want {want} (shape {shape:?})",
+                    buf.len()
+                )));
+            }
+            let lit = xla::Literal::vec1(buf);
+            let dims: Vec<i64> = shape.iter().map(|&s| s as i64).collect();
+            let lit = lit
+                .reshape(&dims)
+                .map_err(|e| Error::runtime(format!("reshape input {i}: {e}")))?;
+            literals.push(lit);
+        }
+        let exe = self.executables.get(name).expect("spec implies executable");
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| Error::runtime(format!("execute '{name}': {e}")))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| Error::runtime(format!("fetch result: {e}")))?;
+        // aot.py lowers with return_tuple=True → unwrap the 1-tuple.
+        let out = lit
+            .to_tuple1()
+            .map_err(|e| Error::runtime(format!("untuple result: {e}")))?;
+        out.to_vec::<f32>()
+            .map_err(|e| Error::runtime(format!("read result: {e}")))
+    }
+}
+
+/// Compile one HLO text file on a client.
+fn compile_hlo_file(
+    client: &xla::PjRtClient,
+    path: &Path,
+) -> Result<xla::PjRtLoadedExecutable> {
+    let path_str = path
+        .to_str()
+        .ok_or_else(|| Error::invalid("non-UTF8 artifact path"))?;
+    if !path.exists() {
+        return Err(Error::io(format!("artifact file missing: {path_str}")));
+    }
+    let proto = xla::HloModuleProto::from_text_file(path_str)
+        .map_err(|e| Error::runtime(format!("parse {path_str}: {e}")))?;
+    let comp = xla::XlaComputation::from_proto(&proto);
+    client
+        .compile(&comp)
+        .map_err(|e| Error::runtime(format!("compile {path_str}: {e}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::default_artifact_dir;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = default_artifact_dir();
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn load_and_list() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let rt = Runtime::load(&dir).unwrap();
+        assert!(rt.platform().to_lowercase().contains("cpu") || !rt.platform().is_empty());
+        assert!(rt.names().iter().any(|n| n.starts_with("predict_b32")));
+        let spec = rt.spec("predict_b32_d8_p64").unwrap();
+        assert_eq!(spec.arg_shapes[0], vec![32, 8]);
+    }
+
+    #[test]
+    fn predict_matches_rust_native_rbf() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let rt = Runtime::load_subset(&dir, &["predict_b8_d8_p64"]).unwrap();
+        let spec = rt.spec("predict_b8_d8_p64").unwrap().clone();
+        let (b, d, p) = (8usize, 8usize, 64usize);
+        assert_eq!(spec.arg_shapes, vec![vec![b, d], vec![p, d], vec![p]]);
+        let mut rng = crate::rng::Pcg64::new(42);
+        let x: Vec<f32> = (0..b * d).map(|_| rng.normal() as f32).collect();
+        let lm: Vec<f32> = (0..p * d).map(|_| rng.normal() as f32).collect();
+        let v: Vec<f32> = (0..p).map(|_| rng.normal() as f32).collect();
+        let got = rt
+            .execute("predict_b8_d8_p64", &[x.clone(), lm.clone(), v.clone()])
+            .unwrap();
+        assert_eq!(got.len(), b);
+        // Native reference with the manifest's bandwidth.
+        let bw = spec.bandwidth.unwrap();
+        for i in 0..b {
+            let mut want = 0.0f64;
+            for j in 0..p {
+                let mut d2 = 0.0f64;
+                for c in 0..d {
+                    let diff = x[i * d + c] as f64 - lm[j * d + c] as f64;
+                    d2 += diff * diff;
+                }
+                want += (-d2 / (2.0 * bw * bw)).exp() * v[j] as f64;
+            }
+            assert!(
+                (got[i] as f64 - want).abs() < 1e-3,
+                "i={i}: pjrt {} vs native {want}",
+                got[i]
+            );
+        }
+    }
+
+    #[test]
+    fn kernel_block_artifact_matches_native() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let name = "kernel_block_rbf_m128_p64_d8";
+        let rt = Runtime::load_subset(&dir, &[name]).unwrap();
+        let (m, p, d) = (128usize, 64usize, 8usize);
+        let mut rng = crate::rng::Pcg64::new(7);
+        let x: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
+        let z: Vec<f32> = (0..p * d).map(|_| rng.normal() as f32).collect();
+        let got = rt.execute(name, &[x.clone(), z.clone()]).unwrap();
+        assert_eq!(got.len(), m * p);
+        let bw = rt.spec(name).unwrap().bandwidth.unwrap();
+        for idx in [0usize, 37, m * p - 1] {
+            let (i, j) = (idx / p, idx % p);
+            let mut d2 = 0.0f64;
+            for c in 0..d {
+                let diff = x[i * d + c] as f64 - z[j * d + c] as f64;
+                d2 += diff * diff;
+            }
+            let want = (-d2 / (2.0 * bw * bw)).exp();
+            assert!((got[idx] as f64 - want).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn leverage_artifact_matches_native() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let name = "leverage_n256_p64";
+        let rt = Runtime::load_subset(&dir, &[name]).unwrap();
+        let (n, p) = (256usize, 64usize);
+        let mut rng = crate::rng::Pcg64::new(8);
+        let b: Vec<f32> = (0..n * p).map(|_| rng.normal() as f32 * 0.3).collect();
+        // Symmetric M.
+        let mut m = vec![0.0f32; p * p];
+        for i in 0..p {
+            for j in 0..=i {
+                let v = rng.normal() as f32 * 0.1;
+                m[i * p + j] = v;
+                m[j * p + i] = v;
+            }
+        }
+        let got = rt.execute(name, &[b.clone(), m.clone()]).unwrap();
+        assert_eq!(got.len(), n);
+        for i in [0usize, 100, 255] {
+            let mut want = 0.0f64;
+            for j in 0..p {
+                let mut bm = 0.0f64;
+                for k in 0..p {
+                    bm += b[i * p + k] as f64 * m[k * p + j] as f64;
+                }
+                want += bm * b[i * p + j] as f64;
+            }
+            assert!(
+                (got[i] as f64 - want).abs() < 1e-3,
+                "i={i}: {} vs {want}",
+                got[i]
+            );
+        }
+    }
+
+    #[test]
+    fn execute_validates_inputs() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        };
+        let rt = Runtime::load_subset(&dir, &["predict_b1_d8_p64"]).unwrap();
+        assert!(rt.execute("nope", &[]).is_err());
+        assert!(rt.execute("predict_b1_d8_p64", &[vec![0.0; 3]]).is_err());
+        let bad = vec![vec![0.0; 7], vec![0.0; 64 * 8], vec![0.0; 64]];
+        assert!(rt.execute("predict_b1_d8_p64", &bad).is_err());
+    }
+
+    #[test]
+    fn missing_dir_errors() {
+        assert!(Runtime::load(Path::new("/nonexistent/artifacts")).is_err());
+    }
+}

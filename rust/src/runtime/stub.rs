@@ -1,0 +1,79 @@
+//! Stub runtime used when the crate is built **without** the `pjrt`
+//! feature (the default — the `xla` crate is not vendored in the offline
+//! build environment).
+//!
+//! The stub keeps the exact public surface of the real [`Runtime`] so the
+//! coordinator, benches and tests compile unchanged; every load attempt
+//! fails with a descriptive error, and the engine's `Backend::Pjrt` path
+//! therefore fails fast at startup, pointing callers at
+//! `Backend::Native` or a `--features pjrt` rebuild.
+
+use super::ArtifactSpec;
+use crate::util::{Error, Result};
+use std::path::{Path, PathBuf};
+
+/// Placeholder with the same API as the PJRT-backed runtime.
+pub struct Runtime {
+    dir: PathBuf,
+}
+
+fn unavailable(dir: &Path) -> Error {
+    Error::runtime(format!(
+        "PJRT runtime unavailable: fastkrr was built without the `pjrt` feature \
+         (the `xla` crate is not vendored offline); cannot load artifacts from \
+         {} — use Backend::Native, or add the xla dependency and rebuild with \
+         `--features pjrt`",
+        dir.display()
+    ))
+}
+
+impl Runtime {
+    /// Always fails: no PJRT client in this build.
+    pub fn load(dir: &Path) -> Result<Self> {
+        Err(unavailable(dir))
+    }
+
+    /// Always fails: no PJRT client in this build.
+    pub fn load_subset(dir: &Path, _names: &[&str]) -> Result<Self> {
+        Err(unavailable(dir))
+    }
+
+    /// Platform string (diagnostics parity with the real runtime).
+    pub fn platform(&self) -> String {
+        "unavailable (built without the pjrt feature)".into()
+    }
+
+    /// No artifacts can ever be loaded.
+    pub fn names(&self) -> Vec<&str> {
+        Vec::new()
+    }
+
+    /// No artifacts can ever be loaded.
+    pub fn spec(&self, _name: &str) -> Option<&ArtifactSpec> {
+        None
+    }
+
+    /// Artifact directory this runtime would have been loaded from.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Always fails: nothing was loaded.
+    pub fn execute(&self, _name: &str, _inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+        Err(unavailable(&self.dir))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stub_load_fails_with_guidance() {
+        let err = Runtime::load(Path::new("/tmp/artifacts")).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("pjrt"), "{msg}");
+        assert!(msg.contains("Backend::Native"), "{msg}");
+        assert!(Runtime::load_subset(Path::new("/tmp/artifacts"), &["x"]).is_err());
+    }
+}

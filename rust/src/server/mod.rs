@@ -193,8 +193,15 @@ fn handle_request_inner(line: &str, engine: &Engine) -> Result<Json> {
         }
         "stats" => {
             let s = engine.stats();
+            let per_worker: Vec<f64> = engine
+                .worker_request_counts()
+                .into_iter()
+                .map(|c| c as f64)
+                .collect();
             Ok(Json::obj(vec![
                 ("ok", Json::Bool(true)),
+                ("workers", Json::num(engine.workers() as f64)),
+                ("worker_requests", Json::arr_f64(&per_worker)),
                 ("requests", Json::num(s.requests.get() as f64)),
                 ("batches", Json::num(s.batches.get() as f64)),
                 ("padded_slots", Json::num(s.padded_slots.get() as f64)),
@@ -320,7 +327,11 @@ mod tests {
         let want = sm.predict_native(&x);
         let engine = Engine::start(
             sm,
-            EngineConfig { backend: Backend::Native, batcher: BatcherConfig::default() },
+            EngineConfig {
+                backend: Backend::Native,
+                batcher: BatcherConfig::default(),
+                workers: 2,
+            },
         )
         .unwrap();
         let server = Server::start("127.0.0.1:0", engine).unwrap();
@@ -338,6 +349,7 @@ mod tests {
         }
         let stats = client.stats().unwrap();
         assert!(stats.get("requests").unwrap().as_f64().unwrap() >= 5.0);
+        assert_eq!(stats.get("workers").unwrap().as_f64().unwrap(), 2.0);
         server.shutdown();
     }
 

@@ -1,4 +1,5 @@
-//! Small shared utilities: error type, JSON mini-codec, scoped parallelism.
+//! Small shared utilities: error type, JSON mini-codec, and the persistent
+//! thread-pool parallelism layer ([`parallel`]).
 
 pub mod json;
 pub mod parallel;

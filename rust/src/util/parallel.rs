@@ -1,25 +1,226 @@
-//! Scoped data-parallel helpers built on `std::thread::scope`.
+//! Data-parallel helpers backed by a persistent, crate-wide thread pool.
 //!
 //! We cannot use rayon (offline environment), so this module provides the
-//! two shapes the hot paths need: a chunked parallel-for over disjoint
-//! mutable output slices, and a parallel map-reduce over index ranges.
-//! Threads are spawned per call; for the matrix sizes in this crate
-//! (n ≥ 512) spawn cost is negligible versus the O(n²..n³) work inside.
+//! shapes the hot paths need — a chunked parallel-for over disjoint mutable
+//! output slices, and a parallel map-reduce over index ranges — scheduled
+//! on one shared [`ThreadPool`] instead of spawning threads per call. The
+//! pool matters for the serving hot path: a `predict` batch triggers many
+//! small kernel-block and matvec parallel regions, and per-call spawns
+//! (~50µs each) dominated their runtime.
+//!
+//! Scheduling is deadlock-free under nesting: a caller waiting for its
+//! scope also *helps*, running its own scope's still-unclaimed tasks, so a
+//! parallel region launched from inside a pool task always makes progress
+//! even when every worker is blocked in an outer region — every scope can
+//! finish on its caller alone. Helping is scope-local on purpose: a
+//! latency-sensitive caller (e.g. a serving worker assembling a small
+//! kernel block) never gets stuck executing some other scope's
+//! multi-millisecond row panel.
+//!
+//! `FASTKRR_THREADS` bounds the number of chunks a region is split into
+//! (`num_threads()`), so `FASTKRR_THREADS=1` gives fully serial execution;
+//! the pool's worker count is fixed at first use from the hardware
+//! parallelism.
 
+use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
-/// Number of worker threads to use: `FASTKRR_THREADS` env override, else
-/// available parallelism, clamped to [1, 64].
+/// Number of chunks to split parallel regions into: `FASTKRR_THREADS` env
+/// override, else available parallelism, clamped to [1, 64].
 pub fn num_threads() -> usize {
     if let Ok(s) = std::env::var("FASTKRR_THREADS") {
         if let Ok(n) = s.parse::<usize>() {
             return n.clamp(1, 64);
         }
     }
+    hardware_threads()
+}
+
+fn hardware_threads() -> usize {
     std::thread::available_parallelism()
         .map(|n| n.get())
         .unwrap_or(4)
         .clamp(1, 64)
+}
+
+type Task = Box<dyn FnOnce() + Send + 'static>;
+
+/// Per-`scope_run` state: the scope's unclaimed tasks plus completion
+/// tracking. Workers claim tasks one at a time; the scope's caller claims
+/// from the same deque while waiting, so the scope can always finish on
+/// the caller alone.
+struct ScopeInner {
+    tasks: Mutex<VecDeque<Task>>,
+    pending: Mutex<usize>,
+    done_cv: Condvar,
+    panic: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+struct PoolShared {
+    /// One entry per queued task; a worker pops an entry, then claims one
+    /// task from that scope. Entries can be stale (the caller already
+    /// claimed the task) — workers just skip those.
+    queue: Mutex<VecDeque<Arc<ScopeInner>>>,
+    work_cv: Condvar,
+    closed: std::sync::atomic::AtomicBool,
+}
+
+/// A persistent pool of worker threads executing boxed tasks from a shared
+/// queue. One global instance ([`pool`]) serves the whole crate; the type
+/// is public so benches can build isolated pools — dropping a local pool
+/// shuts its workers down and joins them.
+pub struct ThreadPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl ThreadPool {
+    /// Spawn a pool with `workers` resident threads. `workers == 0` is
+    /// valid: every `scope_run` then executes entirely on the caller.
+    pub fn new(workers: usize) -> Self {
+        let shared = Arc::new(PoolShared {
+            queue: Mutex::new(VecDeque::new()),
+            work_cv: Condvar::new(),
+            closed: std::sync::atomic::AtomicBool::new(false),
+        });
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let shared = shared.clone();
+            // A failed spawn only shrinks the pool; caller-helping keeps
+            // scope_run correct with any worker count.
+            if let Ok(h) = std::thread::Builder::new()
+                .name(format!("fastkrr-pool-{i}"))
+                .spawn(move || worker_loop(shared))
+            {
+                handles.push(h);
+            }
+        }
+        Self { shared, handles }
+    }
+
+    /// Resident worker threads (excluding helping callers).
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run `tasks` — which may borrow the caller's stack — to completion.
+    /// Panics in tasks are captured and re-raised on the caller once the
+    /// whole scope has drained (first payload wins), mirroring
+    /// `std::thread::scope` semantics.
+    pub fn scope_run<'scope>(&self, tasks: Vec<Box<dyn FnOnce() + Send + 'scope>>) {
+        if tasks.is_empty() {
+            return;
+        }
+        let n_tasks = tasks.len();
+        let mut deque: VecDeque<Task> = VecDeque::with_capacity(n_tasks);
+        for task in tasks {
+            // SAFETY: scope_run does not return until `pending` hits zero,
+            // i.e. until every task has finished running, so the 'scope
+            // borrows captured by the task strictly outlive its execution.
+            // The transmute only erases that lifetime.
+            let task: Task = unsafe {
+                std::mem::transmute::<Box<dyn FnOnce() + Send + 'scope>, Task>(task)
+            };
+            deque.push_back(task);
+        }
+        let inner = Arc::new(ScopeInner {
+            tasks: Mutex::new(deque),
+            pending: Mutex::new(n_tasks),
+            done_cv: Condvar::new(),
+            panic: Mutex::new(None),
+        });
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            for _ in 0..n_tasks {
+                q.push_back(inner.clone());
+            }
+            // Wake at most one worker per task — notify_all on every small
+            // region would thundering-herd a large pool through the queue
+            // mutex for work the helping caller mostly claims anyway.
+            for _ in 0..n_tasks.min(self.handles.len()) {
+                self.shared.work_cv.notify_one();
+            }
+        }
+        // Help while waiting — but only with THIS scope's tasks, so a
+        // latency-sensitive caller never executes another scope's work.
+        // Deadlock-freedom: every scope's caller can run all of its own
+        // unclaimed tasks itself, and tasks already claimed are running on
+        // threads that (inductively) complete.
+        loop {
+            let task = inner.tasks.lock().unwrap().pop_front();
+            if let Some(task) = task {
+                run_scope_task(&inner, task);
+                continue;
+            }
+            let guard = inner.pending.lock().unwrap();
+            if *guard == 0 {
+                break;
+            }
+            // All tasks are claimed; wait for the last finisher's signal
+            // (the decrement + notify happen under `pending`'s lock, so no
+            // wakeup can be missed).
+            drop(inner.done_cv.wait(guard).unwrap());
+        }
+        if let Some(payload) = inner.panic.lock().unwrap().take() {
+            resume_unwind(payload);
+        }
+    }
+}
+
+impl Drop for ThreadPool {
+    fn drop(&mut self) {
+        self.shared
+            .closed
+            .store(true, std::sync::atomic::Ordering::Release);
+        self.shared.work_cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Execute one claimed task and account its completion on the scope.
+fn run_scope_task(scope: &ScopeInner, task: Task) {
+    let result = catch_unwind(AssertUnwindSafe(task));
+    if let Err(payload) = result {
+        scope.panic.lock().unwrap().get_or_insert(payload);
+    }
+    let mut left = scope.pending.lock().unwrap();
+    *left -= 1;
+    if *left == 0 {
+        scope.done_cv.notify_all();
+    }
+}
+
+fn worker_loop(shared: Arc<PoolShared>) {
+    loop {
+        let scope = {
+            let mut q = shared.queue.lock().unwrap();
+            loop {
+                if shared.closed.load(std::sync::atomic::Ordering::Acquire) {
+                    return;
+                }
+                if let Some(s) = q.pop_front() {
+                    break s;
+                }
+                q = shared.work_cv.wait(q).unwrap();
+            }
+        };
+        let task = scope.tasks.lock().unwrap().pop_front();
+        if let Some(task) = task {
+            run_scope_task(&scope, task);
+        }
+        // else: stale entry — the scope's caller already claimed the task.
+    }
+}
+
+/// The crate-wide pool: hardware parallelism minus one resident worker
+/// (the calling thread is the missing executor — it always helps).
+pub fn pool() -> &'static ThreadPool {
+    static POOL: OnceLock<ThreadPool> = OnceLock::new();
+    POOL.get_or_init(|| ThreadPool::new(hardware_threads().saturating_sub(1)))
 }
 
 /// Run `f(chunk_index, start_row, out_chunk)` in parallel over contiguous
@@ -27,6 +228,9 @@ pub fn num_threads() -> usize {
 ///
 /// Each chunk receives a disjoint `&mut [T]` window aligned to row
 /// boundaries, so `f` can fill rows `start_row .. start_row + chunk_rows`.
+/// The chunk count is `num_threads().min(rows)`; per-row work is identical
+/// regardless of the chunking, so results do not depend on the thread
+/// count.
 pub fn par_chunks_mut<T: Send, F>(out: &mut [T], rows: usize, width: usize, f: F)
 where
     F: Fn(usize, usize, &mut [T]) + Sync,
@@ -38,22 +242,22 @@ where
         return;
     }
     let rows_per = rows.div_ceil(nt);
-    std::thread::scope(|s| {
-        let mut rest = out;
-        let mut start_row = 0usize;
-        let mut idx = 0usize;
-        while !rest.is_empty() {
-            let take_rows = rows_per.min(rows - start_row);
-            let (head, tail) = rest.split_at_mut(take_rows * width);
-            let fr = &f;
-            let sr = start_row;
-            let ci = idx;
-            s.spawn(move || fr(ci, sr, head));
-            rest = tail;
-            start_row += take_rows;
-            idx += 1;
-        }
-    });
+    let fr = &f;
+    let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(nt);
+    let mut rest = out;
+    let mut start_row = 0usize;
+    let mut idx = 0usize;
+    while !rest.is_empty() {
+        let take_rows = rows_per.min(rows - start_row);
+        let (head, tail) = rest.split_at_mut(take_rows * width);
+        let sr = start_row;
+        let ci = idx;
+        tasks.push(Box::new(move || fr(ci, sr, head)));
+        rest = tail;
+        start_row += take_rows;
+        idx += 1;
+    }
+    pool().scope_run(tasks);
 }
 
 /// Parallel map over `0..n` with per-thread accumulators folded by `combine`.
@@ -76,13 +280,15 @@ where
     }
     let grain = grain.max(1);
     let counter = AtomicUsize::new(0);
-    let accs: Vec<A> = std::thread::scope(|s| {
-        let mut handles = Vec::with_capacity(nt);
+    let results: Mutex<Vec<A>> = Mutex::new(Vec::with_capacity(nt));
+    {
+        let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(nt);
         for _ in 0..nt {
             let counter = &counter;
             let work = &work;
+            let results = &results;
             let mut acc = init.clone();
-            handles.push(s.spawn(move || {
+            tasks.push(Box::new(move || {
                 loop {
                     let start = counter.fetch_add(grain, Ordering::Relaxed);
                     if start >= n {
@@ -93,12 +299,16 @@ where
                         work(i, &mut acc);
                     }
                 }
-                acc
+                results.lock().unwrap().push(acc);
             }));
         }
-        handles.into_iter().map(|h| h.join().unwrap()).collect()
-    });
-    accs.into_iter().fold(init, combine)
+        pool().scope_run(tasks);
+    }
+    results
+        .into_inner()
+        .unwrap()
+        .into_iter()
+        .fold(init, combine)
 }
 
 /// Parallel fill of an `f64` output vector: `out[i] = work(i)`.
@@ -170,5 +380,76 @@ mod tests {
     #[test]
     fn num_threads_positive() {
         assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn nested_parallel_regions_complete() {
+        // A parallel region inside a pool task must not deadlock even with
+        // a saturated pool (the waiting caller helps drain the queue).
+        let outer = 4 * hardware_threads().max(2);
+        let sums = par_fill(outer, 1, |i| {
+            par_map_reduce(
+                200,
+                16,
+                0.0f64,
+                |j, acc| *acc += (i * 200 + j) as f64,
+                |a, b| a + b,
+            )
+        });
+        for (i, s) in sums.iter().enumerate() {
+            let lo = (i * 200) as f64;
+            let want = 200.0 * lo + (199.0 * 200.0) / 2.0;
+            assert_eq!(*s, want, "outer task {i}");
+        }
+    }
+
+    #[test]
+    fn scope_panic_propagates_to_caller() {
+        let result = std::panic::catch_unwind(|| {
+            let mut out = vec![0.0f64; 64];
+            par_chunks_mut(&mut out, 64, 1, |_ci, start, _chunk| {
+                if start == 0 {
+                    panic!("task failure");
+                }
+            });
+        });
+        assert!(result.is_err(), "panic in a pool task must reach the caller");
+        // The pool stays usable afterwards.
+        let v = par_fill(64, 8, |i| i as f64);
+        assert_eq!(v[63], 63.0);
+    }
+
+    #[test]
+    fn local_pool_drop_joins_workers() {
+        let p = ThreadPool::new(2);
+        let hits = AtomicUsize::new(0);
+        let hit_ref = &hits;
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..6)
+            .map(|_| {
+                Box::new(move || {
+                    hit_ref.fetch_add(1, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        p.scope_run(tasks);
+        assert_eq!(hits.load(Ordering::Relaxed), 6);
+        drop(p); // must shut both workers down and join without hanging
+    }
+
+    #[test]
+    fn zero_worker_pool_runs_on_caller() {
+        let p = ThreadPool::new(0);
+        let hit = AtomicUsize::new(0);
+        let hit_ref = &hit;
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = (0..8)
+            .map(|_| {
+                Box::new(move || {
+                    hit_ref.fetch_add(1, Ordering::Relaxed);
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        p.scope_run(tasks);
+        assert_eq!(hit.load(Ordering::Relaxed), 8);
+        assert_eq!(p.workers(), 0);
     }
 }

@@ -63,7 +63,11 @@ fn pipeline_to_engine_full_stack_native() {
     let sm = ServingModel::from_nystrom(&model).unwrap();
     let engine = Engine::start(
         sm,
-        EngineConfig { backend: Backend::Native, batcher: BatcherConfig::default() },
+        EngineConfig {
+            backend: Backend::Native,
+            batcher: BatcherConfig::default(),
+            workers: 2,
+        },
     )
     .unwrap();
     for i in (0..300).step_by(37) {
@@ -102,6 +106,7 @@ fn pipeline_to_engine_full_stack_pjrt() {
         EngineConfig {
             backend: Backend::Pjrt { artifact_dir: dir },
             batcher: BatcherConfig::default(),
+            workers: 2,
         },
     )
     .unwrap();

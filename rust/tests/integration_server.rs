@@ -1,5 +1,5 @@
 //! Integration: server + engine under concurrency, failure injection, and
-//! backpressure.
+//! backpressure — single-worker and executor-pool configurations.
 
 use fastkrr::coordinator::{
     Backend, BatcherConfig, Engine, EngineConfig, ServingModel,
@@ -27,7 +27,7 @@ fn make_model(seed: u64) -> (Mat, ServingModel) {
     (x, ServingModel::from_nystrom(&m).unwrap())
 }
 
-fn start_server(queue_cap: usize, max_wait_ms: u64) -> (Server, Mat, Vec<f64>) {
+fn start_server(queue_cap: usize, max_wait_ms: u64, workers: usize) -> (Server, Mat, Vec<f64>) {
     let (x, sm) = make_model(31);
     let want = sm.predict_native(&x);
     let engine = Engine::start(
@@ -39,6 +39,7 @@ fn start_server(queue_cap: usize, max_wait_ms: u64) -> (Server, Mat, Vec<f64>) {
                 queue_cap,
                 ..Default::default()
             },
+            workers,
         },
     )
     .unwrap();
@@ -48,7 +49,7 @@ fn start_server(queue_cap: usize, max_wait_ms: u64) -> (Server, Mat, Vec<f64>) {
 
 #[test]
 fn sustained_concurrent_load_is_correct_and_batched() {
-    let (server, x, want) = start_server(1024, 2);
+    let (server, x, want) = start_server(1024, 2, 1);
     let addr = server.addr().to_string();
     std::thread::scope(|s| {
         for t in 0..6 {
@@ -74,9 +75,80 @@ fn sustained_concurrent_load_is_correct_and_batched() {
     server.shutdown();
 }
 
+/// The ISSUE-1 soak scenario: 8 client threads × 50 requests (a mix of
+/// `predict` and `predict_batch`) against a 4-worker engine, with malformed
+/// requests injected mid-flight on a separate connection. Every well-formed
+/// reply must be ok, the shared stats counters must sum exactly, and the
+/// poison connection must not take anything else down.
+#[test]
+fn multi_worker_concurrent_clients_survive_poison() {
+    let (server, x, want) = start_server(1024, 1, 4);
+    let addr = server.addr().to_string();
+    // 4 threads × 50 single predicts + 4 threads × 10 batches of 5.
+    let total_points: u64 = 4 * 50 + 4 * 10 * 5;
+    std::thread::scope(|s| {
+        for t in 0..8usize {
+            let addr = addr.clone();
+            let x = &x;
+            let want = &want;
+            s.spawn(move || {
+                let mut client = Client::connect(&addr).unwrap();
+                let mut rng = Pcg64::new(1000 + t as u64);
+                if t % 2 == 0 {
+                    for _ in 0..50 {
+                        let i = rng.below(x.rows());
+                        let y = client.predict(x.row(i)).unwrap();
+                        assert!((y - want[i]).abs() < 1e-5, "thread {t}");
+                    }
+                } else {
+                    for _ in 0..10 {
+                        let idx: Vec<usize> =
+                            (0..5).map(|_| rng.below(x.rows())).collect();
+                        let xs: Vec<Vec<f64>> =
+                            idx.iter().map(|&i| x.row(i).to_vec()).collect();
+                        let ys = client.predict_batch(&xs).unwrap();
+                        for (k, &i) in idx.iter().enumerate() {
+                            assert!((ys[k] - want[i]).abs() < 1e-5, "thread {t}");
+                        }
+                    }
+                }
+            });
+        }
+        // Poison thread: malformed requests interleaved with the load.
+        let addr2 = addr.clone();
+        s.spawn(move || {
+            let mut client = Client::connect(&addr2).unwrap();
+            for _ in 0..20 {
+                for bad in [
+                    "not json",
+                    r#"{"op":"predict"}"#,
+                    r#"{"op":"predict","x":[1.0]}"#,
+                    r#"{"op":"predict_batch","xs":[[1],[1,2]]}"#,
+                ] {
+                    let reply = client.raw(bad).unwrap();
+                    assert!(reply.contains("\"ok\":false"), "bad={bad} reply={reply}");
+                }
+                std::thread::sleep(Duration::from_micros(200));
+            }
+        });
+    });
+    let mut c = Client::connect(&addr).unwrap();
+    let stats = c.stats().unwrap();
+    assert_eq!(stats.get("workers").unwrap().as_f64().unwrap(), 4.0);
+    // Malformed requests never reach the engine, so the shared counters
+    // must sum to exactly the well-formed points.
+    let reqs = stats.get("requests").unwrap().as_f64().unwrap();
+    assert_eq!(reqs, total_points as f64, "requests {reqs}");
+    assert_eq!(stats.get("errors").unwrap().as_f64().unwrap(), 0.0);
+    // Still alive after the storm.
+    let y = c.predict(x.row(0)).unwrap();
+    assert!((y - want[0]).abs() < 1e-5);
+    server.shutdown();
+}
+
 #[test]
 fn disconnecting_clients_dont_kill_server() {
-    let (server, x, want) = start_server(64, 1);
+    let (server, x, want) = start_server(64, 1, 2);
     let addr = server.addr().to_string();
     // Abruptly drop 10 connections mid-protocol.
     for i in 0..10 {
@@ -96,7 +168,7 @@ fn disconnecting_clients_dont_kill_server() {
 
 #[test]
 fn oversized_and_bad_payloads_rejected_cleanly() {
-    let (server, x, want) = start_server(64, 1);
+    let (server, x, want) = start_server(64, 1, 1);
     let addr = server.addr().to_string();
     let mut c = Client::connect(&addr).unwrap();
     // Wrong dimension.
@@ -133,6 +205,7 @@ fn engine_backpressure_reports_queue_full() {
                 batch_sizes: vec![1],
                 ..Default::default()
             },
+            workers: 1,
         },
     )
     .unwrap();
@@ -167,7 +240,11 @@ fn engine_survives_rapid_start_stop() {
         let (x, sm) = make_model(seed);
         let engine = Engine::start(
             sm,
-            EngineConfig { backend: Backend::Native, batcher: BatcherConfig::default() },
+            EngineConfig {
+                backend: Backend::Native,
+                batcher: BatcherConfig::default(),
+                workers: 1 + (seed as usize % 3),
+            },
         )
         .unwrap();
         let _ = engine.predict(x.row(0)).unwrap();

@@ -67,6 +67,64 @@ fn prop_approx_leverage_upper_bounded() {
     });
 }
 
+/// Theorem 4, both sides: at the paper's sufficient sketch size
+/// `p ≥ 8(Tr(K)/(nλε) + 1/6)·log(n/ρ)` — which exceeds 4n for every
+/// feasible test size, so p is capped at 4n (sampling with replacement
+/// allows p > n) — the fast approximation obeys
+/// `l_i − 2ε ≤ l̃_i ≤ l_i + tol` for every point, with ε = 1/4 so the
+/// lower band is falsifiable (at these λ many exact scores exceed 2ε; a
+/// degenerate all-zero l̃ fails). Runs on the default (parallel)
+/// substrate, so the O(np²) fast path — pool-scheduled syrk, jittered
+/// Cholesky, multi-RHS solves, row dots — is what is being certified, not
+/// just the exact path.
+#[test]
+fn prop_theorem4_additive_band_at_paper_sketch_size() {
+    forall("theorem4-band", cases(), |rng, _case| {
+        let n = gen_dim(rng, 16, 44);
+        let d = gen_dim(rng, 1, 3);
+        let x = gen_data(rng, n, d, 1.0);
+        let bw = 0.5 + rng.uniform_in(0.0, 1.5);
+        let kernel =
+            fastkrr::kernel::KernelFn::new(fastkrr::kernel::KernelKind::Rbf {
+                bandwidth: bw,
+            });
+        let lambda = 10f64.powf(rng.uniform_in(-2.5, -1.5));
+        let (eps, rho) = (0.25f64, 0.1f64);
+        let km = kernel.matrix(&x);
+        // Theorem 4's sufficient p from the trace (RBF: Tr(K) = n).
+        let p_bound = 8.0 * (km.trace() / (n as f64 * lambda * eps) + 1.0 / 6.0)
+            * (n as f64 / rho).ln();
+        assert!(
+            p_bound >= (4 * n) as f64,
+            "test regime expects the bound to exceed the 4n cap (p_bound {p_bound}, n {n})"
+        );
+        let p = (p_bound.ceil() as usize).min(4 * n);
+        let exact = exact_ridge_leverage(&km, lambda).unwrap();
+        let approx = approx_ridge_leverage(&kernel, &x, lambda, p, rng).unwrap();
+        for (i, (a, e)) in approx.scores.iter().zip(&exact.scores).enumerate() {
+            assert!(
+                *a >= e - 2.0 * eps - 1e-9,
+                "Thm4 lower band violated at {i}: l̃={a} < l−2ε={}",
+                e - 2.0 * eps
+            );
+            assert!(
+                *a <= e + 1e-5,
+                "Thm4 upper band violated at {i}: l̃={a} > l={e}"
+            );
+        }
+        assert!(approx.d_eff_estimate <= exact.d_eff + 1e-4);
+        // Guard against a degenerate approximation sneaking under the band:
+        // at 4n samples the plug-in d_eff estimate must retain most of the
+        // true effective dimension.
+        assert!(
+            approx.d_eff_estimate >= 0.5 * exact.d_eff,
+            "l̃ degenerate: Σl̃ = {} vs d_eff = {}",
+            approx.d_eff_estimate,
+            exact.d_eff
+        );
+    });
+}
+
 /// d_eff and every leverage score are monotone non-increasing in λ.
 #[test]
 fn prop_leverage_monotone_in_lambda() {

@@ -1,0 +1,209 @@
+//! Property soak for the parallel dense-math substrate: every
+//! pool-scheduled kernel (`matmul`, `matmul_a_bt`, `syrk_at_a`, multi-RHS
+//! triangular solves, `inverse_diagonal`, the fast-leverage pipeline) must
+//! match its serial reference within 1e-12 across randomized shapes,
+//! chunk/thread counts (1, 2, 8), and rank-deficient inputs from
+//! `gen_psd_rank`.
+//!
+//! Thread counts are driven through `FASTKRR_THREADS` (which bounds the
+//! chunk count of every parallel region); the env var is process-global, so
+//! all tests in this binary serialize on one mutex while it is pinned.
+//! Replay any failing case with `FASTKRR_PROP_SEED=<seed>`; deepen the soak
+//! with `FASTKRR_PROP_CASES=64` (the CI soak job does).
+
+use fastkrr::kernel::Kernel;
+use fastkrr::leverage::approx_ridge_leverage;
+use fastkrr::linalg::{
+    matmul, matmul_a_bt, matmul_a_bt_serial, matmul_serial, solve_lower,
+    solve_lower_serial, solve_lower_transpose, solve_lower_transpose_serial, syrk_at_a,
+    syrk_at_a_serial, Cholesky,
+};
+use fastkrr::rng::Pcg64;
+use fastkrr::testing::{forall, gen_data, gen_dim, gen_kernel, gen_psd_rank, gen_spd};
+use std::sync::{Mutex, MutexGuard};
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
+const TOL: f64 = 1e-12;
+
+// No cap: shapes here are small, so the CI soak's FASTKRR_PROP_CASES=64
+// genuinely deepens every property in this file.
+fn cases() -> usize {
+    fastkrr::testing::default_cases()
+}
+
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+/// Pin `FASTKRR_THREADS` for the guard's lifetime; restores the previous
+/// value on drop. Serializes all env-touching tests in this binary.
+struct ThreadsGuard {
+    prev: Option<String>,
+    _lock: MutexGuard<'static, ()>,
+}
+
+impl Drop for ThreadsGuard {
+    fn drop(&mut self) {
+        match &self.prev {
+            Some(v) => std::env::set_var("FASTKRR_THREADS", v),
+            None => std::env::remove_var("FASTKRR_THREADS"),
+        }
+    }
+}
+
+fn with_threads(n: usize) -> ThreadsGuard {
+    let lock = match ENV_LOCK.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    };
+    let prev = std::env::var("FASTKRR_THREADS").ok();
+    std::env::set_var("FASTKRR_THREADS", n.to_string());
+    ThreadsGuard { prev, _lock: lock }
+}
+
+#[test]
+fn prop_parallel_matmul_matches_serial() {
+    forall("parallel-matmul-vs-serial", cases(), |rng, _case| {
+        let m = gen_dim(rng, 1, 48);
+        let k = gen_dim(rng, 1, 64);
+        let n = gen_dim(rng, 1, 40);
+        let a = gen_data(rng, m, k, 1.0);
+        let b = gen_data(rng, k, n, 1.0);
+        let want = matmul_serial(&a, &b);
+        let scale = 1.0 + want.max_abs();
+        for &nt in &THREAD_COUNTS {
+            let _g = with_threads(nt);
+            let got = matmul(&a, &b);
+            let drift = got.sub(&want).unwrap().max_abs();
+            assert!(drift < TOL * scale, "matmul {m}x{k}x{n} nt={nt} drift {drift:e}");
+        }
+    });
+}
+
+#[test]
+fn prop_parallel_a_bt_and_syrk_match_serial() {
+    forall("parallel-abt-syrk-vs-serial", cases(), |rng, _case| {
+        let m = gen_dim(rng, 1, 40);
+        let k = gen_dim(rng, 1, 48);
+        let n = gen_dim(rng, 1, 32);
+        let a = gen_data(rng, m, k, 1.0);
+        let b = gen_data(rng, n, k, 1.0);
+        let want_abt = matmul_a_bt_serial(&a, &b);
+        let want_syrk = syrk_at_a_serial(&a);
+        let s_abt = 1.0 + want_abt.max_abs();
+        let s_syrk = 1.0 + want_syrk.max_abs();
+        for &nt in &THREAD_COUNTS {
+            let _g = with_threads(nt);
+            let d1 = matmul_a_bt(&a, &b).sub(&want_abt).unwrap().max_abs();
+            assert!(d1 < TOL * s_abt, "a_bt {m}x{k}x{n} nt={nt} drift {d1:e}");
+            let got = syrk_at_a(&a);
+            let d2 = got.sub(&want_syrk).unwrap().max_abs();
+            assert!(d2 < TOL * s_syrk, "syrk {m}x{k} nt={nt} drift {d2:e}");
+            assert_eq!(got.asymmetry(), 0.0, "syrk symmetry nt={nt}");
+        }
+    });
+}
+
+#[test]
+fn prop_parallel_triangular_solves_match_serial() {
+    forall("parallel-trisolve-vs-serial", cases(), |rng, _case| {
+        let n = gen_dim(rng, 2, 36);
+        let k = gen_dim(rng, 1, 12);
+        let a = gen_spd(rng, n, 0.4);
+        let ch = Cholesky::new(&a).unwrap();
+        let l = ch.factor_l();
+        let b = gen_data(rng, n, k, 1.0);
+        let want_lo = solve_lower_serial(l, &b);
+        let want_tr = solve_lower_transpose_serial(l, &b);
+        // Column-by-column single-RHS solves as the solve_mat oracle.
+        let want_cols: Vec<Vec<f64>> = (0..k).map(|j| ch.solve_vec(&b.col(j))).collect();
+        let s = 1.0 + want_lo.max_abs().max(want_tr.max_abs());
+        for &nt in &THREAD_COUNTS {
+            let _g = with_threads(nt);
+            let d1 = solve_lower(l, &b).sub(&want_lo).unwrap().max_abs();
+            assert!(d1 < TOL * s, "solve_lower n={n} k={k} nt={nt} drift {d1:e}");
+            let d2 = solve_lower_transpose(l, &b).sub(&want_tr).unwrap().max_abs();
+            assert!(d2 < TOL * s, "solve_lower_transpose nt={nt} drift {d2:e}");
+            let x = ch.solve_mat(&b);
+            for j in 0..k {
+                for i in 0..n {
+                    let drift = (x[(i, j)] - want_cols[j][i]).abs();
+                    assert!(
+                        drift < TOL * (1.0 + want_cols[j][i].abs()),
+                        "solve_mat ({i},{j}) nt={nt} drift {drift:e}"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_rank_deficient_solves_stable_across_threads() {
+    // gen_psd_rank produces singular W blocks — the jittered-Cholesky path
+    // of the fast leverage algorithm. The factorization is computed once;
+    // the parallel solves over it must not depend on the chunk count.
+    forall("parallel-rankdef-solves", cases(), |rng, _case| {
+        let n = gen_dim(rng, 3, 28);
+        let rank = gen_dim(rng, 1, n);
+        let w = gen_psd_rank(rng, n, rank);
+        let ch = Cholesky::new_with_jitter(&w).unwrap();
+        let k = gen_dim(rng, 1, 8);
+        let b = gen_data(rng, n, k, 1.0);
+        let baseline = {
+            let _g = with_threads(1);
+            (ch.solve_mat(&b), ch.inverse_diagonal())
+        };
+        for &nt in &THREAD_COUNTS[1..] {
+            let _g = with_threads(nt);
+            let x = ch.solve_mat(&b);
+            let d = x.sub(&baseline.0).unwrap().max_abs();
+            assert!(
+                d < TOL * (1.0 + baseline.0.max_abs()),
+                "rank-def solve n={n} rank={rank} nt={nt} drift {d:e}"
+            );
+            let diag = ch.inverse_diagonal();
+            for (i, (a, b)) in diag.iter().zip(&baseline.1).enumerate() {
+                assert!(
+                    (a - b).abs() < TOL * (1.0 + b.abs()),
+                    "inverse_diagonal[{i}] nt={nt}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_kernel_and_leverage_pipeline_thread_invariant() {
+    // End-to-end: kernel-block assembly and the O(np²) fast-leverage path
+    // (syrk + jittered Cholesky + parallel solves + row dots) must produce
+    // identical scores at every thread count, given the same draw seed.
+    forall("parallel-leverage-invariant", cases(), |rng, _case| {
+        let n = gen_dim(rng, 10, 36);
+        let d = gen_dim(rng, 1, 4);
+        let p = gen_dim(rng, 2, n);
+        let x = gen_data(rng, n, d, 1.0);
+        let kernel = gen_kernel(rng);
+        let lambda = 10f64.powf(rng.uniform_in(-3.0, -1.0));
+        let draw_seed = rng.next_u64();
+        let baseline = {
+            let _g = with_threads(1);
+            let km = kernel.matrix(&x);
+            let mut r = Pcg64::new(draw_seed);
+            let approx = approx_ridge_leverage(&kernel, &x, lambda, p, &mut r).unwrap();
+            (km, approx.scores)
+        };
+        for &nt in &THREAD_COUNTS[1..] {
+            let _g = with_threads(nt);
+            let km = kernel.matrix(&x);
+            let dk = km.sub(&baseline.0).unwrap().max_abs();
+            assert!(dk < TOL, "kernel matrix nt={nt} drift {dk:e}");
+            let mut r = Pcg64::new(draw_seed);
+            let approx = approx_ridge_leverage(&kernel, &x, lambda, p, &mut r).unwrap();
+            for (i, (a, b)) in approx.scores.iter().zip(&baseline.1).enumerate() {
+                assert!(
+                    (a - b).abs() < 1e-11 * (1.0 + b.abs()),
+                    "leverage score {i} nt={nt}: {a} vs {b}"
+                );
+            }
+        }
+    });
+}
