@@ -21,6 +21,7 @@ fn main() {
     let scale = bench_scale(0.5);
     let lambda = 1e-3;
     let kernel = KernelFn::new(KernelKind::Rbf { bandwidth: 2.0 });
+    let mut ok = true;
 
     section("runtime scaling in n (p=128 fixed) — expect ~linear for approx, ~cubic for exact");
     let n_grid: Vec<usize> = [256, 512, 1024, 2048]
@@ -97,6 +98,86 @@ fn main() {
         }
     }
 
+    section("sharded factor build vs serial twin (tentpole: pool-parallel blocks + B)");
+    {
+        let n = ((4096.0 * scale) as usize).max(512);
+        let x = data(n, 8, 13);
+        let p = 256.min(n / 2).max(16);
+        let diag = kernel.diag(&x);
+        let mut rng = Pcg64::new(21);
+        let sketch = fastkrr::sketch::draw_columns(&diag, p, &mut rng).unwrap();
+        let s_ser = bench(&format!("factor serial   n={n} p={p}"), 1, 3, || {
+            let _ = fastkrr::nystrom::NystromFactor::from_sketch_serial(&kernel, &x, &sketch)
+                .unwrap();
+        });
+        println!("{}", s_ser.render());
+        let s_par = bench(&format!("factor sharded  n={n} p={p}"), 1, 3, || {
+            let _ =
+                fastkrr::nystrom::NystromFactor::from_sketch(&kernel, &x, &sketch).unwrap();
+        });
+        println!("{}", s_par.render());
+        let speedup = s_ser.mean_secs() / s_par.mean_secs();
+        let threads = fastkrr::util::parallel::num_threads();
+        println!("  speedup: {speedup:.2}× on {threads} threads");
+        // Acceptance gate: parallel beats serial at n ≥ 4096 with ≥4 threads.
+        if threads >= 4 && n >= 4096 {
+            if speedup <= 1.0 {
+                println!("  FAIL: sharded factor build no faster than serial twin");
+            }
+            ok &= speedup > 1.0;
+        } else {
+            println!("  (speedup gate skipped: needs n ≥ 4096 and ≥ 4 threads)");
+        }
+    }
+
+    section("repeated-λ sweep: kernel-block cache hits + cached-vs-uncached identity");
+    {
+        let n = ((2048.0 * scale) as usize).max(256);
+        let x = data(n, 8, 17);
+        let p = 128.min(n / 2).max(16);
+        let diag = kernel.diag(&x);
+        let mut rng = Pcg64::new(23);
+        let sketch = fastkrr::sketch::draw_columns(&diag, p, &mut rng).unwrap();
+        let lambdas = [1e-4, 3e-4, 1e-3, 3e-3, 1e-2];
+        let cache = fastkrr::kernel::cache::global();
+        cache.clear();
+        let hits0 = cache.stats().hits.get();
+        let misses0 = cache.stats().misses.get();
+        let sweep = bench(&format!("λ-sweep warm  n={n} p={p} λs={}", lambdas.len()), 1, 2, || {
+            for &l in &lambdas {
+                let _ = fastkrr::nystrom::NystromFactor::from_sketch_regularized(
+                    &kernel,
+                    &x,
+                    &sketch,
+                    n as f64 * l,
+                )
+                .unwrap();
+            }
+        });
+        println!("{}", sweep.render());
+        let hits = cache.stats().hits.get() - hits0;
+        let misses = cache.stats().misses.get() - misses0;
+        println!("  cache: hits={hits} misses={misses} ({})", cache.stats().summary());
+        if hits == 0 {
+            println!("  FAIL: repeated-λ sweep produced no cache hits");
+        }
+        ok &= hits > 0;
+        // Identity: the cached (warm) factor equals an uncached build.
+        let warm =
+            fastkrr::nystrom::NystromFactor::from_sketch_regularized(&kernel, &x, &sketch, n as f64 * lambdas[0])
+                .unwrap();
+        cache.clear();
+        let cold =
+            fastkrr::nystrom::NystromFactor::from_sketch_regularized(&kernel, &x, &sketch, n as f64 * lambdas[0])
+                .unwrap();
+        let drift = warm.b().sub(cold.b()).unwrap().max_abs();
+        println!("  cached-vs-uncached B drift: {drift:.3e}");
+        if drift >= 1e-12 {
+            println!("  FAIL: cached and uncached factor builds disagree");
+        }
+        ok &= drift < 1e-12;
+    }
+
     section("Theorem 4 error bounds vs p (n=512)");
     let n = 512;
     let x = data(n, 6, 9);
@@ -106,7 +187,6 @@ fn main() {
         "{:<8} {:>14} {:>14} {:>12} {:>10}",
         "p", "max l̃−l (≤0)", "max l−l̃", "d_eff est", "violations"
     );
-    let mut ok = true;
     let mut prev_err = f64::INFINITY;
     for p in [32usize, 64, 128, 256, 512] {
         let mut rng = Pcg64::new(p as u64);
@@ -140,7 +220,8 @@ fn main() {
         prev_err = under;
     }
     println!(
-        "\nTheorem 4 one-sided bound (l̃ ≤ l) holds, error shrinks with p: {}",
+        "\nall gates (sharded-build speedup, cache hits + identity, Theorem 4 \
+         one-sided bound l̃ ≤ l with non-exploding error): {}",
         if ok { "PASS" } else { "FAIL" }
     );
     std::process::exit(if ok { 0 } else { 1 });

@@ -175,7 +175,7 @@ fn main() {
             let t0 = Instant::now();
             for _ in 0..iters {
                 let _ = rt
-                    .execute(name, &[xb.clone(), lm.clone(), v.clone()])
+                    .execute(name, &[xb.as_slice(), lm.as_slice(), v.as_slice()])
                     .unwrap();
             }
             let per = t0.elapsed() / iters;

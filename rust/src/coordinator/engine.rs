@@ -101,6 +101,8 @@ pub struct Engine {
     dim: usize,
     ready: Arc<AtomicBool>,
     n_workers: usize,
+    /// Largest compiled batch size — sizes the `predict_many` submitter pool.
+    max_batch: usize,
 }
 
 impl Engine {
@@ -163,6 +165,7 @@ impl Engine {
             return Err(e);
         }
         ready.store(true, Ordering::Release);
+        let max_batch = cfg.batcher.batch_sizes.iter().copied().max().unwrap_or(1);
         Ok(Self {
             senders,
             workers,
@@ -172,6 +175,7 @@ impl Engine {
             dim,
             ready,
             n_workers,
+            max_batch,
         })
     }
 
@@ -218,21 +222,44 @@ impl Engine {
 
     /// Convenience: predict many points (submitted concurrently so the
     /// batchers can coalesce them across the worker pool).
+    ///
+    /// Rows are fed through a **bounded** pool of submitter threads — enough
+    /// in-flight requests to fill every worker's largest batch, capped at
+    /// 256 — instead of one OS thread per row, which collapsed at large
+    /// `xs`. Results come back in row order regardless of completion order.
     pub fn predict_many(&self, xs: &Mat) -> Vec<Result<f64>> {
         let n = xs.rows();
-        let mut out: Vec<Result<f64>> = Vec::with_capacity(n);
+        let submitters = (self.n_workers.saturating_mul(self.max_batch))
+            .clamp(1, 256)
+            .min(n.max(1));
+        let counter = AtomicUsize::new(0);
+        let mut out: Vec<Option<Result<f64>>> = (0..n).map(|_| None).collect();
         std::thread::scope(|s| {
-            let handles: Vec<_> = (0..n)
-                .map(|i| {
-                    let row = xs.row(i);
-                    s.spawn(move || self.predict(row))
+            let counter = &counter;
+            let handles: Vec<_> = (0..submitters)
+                .map(|_| {
+                    s.spawn(move || {
+                        let mut local = Vec::new();
+                        loop {
+                            let i = counter.fetch_add(1, Ordering::Relaxed);
+                            if i >= n {
+                                break;
+                            }
+                            local.push((i, self.predict(xs.row(i))));
+                        }
+                        local
+                    })
                 })
                 .collect();
             for h in handles {
-                out.push(h.join().unwrap());
+                for (i, r) in h.join().unwrap() {
+                    out[i] = Some(r);
+                }
             }
         });
-        out
+        out.into_iter()
+            .map(|r| r.expect("every row claimed by exactly one submitter"))
+            .collect()
     }
 
     /// Live stats (aggregated over all workers).
@@ -259,6 +286,13 @@ impl Engine {
 
     /// Stop the executor pool and wait for it to drain.
     pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    /// Stop the pool in place (idempotent). Unlike [`Self::shutdown`] the
+    /// handle stays usable: stats remain readable and later `predict` calls
+    /// return an "engine stopped" error instead of serving.
+    pub fn stop(&mut self) {
         self.shutdown_inner();
     }
 
@@ -338,7 +372,7 @@ fn executor_main(
             flat.extend(j.x.iter().map(|&v| v as f32));
         }
         let padded = Batcher::pad_batch(&flat, plan.real, plan.compiled, dim);
-        let result = run_batch(&backend, plan.compiled, padded, dim);
+        let result = run_batch(&backend, plan.compiled, &padded, dim);
         stats.batches.inc();
         stats.requests.add(plan.real as u64);
         stats.padded_slots.add((plan.compiled - plan.real) as u64);
@@ -353,6 +387,9 @@ fn executor_main(
             Err(e) => {
                 stats.errors.inc();
                 for job in jobs {
+                    // Failed requests still count toward latency — error
+                    // paths must not make the histogram lie about tail time.
+                    stats.latency.record(job.enqueued.elapsed());
                     let _ = job
                         .reply
                         .send(Err(Error::runtime(format!("batch failed: {e}"))));
@@ -418,13 +455,13 @@ fn init_backend(
 fn run_batch(
     backend: &ExecBackend,
     compiled: usize,
-    padded: Vec<f32>,
+    padded: &[f32],
     dim: usize,
 ) -> Result<Vec<f32>> {
     match backend {
         ExecBackend::Native { model } => {
             let rows = padded.len() / dim;
-            let x = Mat::from_f32(rows, dim, &padded)?;
+            let x = Mat::from_f32(rows, dim, padded)?;
             Ok(model.predict_native(&x).iter().map(|&v| v as f32).collect())
         }
         ExecBackend::Pjrt { rt, names, landmarks_f32, v_f32 } => {
@@ -435,9 +472,11 @@ fn run_batch(
                 .ok_or_else(|| {
                     Error::internal(format!("no artifact for batch {compiled}"))
                 })?;
+            // The constant operands are borrowed — no per-batch clone of
+            // the landmark block or serving vector on the hot loop.
             rt.execute(
                 name,
-                &[padded, landmarks_f32.clone(), v_f32.clone()],
+                &[padded, landmarks_f32.as_slice(), v_f32.as_slice()],
             )
         }
     }
@@ -619,10 +658,37 @@ mod tests {
 
     #[test]
     fn shutdown_then_predict_errors() {
-        let (_, sm) = serving_model(20, 8, 8);
+        let (x, sm) = serving_model(20, 8, 8);
+        let mut engine = Engine::start(sm, native_cfg(2)).unwrap();
+        engine.predict(x.row(0)).unwrap();
+        assert_eq!(engine.stats().requests.get(), 1);
+        engine.stop();
+        let err = engine.predict(x.row(0)).unwrap_err();
+        assert!(
+            err.to_string().contains("engine stopped"),
+            "wrong post-shutdown error: {err}"
+        );
+        // stop() is idempotent and stats stay readable afterwards.
+        engine.stop();
+        assert_eq!(engine.stats().requests.get(), 1);
+        assert_eq!(engine.stats().latency.count(), 1);
+    }
+
+    #[test]
+    fn predict_many_preserves_order_with_bounded_submitters() {
+        // n deliberately much larger than the submitter cap so rows are
+        // claimed out of order; results must still come back in row order.
+        let (x, sm) = serving_model(300, 8, 16);
+        let want = sm.predict_native(&x);
         let engine = Engine::start(sm, native_cfg(2)).unwrap();
-        let stats_requests = engine.stats().requests.get();
+        let got = engine.predict_many(&x);
+        assert_eq!(got.len(), 300);
+        for (i, r) in got.iter().enumerate() {
+            let v = r.as_ref().unwrap();
+            assert!((v - want[i]).abs() < 1e-5, "i={i}: {v} vs {}", want[i]);
+        }
+        assert_eq!(engine.stats().requests.get(), 300);
+        assert_eq!(engine.stats().latency.count(), 300);
         engine.shutdown();
-        assert_eq!(stats_requests, 0);
     }
 }

@@ -165,6 +165,49 @@ pub fn run_figure1_right(
     })
 }
 
+/// Risk across a λ grid at fixed sketch: the multi-λ sweep the kernel-block
+/// cache accelerates (one landmark draw, one cached `K[:, I]` block, many
+/// regularized factor builds).
+#[derive(Debug, Clone)]
+pub struct LambdaSweep {
+    pub lambdas: Vec<f64>,
+    /// Closed-form Nyström risk (eq. 4) at each λ.
+    pub risks: Vec<f64>,
+    pub n: usize,
+    pub p: usize,
+}
+
+/// Sweep λ over a fixed column sketch on the synthetic Bernoulli problem.
+///
+/// The sketch (and hence the landmark index multiset) is drawn once, so
+/// every `from_sketch_regularized` build after the first is served from the
+/// kernel-block cache — the pattern `experiments/table1.rs` and the §3.5
+/// refit loop share.
+pub fn run_lambda_sweep(
+    n: usize,
+    p: usize,
+    lambdas: &[f64],
+    seed: u64,
+) -> Result<LambdaSweep> {
+    let ds = data::synth_bernoulli(n, 2, 0.1, seed);
+    let kernel = KernelFn::new(KernelKind::Bernoulli { order: 2 });
+    let f_star = ds.f_star.clone().unwrap();
+    let sigma = ds.sigma.unwrap();
+    let mut rng = Pcg64::new(seed ^ 0x5EED);
+    let sketch = draw_columns(&kernel.diag(&ds.x), p, &mut rng)?;
+    let mut risks = Vec::with_capacity(lambdas.len());
+    for &lambda in lambdas {
+        let factor = NystromFactor::from_sketch_regularized(
+            &kernel,
+            &ds.x,
+            &sketch,
+            n as f64 * lambda,
+        )?;
+        risks.push(nystrom_risk(&factor, &f_star, sigma, lambda)?.total());
+    }
+    Ok(LambdaSweep { lambdas: lambdas.to_vec(), risks, n, p })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -222,5 +265,24 @@ mod tests {
             p_grid[0]
         );
         assert!(fig.render().contains("uniform"));
+    }
+
+    #[test]
+    fn lambda_sweep_reuses_cached_kernel_block() {
+        let cache = crate::kernel::cache::global();
+        let hits_before = cache.stats().hits.get();
+        let lambdas = [1e-6, 1e-5, 1e-4, 1e-3];
+        let sweep = run_lambda_sweep(120, 30, &lambdas, 17).unwrap();
+        assert_eq!(sweep.risks.len(), 4);
+        for r in &sweep.risks {
+            assert!(r.is_finite() && *r > 0.0, "risks {:?}", sweep.risks);
+        }
+        // One miss fills the block; the remaining λ builds must hit it.
+        let hit_delta = cache.stats().hits.get() - hits_before;
+        assert!(
+            hit_delta >= lambdas.len() as u64 - 1,
+            "expected ≥{} cache hits across the λ sweep, saw {hit_delta}",
+            lambdas.len() - 1
+        );
     }
 }

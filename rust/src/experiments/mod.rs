@@ -18,6 +18,9 @@ pub mod table1;
 pub mod theorem1;
 
 pub use dnc::{run_dnc_comparison, DncRow};
-pub use figure1::{run_figure1_left, run_figure1_right, Figure1Left, Figure1Right};
+pub use figure1::{
+    run_figure1_left, run_figure1_right, run_lambda_sweep, Figure1Left, Figure1Right,
+    LambdaSweep,
+};
 pub use table1::{run_table1, Table1Row};
 pub use theorem1::{run_theorem1, Theorem1Draw};

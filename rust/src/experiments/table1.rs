@@ -140,10 +140,12 @@ pub fn run_row(
     let rk = exact_risk(&km, &f_star, sigma, lambda)?;
     let mut ratios = Vec::with_capacity(trials);
     let mut rng = Pcg64::new(seed ^ 0xC0FFEE);
+    // Paper's configuration: sample ∝ approximate ridge leverage scores.
+    // The scores are a property of (kernel, data, λ) — compute them once
+    // and only average the column draw + factor build over the trials.
+    let approx =
+        leverage::approx_ridge_leverage(&kernel, &ds.x, lambda, p.max(16), &mut rng)?;
     for _ in 0..trials {
-        // Paper's configuration: sample ∝ approximate ridge leverage scores.
-        let approx =
-            leverage::approx_ridge_leverage(&kernel, &ds.x, lambda, p.max(16), &mut rng)?;
         let sketch = draw_columns(&approx.scores, p, &mut rng)?;
         let factor = NystromFactor::from_sketch(&kernel, &ds.x, &sketch)?;
         let rl = nystrom_risk(&factor, &f_star, sigma, lambda)?;

@@ -1,0 +1,359 @@
+//! Kernel-block cache: a bounded LRU of Nyström column blocks `K[:, I]`
+//! keyed by (kernel parameters, data fingerprint, landmark index multiset).
+//!
+//! The §3.5 bootstrap→resample→refit flow and multi-λ sweeps rebuild the
+//! Nyström factor many times over the *same* landmark set — only λ changes —
+//! so the n×p kernel block is identical across builds. This cache stores the
+//! **unweighted** block in canonical (sorted-index) column order and applies
+//! the per-request sketch weights in a fused parallel gather on retrieval;
+//! because every kernel path computes entries independently per (row, column)
+//! pair, the gathered result is bitwise identical to a direct assembly.
+//!
+//! Contract:
+//! - Key = (`Kernel::cache_key()`, FNV-1a fingerprint of the data matrix,
+//!   sorted landmark indices). Kernels returning `None` bypass the cache.
+//! - Capacity is a byte budget (`FASTKRR_KERNEL_CACHE_MB`, default 64 MiB;
+//!   `0` disables caching). Eviction is least-recently-used by lookup stamp.
+//! - Hit/miss/eviction counters surface through [`metrics::CacheStats`].
+//!
+//! [`metrics::CacheStats`]: crate::metrics::CacheStats
+
+use super::Kernel;
+use crate::linalg::Mat;
+use crate::metrics::CacheStats;
+use crate::util::parallel::par_chunks_mut;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// FNV-1a over a word sequence — stable, dependency-free hashing for cache
+/// keys and data fingerprints.
+pub(crate) fn fnv1a(words: &[u64]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &w in words {
+        for b in w.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Fingerprint a data matrix: shape plus a strided sample of element bit
+/// patterns (at most ~64k elements hashed, always including the last).
+fn fingerprint(x: &Mat) -> u64 {
+    let data = x.as_slice();
+    let stride = (data.len() / 65_536).max(1);
+    let mut words = Vec::with_capacity(2 + data.len() / stride + 1);
+    words.push(x.rows() as u64);
+    words.push(x.cols() as u64);
+    let mut i = 0;
+    while i < data.len() {
+        words.push(data[i].to_bits());
+        i += stride;
+    }
+    if let Some(last) = data.last() {
+        words.push(last.to_bits());
+    }
+    fnv1a(&words)
+}
+
+#[derive(PartialEq, Eq, Hash)]
+struct BlockKey {
+    kernel: u64,
+    data: u64,
+    /// Landmark indices in sorted order — the canonical multiset.
+    indices: Vec<usize>,
+}
+
+struct Entry {
+    block: Arc<Mat>,
+    stamp: u64,
+}
+
+#[derive(Default)]
+struct Inner {
+    map: HashMap<BlockKey, Entry>,
+    bytes: usize,
+    clock: u64,
+}
+
+/// Bounded LRU cache of unweighted kernel column blocks. See the module
+/// docs for the keying/eviction contract.
+pub struct KernelBlockCache {
+    inner: Mutex<Inner>,
+    stats: CacheStats,
+    capacity: usize,
+}
+
+impl KernelBlockCache {
+    /// A cache holding at most `capacity_bytes` of block data. `0` disables
+    /// caching entirely (every call takes the direct path).
+    pub fn new(capacity_bytes: usize) -> Self {
+        Self {
+            inner: Mutex::new(Inner::default()),
+            stats: CacheStats::new(),
+            capacity: capacity_bytes,
+        }
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        self.capacity
+    }
+
+    /// Hit/miss/eviction counters (cumulative for the cache's lifetime).
+    pub fn stats(&self) -> &CacheStats {
+        &self.stats
+    }
+
+    /// Drop every cached block. Counters are NOT reset — callers snapshot
+    /// and diff them.
+    pub fn clear(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.map.clear();
+        inner.bytes = 0;
+    }
+
+    /// The weighted Nyström column block `C_w[i][j] = w_j · k(x_i, x_{I_j})`,
+    /// served from cache when possible. Exactly equal (bitwise) to assembling
+    /// `kernel.columns(x, indices)` and scaling each column by its weight.
+    pub fn weighted_columns(
+        &self,
+        kernel: &dyn Kernel,
+        x: &Mat,
+        indices: &[usize],
+        weights: &[f64],
+    ) -> Mat {
+        assert_eq!(indices.len(), weights.len(), "indices/weights length mismatch");
+        let n = x.rows();
+        let p = indices.len();
+        if p == 0 {
+            return Mat::zeros(n, 0);
+        }
+        let key_kernel = if self.capacity == 0 { None } else { kernel.cache_key() };
+        let Some(kernel_hash) = key_kernel else {
+            // Direct path: assemble in request order, scale in parallel.
+            let mut c_w = kernel.columns(x, indices);
+            par_chunks_mut(c_w.as_mut_slice(), n, p, |_ci, _r0, chunk| {
+                let rows_here = chunk.len() / p;
+                for r in 0..rows_here {
+                    for (j, v) in chunk[r * p..(r + 1) * p].iter_mut().enumerate() {
+                        *v *= weights[j];
+                    }
+                }
+            });
+            return c_w;
+        };
+
+        // Canonicalize: block columns live in sorted-index order; perm[j] is
+        // the canonical column holding request position j.
+        let mut order: Vec<usize> = (0..p).collect();
+        order.sort_by_key(|&j| indices[j]);
+        let sorted: Vec<usize> = order.iter().map(|&j| indices[j]).collect();
+        let mut perm = vec![0usize; p];
+        for (k, &j) in order.iter().enumerate() {
+            perm[j] = k;
+        }
+        let key = BlockKey { kernel: kernel_hash, data: fingerprint(x), indices: sorted };
+
+        let cached = {
+            let mut inner = self.inner.lock().unwrap();
+            inner.clock += 1;
+            let clock = inner.clock;
+            inner.map.get_mut(&key).map(|e| {
+                e.stamp = clock;
+                Arc::clone(&e.block)
+            })
+        };
+        let block = match cached {
+            Some(block) => {
+                self.stats.hits.inc();
+                block
+            }
+            None => {
+                self.stats.misses.inc();
+                let block = Arc::new(kernel.columns(x, &key.indices));
+                let entry_bytes = n * p * std::mem::size_of::<f64>();
+                if entry_bytes <= self.capacity {
+                    let mut inner = self.inner.lock().unwrap();
+                    while inner.bytes + entry_bytes > self.capacity && !inner.map.is_empty() {
+                        let victim = inner
+                            .map
+                            .iter()
+                            .min_by_key(|(_, e)| e.stamp)
+                            .map(|(k, _)| BlockKey {
+                                kernel: k.kernel,
+                                data: k.data,
+                                indices: k.indices.clone(),
+                            })
+                            .unwrap();
+                        if let Some(e) = inner.map.remove(&victim) {
+                            inner.bytes -=
+                                e.block.rows() * e.block.cols() * std::mem::size_of::<f64>();
+                            self.stats.evictions.inc();
+                        }
+                    }
+                    inner.clock += 1;
+                    let stamp = inner.clock;
+                    inner.bytes += entry_bytes;
+                    inner.map.insert(key, Entry { block: Arc::clone(&block), stamp });
+                }
+                block
+            }
+        };
+
+        // Fused gather: un-permute columns and apply weights in one parallel
+        // pass over row panels.
+        let mut out = Mat::zeros(n, p);
+        let block = &*block;
+        par_chunks_mut(out.as_mut_slice(), n, p, |_ci, r0, chunk| {
+            let rows_here = chunk.len() / p;
+            for r in 0..rows_here {
+                let brow = block.row(r0 + r);
+                for (j, v) in chunk[r * p..(r + 1) * p].iter_mut().enumerate() {
+                    *v = brow[perm[j]] * weights[j];
+                }
+            }
+        });
+        out
+    }
+}
+
+/// Default byte budget: `FASTKRR_KERNEL_CACHE_MB` (MiB, default 64; 0
+/// disables), read once at first use.
+fn default_capacity() -> usize {
+    let mb = std::env::var("FASTKRR_KERNEL_CACHE_MB")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(64);
+    mb.saturating_mul(1024 * 1024)
+}
+
+/// Process-wide kernel-block cache shared by the factor-build paths.
+pub fn global() -> &'static KernelBlockCache {
+    static CACHE: OnceLock<KernelBlockCache> = OnceLock::new();
+    CACHE.get_or_init(|| KernelBlockCache::new(default_capacity()))
+}
+
+/// Weighted column block through the process-wide cache — the entry point
+/// `NystromFactor::blocks` uses.
+pub fn weighted_columns(kernel: &dyn Kernel, x: &Mat, indices: &[usize], weights: &[f64]) -> Mat {
+    global().weighted_columns(kernel, x, indices, weights)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernel::{KernelFn, KernelKind};
+    use crate::rng::Pcg64;
+
+    fn data(n: usize, d: usize, seed: u64) -> Mat {
+        let mut rng = Pcg64::new(seed);
+        Mat::from_fn(n, d, |_, _| rng.normal())
+    }
+
+    #[test]
+    fn cached_block_matches_direct_exactly() {
+        let x = data(30, 3, 1);
+        let k = KernelFn::new(KernelKind::Rbf { bandwidth: 1.2 });
+        // Duplicated + unsorted landmark multiset.
+        let idx = [7usize, 2, 7, 19, 0, 2];
+        let w = [0.9, 1.1, 0.7, 1.3, 0.5, 1.9];
+        let off = KernelBlockCache::new(0);
+        let on = KernelBlockCache::new(64 * 1024 * 1024);
+        let direct = off.weighted_columns(&k, &x, &idx, &w);
+        let miss = on.weighted_columns(&k, &x, &idx, &w);
+        let hit = on.weighted_columns(&k, &x, &idx, &w);
+        assert_eq!(direct.as_slice(), miss.as_slice(), "miss path differs from direct");
+        assert_eq!(miss.as_slice(), hit.as_slice(), "hit path differs from miss path");
+        assert_eq!(on.stats().misses.get(), 1);
+        assert_eq!(on.stats().hits.get(), 1);
+        assert_eq!(off.stats().lookups(), 0, "disabled cache must not count lookups");
+    }
+
+    #[test]
+    fn permuted_multiset_hits_same_entry() {
+        let x = data(20, 2, 2);
+        let k = KernelFn::new(KernelKind::Laplacian { bandwidth: 0.8 });
+        let cache = KernelBlockCache::new(64 * 1024 * 1024);
+        let a = cache.weighted_columns(&k, &x, &[3, 11, 5], &[1.0, 2.0, 3.0]);
+        // Same multiset, different order and weights — must hit.
+        let b = cache.weighted_columns(&k, &x, &[5, 3, 11], &[0.5, 0.25, 4.0]);
+        assert_eq!(cache.stats().misses.get(), 1);
+        assert_eq!(cache.stats().hits.get(), 1);
+        // Cross-check b against a fresh direct computation.
+        let direct = KernelBlockCache::new(0).weighted_columns(&k, &x, &[5, 3, 11], &[0.5, 0.25, 4.0]);
+        assert_eq!(b.as_slice(), direct.as_slice());
+        // And a is actually a's own direct result, not b's.
+        let direct_a =
+            KernelBlockCache::new(0).weighted_columns(&k, &x, &[3, 11, 5], &[1.0, 2.0, 3.0]);
+        assert_eq!(a.as_slice(), direct_a.as_slice());
+    }
+
+    #[test]
+    fn lru_eviction_respects_byte_budget() {
+        let x = data(16, 2, 3);
+        let k = KernelFn::new(KernelKind::Linear);
+        // Budget fits exactly one 16×2 block (16*2*8 = 256 bytes).
+        let cache = KernelBlockCache::new(256);
+        cache.weighted_columns(&k, &x, &[0, 1], &[1.0, 1.0]);
+        cache.weighted_columns(&k, &x, &[2, 3], &[1.0, 1.0]);
+        assert_eq!(cache.stats().evictions.get(), 1);
+        // First block was evicted — looking it up again is a miss.
+        cache.weighted_columns(&k, &x, &[0, 1], &[1.0, 1.0]);
+        assert_eq!(cache.stats().misses.get(), 3);
+        assert_eq!(cache.stats().hits.get(), 0);
+        // Oversized requests are served but never stored.
+        let big = KernelBlockCache::new(8);
+        big.weighted_columns(&k, &x, &[0, 1], &[1.0, 1.0]);
+        big.weighted_columns(&k, &x, &[0, 1], &[1.0, 1.0]);
+        assert_eq!(big.stats().misses.get(), 2);
+    }
+
+    #[test]
+    fn keyless_kernel_bypasses_cache() {
+        struct Anon;
+        impl Kernel for Anon {
+            fn eval(&self, x: &[f64], z: &[f64]) -> f64 {
+                crate::linalg::dot(x, z) + 1.0
+            }
+        }
+        let x = data(10, 2, 4);
+        let cache = KernelBlockCache::new(64 * 1024 * 1024);
+        let got = cache.weighted_columns(&Anon, &x, &[1, 4], &[2.0, 3.0]);
+        assert_eq!(cache.stats().lookups(), 0);
+        for i in 0..10 {
+            let want0 = (crate::linalg::dot(x.row(i), x.row(1)) + 1.0) * 2.0;
+            let want1 = (crate::linalg::dot(x.row(i), x.row(4)) + 1.0) * 3.0;
+            assert!((got[(i, 0)] - want0).abs() < 1e-12);
+            assert!((got[(i, 1)] - want1).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn different_data_or_kernel_misses() {
+        let x1 = data(12, 2, 5);
+        let x2 = data(12, 2, 6);
+        let k1 = KernelFn::new(KernelKind::Rbf { bandwidth: 1.0 });
+        let k2 = KernelFn::new(KernelKind::Rbf { bandwidth: 2.0 });
+        let cache = KernelBlockCache::new(64 * 1024 * 1024);
+        let w = [1.0, 1.0];
+        cache.weighted_columns(&k1, &x1, &[0, 5], &w);
+        cache.weighted_columns(&k1, &x2, &[0, 5], &w);
+        cache.weighted_columns(&k2, &x1, &[0, 5], &w);
+        assert_eq!(cache.stats().misses.get(), 3);
+        assert_eq!(cache.stats().hits.get(), 0);
+        cache.clear();
+        cache.weighted_columns(&k1, &x1, &[0, 5], &w);
+        assert_eq!(cache.stats().misses.get(), 4, "clear() must drop entries");
+    }
+
+    #[test]
+    fn empty_sketch_is_trivial() {
+        let x = data(5, 2, 7);
+        let k = KernelFn::new(KernelKind::Linear);
+        let cache = KernelBlockCache::new(1024);
+        let out = cache.weighted_columns(&k, &x, &[], &[]);
+        assert_eq!((out.rows(), out.cols()), (5, 0));
+        assert_eq!(cache.stats().lookups(), 0);
+    }
+}

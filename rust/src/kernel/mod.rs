@@ -11,10 +11,11 @@
 //! same formulation the L1 Pallas kernel uses on the MXU (DESIGN.md §7).
 
 mod bernoulli;
+pub mod cache;
 
 pub use bernoulli::{bernoulli_b2, bernoulli_b4, bernoulli_b6, bernoulli_kernel};
 
-use crate::linalg::{dot, matmul_a_bt, Mat};
+use crate::linalg::{dot, matmul_a_bt, matmul_a_bt_serial, Mat};
 use crate::util::parallel::par_chunks_mut;
 use crate::util::{Error, Result};
 
@@ -157,6 +158,33 @@ pub trait Kernel: Send + Sync {
         let z = x.select_rows(idx);
         self.cross(x, &z)
     }
+
+    /// Serial twin of [`Kernel::cross`] — single-threaded, fixed evaluation
+    /// order. Used as the oracle in the parallel property soak and by the
+    /// serial factor-build twins in `nystrom`.
+    fn cross_serial(&self, x: &Mat, z: &Mat) -> Mat {
+        pairwise_serial(self, x, z)
+    }
+
+    /// Stable 64-bit hash of the kernel's parameters, or `None` to opt this
+    /// kernel out of the kernel-block cache (see [`cache`]). Two kernels with
+    /// the same key MUST produce identical values on identical inputs.
+    fn cache_key(&self) -> Option<u64> {
+        None
+    }
+}
+
+/// Serial pairwise kernel evaluation — the generic `cross_serial` body,
+/// shared so concrete kernels can fall back to it for exotic kinds.
+fn pairwise_serial<K: Kernel + ?Sized>(kernel: &K, x: &Mat, z: &Mat) -> Mat {
+    assert_eq!(x.cols(), z.cols(), "kernel cross: feature dims differ");
+    let mut out = Mat::zeros(x.rows(), z.rows());
+    for i in 0..x.rows() {
+        for j in 0..z.rows() {
+            out[(i, j)] = kernel.eval(x.row(i), z.row(j));
+        }
+    }
+    out
 }
 
 /// Concrete kernel dispatcher for [`KernelKind`].
@@ -256,6 +284,46 @@ impl Kernel for KernelFn {
                 out
             }
         }
+    }
+
+    /// Serial twin of the fast paths above: same per-entry formulas, serial
+    /// matmul and loops, so results match `cross` bitwise at 1 thread.
+    fn cross_serial(&self, x: &Mat, z: &Mat) -> Mat {
+        match self.kind {
+            KernelKind::Rbf { bandwidth } => {
+                let mut g = matmul_a_bt_serial(x, z);
+                let xn: Vec<f64> = (0..x.rows()).map(|i| dot(x.row(i), x.row(i))).collect();
+                let zn: Vec<f64> = (0..z.rows()).map(|j| dot(z.row(j), z.row(j))).collect();
+                let inv = -1.0 / (2.0 * bandwidth * bandwidth);
+                let p = z.rows();
+                for i in 0..x.rows() {
+                    let xi = xn[i];
+                    let row = &mut g.as_mut_slice()[i * p..(i + 1) * p];
+                    for (j, v) in row.iter_mut().enumerate() {
+                        let d2 = (xi + zn[j] - 2.0 * *v).max(0.0);
+                        *v = (d2 * inv).exp();
+                    }
+                }
+                g
+            }
+            KernelKind::Linear => matmul_a_bt_serial(x, z),
+            _ => pairwise_serial(self, x, z),
+        }
+    }
+
+    /// FNV-1a over the kind discriminant and parameter bit patterns — stable
+    /// within a process run, distinct across parameterizations.
+    fn cache_key(&self) -> Option<u64> {
+        let words: Vec<u64> = match self.kind {
+            KernelKind::Linear => vec![1],
+            KernelKind::Rbf { bandwidth } => vec![2, bandwidth.to_bits()],
+            KernelKind::Laplacian { bandwidth } => vec![3, bandwidth.to_bits()],
+            KernelKind::Polynomial { degree, offset } => {
+                vec![4, degree as u64, offset.to_bits()]
+            }
+            KernelKind::Bernoulli { order } => vec![5, order as u64],
+        };
+        Some(cache::fnv1a(&words))
     }
 }
 
@@ -381,6 +449,37 @@ mod tests {
                 assert!((c[(i, j)] - g[(i, jj)]).abs() < 1e-12);
             }
         }
+    }
+
+    #[test]
+    fn cross_serial_matches_cross() {
+        let x = randmat(11, 3, 21);
+        let z = randmat(5, 3, 22);
+        for kind in [
+            KernelKind::Linear,
+            KernelKind::Rbf { bandwidth: 1.1 },
+            KernelKind::Laplacian { bandwidth: 0.8 },
+            KernelKind::Polynomial { degree: 2, offset: 1.0 },
+            KernelKind::Bernoulli { order: 2 },
+        ] {
+            let k = KernelFn::new(kind);
+            let a = k.cross(&x, &z);
+            let b = k.cross_serial(&x, &z);
+            let drift = a.sub(&b).unwrap().max_abs();
+            assert!(drift < 1e-12, "{}: drift {drift:e}", kind.name());
+        }
+    }
+
+    #[test]
+    fn cache_key_stable_and_distinct() {
+        let a = KernelFn::new(KernelKind::Rbf { bandwidth: 1.5 });
+        let b = KernelFn::new(KernelKind::Rbf { bandwidth: 1.5 });
+        let c = KernelFn::new(KernelKind::Rbf { bandwidth: 2.5 });
+        let d = KernelFn::new(KernelKind::Laplacian { bandwidth: 1.5 });
+        assert_eq!(a.cache_key(), b.cache_key());
+        assert_ne!(a.cache_key(), c.cache_key());
+        assert_ne!(a.cache_key(), d.cache_key());
+        assert!(a.cache_key().is_some());
     }
 
     #[test]

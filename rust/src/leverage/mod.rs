@@ -143,7 +143,9 @@ pub fn leverage_from_factor(factor: &NystromFactor, lambda: f64) -> Result<Vec<f
 
 /// Theorem 4's sufficient sketch size
 /// `p = 8(Tr(K)/(nλε) + 1/6)·log(n/ρ)` with ε = 1/2, ρ = 0.1, scaled by
-/// `oversample` and clamped to [8, n].
+/// `oversample`. The result is raised to at least 8 and then capped at `n`
+/// (min/max composition, NOT `clamp` — `clamp(8, n)` panics when `n < 8`),
+/// so tiny datasets degrade gracefully to p = n.
 pub fn theorem4_sketch_size(
     kernel: &dyn Kernel,
     x: &Mat,
@@ -153,7 +155,7 @@ pub fn theorem4_sketch_size(
 ) -> usize {
     let n = x.rows();
     if n == 0 {
-        return 8;
+        return 0;
     }
     let trace: f64 = match kmat {
         Some(k) => k.trace(),
@@ -163,13 +165,15 @@ pub fn theorem4_sketch_size(
     let rho = 0.1;
     let nl = n as f64 * lambda;
     let p = 8.0 * (trace / (nl * eps) + 1.0 / 6.0) * (n as f64 / rho).ln();
-    ((p * oversample).ceil() as usize).clamp(8, n)
+    ((p * oversample).ceil() as usize).max(8).min(n)
 }
 
-/// Theorem 3's sufficient sketch size `p = 8(d_eff/β + 1/6)·log(n/ρ)`.
+/// Theorem 3's sufficient sketch size `p = 8(d_eff/β + 1/6)·log(n/ρ)`,
+/// raised to at least 1 and capped at `n` (degrades to `n` — and to 0 only
+/// at `n = 0` — instead of panicking like `clamp(1, n)` would).
 pub fn theorem3_sketch_size(d_eff: f64, beta: f64, n: usize, rho: f64) -> usize {
     let p = 8.0 * (d_eff / beta + 1.0 / 6.0) * (n as f64 / rho).ln();
-    (p.ceil() as usize).clamp(1, n)
+    (p.ceil() as usize).max(1).min(n)
 }
 
 /// Effective dimensionality directly from a kernel matrix (convenience for
@@ -310,6 +314,27 @@ mod tests {
         let p3 = theorem3_sketch_size(10.0, 1.0, 1000, 0.1);
         assert!(p3 >= 100, "8*10*log(10000) ≈ 750");
         assert!(theorem3_sketch_size(1e9, 1.0, 50, 0.1) == 50, "clamped to n");
+    }
+
+    #[test]
+    fn sketch_sizes_degrade_to_n_below_lower_bounds() {
+        // Regression: `.clamp(8, n)` / `.clamp(1, n)` panicked for n below
+        // the lower bound; the min/max composition must degrade to n.
+        for n in [0usize, 1, 5] {
+            let (x, k, km) = if n > 0 {
+                let (x, k, km) = setup(n, 20 + n as u64, 1.0);
+                (x, k, Some(km))
+            } else {
+                let k = KernelFn::new(KernelKind::Rbf { bandwidth: 1.0 });
+                (Mat::zeros(0, 2), k, None)
+            };
+            let p4 = theorem4_sketch_size(&k, &x, km.as_ref(), 0.05, 1.0);
+            assert_eq!(p4, n, "theorem4 at n={n}");
+            let p3 = theorem3_sketch_size(1e3, 1.0, n, 0.1);
+            assert_eq!(p3, n, "theorem3 at n={n}");
+        }
+        // Large-n behaviour is unchanged by the rewrite.
+        assert_eq!(theorem3_sketch_size(0.0, 1.0, 1_000, 0.1), 13);
     }
 
     #[test]

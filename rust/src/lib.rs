@@ -43,6 +43,18 @@
 //!   request queue (`ceil(queue_cap / workers)`), fed by round-robin
 //!   dispatch that falls over to sibling queues before reporting
 //!   backpressure; stats are shared atomics.
+//! - **Kernel-block cache** ([`kernel::cache`]) — a process-wide bounded
+//!   LRU of weighted Nyström column blocks `K[:, I]·diag(w)`, keyed by
+//!   (kernel `cache_key`, data fingerprint, **sorted** landmark multiset)
+//!   so permutations of the same sketch share one entry; hits gather rows
+//!   back into request order on the pool. `FASTKRR_KERNEL_CACHE_MB` sets
+//!   the byte budget (default 64 MiB, `0` disables); eviction removes the
+//!   least-recently-looked-up entry, and [`metrics::CacheStats`] exposes
+//!   hit/miss/eviction counters. Repeated builds over the same sketch —
+//!   §3.5 bootstrap→resample→refit, multi-λ sweeps — skip the O(np)
+//!   kernel evaluation entirely; cached and uncached factors are
+//!   bit-identical because per-entry kernel values are independent of
+//!   block column order.
 //!
 //! ## Replaying property-test failures
 //!

@@ -28,6 +28,49 @@ impl Counter {
     }
 }
 
+/// Hit/miss/eviction counters for a cache (e.g. the kernel-block cache).
+/// All counters are thread-safe; `hit_rate` is a point-in-time snapshot.
+#[derive(Debug, Default)]
+pub struct CacheStats {
+    /// Lookups served from the cache.
+    pub hits: Counter,
+    /// Lookups that had to compute (and possibly insert) the value.
+    pub misses: Counter,
+    /// Entries evicted to stay under the byte budget.
+    pub evictions: Counter,
+}
+
+impl CacheStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Total lookups observed (hits + misses).
+    pub fn lookups(&self) -> u64 {
+        self.hits.get() + self.misses.get()
+    }
+
+    /// Fraction of lookups served from cache; 0.0 when nothing was looked up.
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.lookups();
+        if total == 0 {
+            return 0.0;
+        }
+        self.hits.get() as f64 / total as f64
+    }
+
+    /// One-line summary for logs.
+    pub fn summary(&self) -> String {
+        format!(
+            "hits={} misses={} evictions={} hit_rate={:.1}%",
+            self.hits.get(),
+            self.misses.get(),
+            self.evictions.get(),
+            100.0 * self.hit_rate()
+        )
+    }
+}
+
 /// Scope timer: measure a closure, return (result, duration).
 pub fn time_it<T>(f: impl FnOnce() -> T) -> (T, Duration) {
     let t0 = Instant::now();
@@ -196,6 +239,21 @@ mod tests {
             }
         });
         assert_eq!(c.get(), 8000);
+    }
+
+    #[test]
+    fn cache_stats_hit_rate() {
+        let s = CacheStats::new();
+        assert_eq!(s.hit_rate(), 0.0);
+        assert_eq!(s.lookups(), 0);
+        s.misses.inc();
+        s.hits.inc();
+        s.hits.inc();
+        s.evictions.inc();
+        assert_eq!(s.lookups(), 3);
+        assert!((s.hit_rate() - 2.0 / 3.0).abs() < 1e-12);
+        let line = s.summary();
+        assert!(line.contains("hits=2") && line.contains("misses=1"));
     }
 
     #[test]

@@ -14,10 +14,20 @@
 //! - [`NystromFactor::from_sketch_regularized`] — the regularized variant
 //!   `L_γ = KS(SᵀKS + nγI)^{-1}SᵀK` from Theorem 1 / Appendix A, built with
 //!   a Cholesky solve (SPD by construction), satisfying `L_γ ⪯ L ⪯ K`.
+//!
+//! The factor build is sharded across the persistent thread pool: the
+//! weighted column block `C_w` comes from the kernel-block cache
+//! ([`crate::kernel::cache`], which assembles row panels in parallel on a
+//! miss and serves repeats from an LRU), the `W` overlap is built directly
+//! in symmetrized form over row panels, and the `B = C_w · fmap` product
+//! rides the parallel `matmul`. [`NystromFactor::blocks_serial`] /
+//! [`NystromFactor::from_sketch_serial`] are the single-threaded twins used
+//! as oracles by `tests/property_parallel.rs` and the benches.
 
 use crate::kernel::Kernel;
-use crate::linalg::{eigh, matmul, solve_lower, syrk_at_a, Cholesky, Mat};
+use crate::linalg::{eigh, matmul, matmul_serial, solve_lower, syrk_at_a, Cholesky, Mat};
 use crate::sketch::ColumnSketch;
+use crate::util::parallel::par_chunks_mut;
 use crate::util::{Error, Result};
 
 /// Factored Nyström approximation `L = B Bᵀ` plus everything needed to
@@ -127,38 +137,109 @@ impl NystromFactor {
     }
 
     /// Assemble the weighted column block `C_w (n×p)` and overlap
-    /// `W = C_w[I, :]` (p×p, symmetrized).
-    fn blocks(
+    /// `W = SᵀKS` (p×p, symmetric by construction).
+    ///
+    /// Sharded across the thread pool: `C_w` is served through the
+    /// kernel-block cache (parallel row-panel assembly on a miss, fused
+    /// weight gather on retrieval) and `W` is written directly in
+    /// symmetrized form, one row panel per pool chunk. Matches
+    /// [`Self::blocks_serial`] within parallel-matmul drift (≤1e-12·scale).
+    pub fn blocks(
         kernel: &dyn Kernel,
         x: &Mat,
         sketch: &ColumnSketch,
     ) -> Result<(Mat, Mat)> {
+        Self::validate_sketch(x, sketch)?;
         let p = sketch.p();
-        if p == 0 {
-            return Err(Error::invalid("empty sketch"));
-        }
-        if sketch.indices.iter().any(|&i| i >= x.rows()) {
-            return Err(Error::invalid("sketch index out of range"));
-        }
-        // C = K[:, I]; scale column j by w_j.
-        let mut c_w = kernel.columns(x, &sketch.indices);
+        // C_w[:, j] = w_j · K[:, i_j], via the landmark-keyed block cache.
+        let c_w = crate::kernel::cache::weighted_columns(
+            kernel,
+            x,
+            &sketch.indices,
+            &sketch.weights,
+        );
+        // W[j][k] = ½(w_j·C_w[i_j][k] + w_k·C_w[i_k][j]) — the symmetrized
+        // row-scaled overlap, written directly so no serial symmetrize pass
+        // is needed (the diagonal reduces to w_j·C_w[i_j][j] exactly).
+        let idx = &sketch.indices;
+        let wt = &sketch.weights;
+        let mut w = Mat::zeros(p, p);
+        par_chunks_mut(w.as_mut_slice(), p, p, |_ci, r0, chunk| {
+            let rows_here = chunk.len() / p;
+            for r in 0..rows_here {
+                let j = r0 + r;
+                let cj = c_w.row(idx[j]);
+                let wj = wt[j];
+                for (k, slot) in chunk[r * p..(r + 1) * p].iter_mut().enumerate() {
+                    *slot = 0.5 * (wj * cj[k] + wt[k] * c_w.row(idx[k])[j]);
+                }
+            }
+        });
+        Ok((c_w, w))
+    }
+
+    /// Single-threaded twin of [`Self::blocks`]: serial kernel assembly
+    /// (`Kernel::cross_serial`), serial weight scaling, and the classic
+    /// select-rows → row-scale → symmetrize construction of `W`. Never
+    /// touches the cache — the oracle for the parallel property soak.
+    pub fn blocks_serial(
+        kernel: &dyn Kernel,
+        x: &Mat,
+        sketch: &ColumnSketch,
+    ) -> Result<(Mat, Mat)> {
+        Self::validate_sketch(x, sketch)?;
+        let p = sketch.p();
+        let landmarks = x.select_rows(&sketch.indices);
+        let mut c_w = kernel.cross_serial(x, &landmarks);
         for r in 0..c_w.rows() {
             let row = c_w.row_mut(r);
             for (j, v) in row.iter_mut().enumerate() {
                 *v *= sketch.weights[j];
             }
         }
-        // W = SᵀKS: W[j][k] = w_j w_k K[i_j, i_k] = rows I of C_w, scaled by w row-wise.
         let mut w = c_w.select_rows(&sketch.indices);
         for j in 0..p {
-            let row = w.row_mut(j);
             let wj = sketch.weights[j];
-            for v in row.iter_mut() {
+            for v in w.row_mut(j).iter_mut() {
                 *v *= wj;
             }
         }
         w.symmetrize();
         Ok((c_w, w))
+    }
+
+    /// Single-threaded twin of [`Self::from_sketch`] (serial blocks + serial
+    /// `B = C_w · fmap` product) — the end-to-end oracle for the sharded
+    /// factor build.
+    pub fn from_sketch_serial(
+        kernel: &dyn Kernel,
+        x: &Mat,
+        sketch: &ColumnSketch,
+    ) -> Result<Self> {
+        let (c_w, w) = Self::blocks_serial(kernel, x, sketch)?;
+        let eig = eigh(&w)?;
+        let fmap = eig.pinv_sqrt(None);
+        let b = matmul_serial(&c_w, &fmap);
+        Ok(Self {
+            b,
+            indices: sketch.indices.clone(),
+            weights: sketch.weights.clone(),
+            fmap,
+            gamma: 0.0,
+        })
+    }
+
+    fn validate_sketch(x: &Mat, sketch: &ColumnSketch) -> Result<()> {
+        if sketch.p() == 0 {
+            return Err(Error::invalid("empty sketch"));
+        }
+        if sketch.weights.len() != sketch.p() {
+            return Err(Error::invalid("sketch weights length != indices length"));
+        }
+        if sketch.indices.iter().any(|&i| i >= x.rows()) {
+            return Err(Error::invalid("sketch index out of range"));
+        }
+        Ok(())
     }
 
     /// The n×p factor `B` (with `B Bᵀ = L`).
@@ -390,6 +471,35 @@ mod tests {
         let l1 = crate::linalg::matmul_a_bt(&b, &b);
         let l2 = f.dense();
         assert!(l1.sub(&l2).unwrap().max_abs() < 1e-8);
+    }
+
+    #[test]
+    fn serial_factor_build_matches_parallel() {
+        let (x, k) = setup(22, 14);
+        let mut rng = Pcg64::new(15);
+        let sketch = draw_columns(&vec![1.0; 22], 7, &mut rng).unwrap();
+        let (c_par, w_par) = NystromFactor::blocks(&k, &x, &sketch).unwrap();
+        let (c_ser, w_ser) = NystromFactor::blocks_serial(&k, &x, &sketch).unwrap();
+        assert!(c_par.sub(&c_ser).unwrap().max_abs() < 1e-12);
+        assert!(w_par.sub(&w_ser).unwrap().max_abs() < 1e-12);
+        assert_eq!(w_par.asymmetry(), 0.0, "parallel W must be exactly symmetric");
+        let f_par = NystromFactor::from_sketch(&k, &x, &sketch).unwrap();
+        let f_ser = NystromFactor::from_sketch_serial(&k, &x, &sketch).unwrap();
+        // B is only unique up to the eigh basis, but BBᵀ is not.
+        let d = f_par.dense().sub(&f_ser.dense()).unwrap().max_abs();
+        assert!(d < 1e-8, "dense L drift between serial/parallel builds: {d:e}");
+    }
+
+    #[test]
+    fn rejects_mismatched_weights_length() {
+        let (x, k) = setup(6, 16);
+        let bad = ColumnSketch {
+            indices: vec![0, 1, 2],
+            weights: vec![1.0, 1.0],
+            probs: vec![0.3; 3],
+        };
+        assert!(NystromFactor::blocks(&k, &x, &bad).is_err());
+        assert!(NystromFactor::blocks_serial(&k, &x, &bad).is_err());
     }
 
     #[test]

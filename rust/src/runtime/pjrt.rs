@@ -83,10 +83,13 @@ impl Runtime {
 
     /// Execute an artifact with f32 row-major input buffers.
     ///
-    /// `inputs` must match the manifest's `arg_shapes` exactly (shape check
-    /// enforced here — PJRT would otherwise abort on mismatch). Returns the
-    /// flattened f32 contents of the first tuple output.
-    pub fn execute(&self, name: &str, inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+    /// `inputs` are borrowed slices (callers with long-lived constant
+    /// operands — e.g. the serving engine's landmark block — pass them
+    /// without cloning per call). They must match the manifest's
+    /// `arg_shapes` exactly (shape check enforced here — PJRT would
+    /// otherwise abort on mismatch). Returns the flattened f32 contents of
+    /// the first tuple output.
+    pub fn execute(&self, name: &str, inputs: &[&[f32]]) -> Result<Vec<f32>> {
         let spec = self
             .specs
             .get(name)
@@ -99,7 +102,7 @@ impl Runtime {
             )));
         }
         let mut literals = Vec::with_capacity(inputs.len());
-        for (i, (buf, shape)) in inputs.iter().zip(&spec.arg_shapes).enumerate() {
+        for (i, (buf, shape)) in inputs.iter().copied().zip(&spec.arg_shapes).enumerate() {
             let want: usize = shape.iter().product();
             if buf.len() != want {
                 return Err(Error::invalid(format!(
@@ -187,7 +190,7 @@ mod tests {
         let lm: Vec<f32> = (0..p * d).map(|_| rng.normal() as f32).collect();
         let v: Vec<f32> = (0..p).map(|_| rng.normal() as f32).collect();
         let got = rt
-            .execute("predict_b8_d8_p64", &[x.clone(), lm.clone(), v.clone()])
+            .execute("predict_b8_d8_p64", &[x.as_slice(), lm.as_slice(), v.as_slice()])
             .unwrap();
         assert_eq!(got.len(), b);
         // Native reference with the manifest's bandwidth.
@@ -222,7 +225,7 @@ mod tests {
         let mut rng = crate::rng::Pcg64::new(7);
         let x: Vec<f32> = (0..m * d).map(|_| rng.normal() as f32).collect();
         let z: Vec<f32> = (0..p * d).map(|_| rng.normal() as f32).collect();
-        let got = rt.execute(name, &[x.clone(), z.clone()]).unwrap();
+        let got = rt.execute(name, &[x.as_slice(), z.as_slice()]).unwrap();
         assert_eq!(got.len(), m * p);
         let bw = rt.spec(name).unwrap().bandwidth.unwrap();
         for idx in [0usize, 37, m * p - 1] {
@@ -257,7 +260,7 @@ mod tests {
                 m[j * p + i] = v;
             }
         }
-        let got = rt.execute(name, &[b.clone(), m.clone()]).unwrap();
+        let got = rt.execute(name, &[b.as_slice(), m.as_slice()]).unwrap();
         assert_eq!(got.len(), n);
         for i in [0usize, 100, 255] {
             let mut want = 0.0f64;
@@ -284,9 +287,11 @@ mod tests {
         };
         let rt = Runtime::load_subset(&dir, &["predict_b1_d8_p64"]).unwrap();
         assert!(rt.execute("nope", &[]).is_err());
-        assert!(rt.execute("predict_b1_d8_p64", &[vec![0.0; 3]]).is_err());
-        let bad = vec![vec![0.0; 7], vec![0.0; 64 * 8], vec![0.0; 64]];
-        assert!(rt.execute("predict_b1_d8_p64", &bad).is_err());
+        let short = vec![0.0f32; 3];
+        assert!(rt.execute("predict_b1_d8_p64", &[short.as_slice()]).is_err());
+        let bad = vec![vec![0.0f32; 7], vec![0.0f32; 64 * 8], vec![0.0f32; 64]];
+        let bad_refs: Vec<&[f32]> = bad.iter().map(|v| v.as_slice()).collect();
+        assert!(rt.execute("predict_b1_d8_p64", &bad_refs).is_err());
     }
 
     #[test]

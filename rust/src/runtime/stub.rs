@@ -58,8 +58,10 @@ impl Runtime {
         &self.dir
     }
 
-    /// Always fails: nothing was loaded.
-    pub fn execute(&self, _name: &str, _inputs: &[Vec<f32>]) -> Result<Vec<f32>> {
+    /// Always fails: nothing was loaded. Inputs are borrowed slices so hot
+    /// loops can pass constant operands without cloning (API parity with
+    /// the real runtime).
+    pub fn execute(&self, _name: &str, _inputs: &[&[f32]]) -> Result<Vec<f32>> {
         Err(unavailable(&self.dir))
     }
 }

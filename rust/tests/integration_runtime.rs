@@ -31,7 +31,8 @@ fn every_manifest_artifact_loads_and_runs() {
                 (0..len).map(|_| rng.normal() as f32 * 0.5).collect()
             })
             .collect();
-        let out = rt.execute(&spec.name, &inputs).unwrap();
+        let input_refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let out = rt.execute(&spec.name, &input_refs).unwrap();
         assert!(!out.is_empty(), "{}: empty output", spec.name);
         assert!(
             out.iter().all(|v| v.is_finite()),
@@ -68,7 +69,7 @@ fn predict_artifacts_consistent_across_batch_sizes() {
         let mut xbatch = vec![0.0f32; b * d];
         xbatch[..d].copy_from_slice(&x1);
         let out = rt
-            .execute(&spec.name, &[xbatch, lm.clone(), v.clone()])
+            .execute(&spec.name, &[xbatch.as_slice(), lm.as_slice(), v.as_slice()])
             .unwrap();
         results.push(out[0]);
     }
@@ -99,7 +100,9 @@ fn leverage_artifact_agrees_with_rust_leverage_path() {
     let g = fastkrr::linalg::Mat::from_fn(p, p, |_, _| rng.normal() * 0.1);
     let m = fastkrr::linalg::syrk_at_a(&g);
     let rt = Runtime::load_subset(&dir, &[&spec.name]).unwrap();
-    let got = rt.execute(&spec.name, &[b.to_f32(), m.to_f32()]).unwrap();
+    let bf = b.to_f32();
+    let mf = m.to_f32();
+    let got = rt.execute(&spec.name, &[bf.as_slice(), mf.as_slice()]).unwrap();
     // Native: diag(B M Bᵀ).
     let bm = fastkrr::linalg::matmul(&b, &m);
     for i in 0..n_tile {

@@ -11,15 +11,20 @@
 //! Replay any failing case with `FASTKRR_PROP_SEED=<seed>`; deepen the soak
 //! with `FASTKRR_PROP_CASES=64` (the CI soak job does).
 
+use fastkrr::kernel::cache::KernelBlockCache;
 use fastkrr::kernel::Kernel;
 use fastkrr::leverage::approx_ridge_leverage;
 use fastkrr::linalg::{
-    matmul, matmul_a_bt, matmul_a_bt_serial, matmul_serial, solve_lower,
+    eigh, matmul, matmul_a_bt, matmul_a_bt_serial, matmul_serial, solve_lower,
     solve_lower_serial, solve_lower_transpose, solve_lower_transpose_serial, syrk_at_a,
     syrk_at_a_serial, Cholesky,
 };
+use fastkrr::nystrom::NystromFactor;
 use fastkrr::rng::Pcg64;
-use fastkrr::testing::{forall, gen_data, gen_dim, gen_kernel, gen_psd_rank, gen_spd};
+use fastkrr::sketch::draw_columns;
+use fastkrr::testing::{
+    forall, gen_data, gen_dim, gen_kernel, gen_psd_rank, gen_spd, gen_weights,
+};
 use std::sync::{Mutex, MutexGuard};
 
 const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
@@ -168,6 +173,89 @@ fn prop_rank_deficient_solves_stable_across_threads() {
                 );
             }
         }
+    });
+}
+
+#[test]
+fn prop_factor_blocks_and_b_match_serial_twins() {
+    // The sharded Nyström factor build (cached C_w assembly, direct
+    // symmetrized W, pooled B = C_w·fmap product) against the serial twins,
+    // across thread counts and duplicated-landmark sketches.
+    forall("parallel-factor-build-vs-serial", cases(), |rng, case| {
+        let n = gen_dim(rng, 6, 40);
+        let d = gen_dim(rng, 1, 4);
+        let p = gen_dim(rng, 2, n);
+        let x = gen_data(rng, n, d, 1.0);
+        let kernel = gen_kernel(rng);
+        let mut sketch = draw_columns(&kernel.diag(&x), p, rng).unwrap();
+        if case % 2 == 0 {
+            // Duplicated landmarks: W is singular — the pinv path's hard
+            // case, and a repeated entry in the cache's index multiset.
+            sketch.indices[1] = sketch.indices[0];
+            sketch.weights[1] = sketch.weights[0];
+        }
+        let (c_ser, w_ser, b_ser, fmap) = {
+            let _g = with_threads(1);
+            let (c_ser, w_ser) =
+                NystromFactor::blocks_serial(&kernel, &x, &sketch).unwrap();
+            let eig = eigh(&w_ser).unwrap();
+            let fmap = eig.pinv_sqrt(None);
+            let b_ser = matmul_serial(&c_ser, &fmap);
+            (c_ser, w_ser, b_ser, fmap)
+        };
+        let sc = 1.0 + c_ser.max_abs();
+        let sw = 1.0 + w_ser.max_abs();
+        let sb = 1.0 + b_ser.max_abs();
+        for &nt in &THREAD_COUNTS {
+            let _g = with_threads(nt);
+            let (c_par, w_par) = NystromFactor::blocks(&kernel, &x, &sketch).unwrap();
+            let d1 = c_par.sub(&c_ser).unwrap().max_abs();
+            assert!(d1 < TOL * sc, "C_w n={n} p={p} nt={nt} drift {d1:e}");
+            let d2 = w_par.sub(&w_ser).unwrap().max_abs();
+            assert!(d2 < TOL * sw, "W n={n} p={p} nt={nt} drift {d2:e}");
+            assert_eq!(w_par.asymmetry(), 0.0, "W must be exactly symmetric nt={nt}");
+            // Fixing fmap from the serial W isolates the sharded B product
+            // from eigh threshold flips near the pinv rank cutoff.
+            let b_par = matmul(&c_par, &fmap);
+            let d3 = b_par.sub(&b_ser).unwrap().max_abs();
+            assert!(d3 < TOL * sb, "B n={n} p={p} nt={nt} drift {d3:e}");
+        }
+    });
+}
+
+#[test]
+fn prop_kernel_block_cache_transparent() {
+    // The kernel-block cache must be invisible to callers: disabled, cold
+    // (miss), warm (hit), and permuted-multiset lookups all produce the
+    // exact same weighted block.
+    forall("kernel-block-cache-transparent", cases(), |rng, _case| {
+        let n = gen_dim(rng, 4, 32);
+        let d = gen_dim(rng, 1, 4);
+        let p = gen_dim(rng, 2, 8);
+        let x = gen_data(rng, n, d, 1.0);
+        let kernel = gen_kernel(rng);
+        let mut indices: Vec<usize> = (0..p).map(|_| gen_dim(rng, 1, n) - 1).collect();
+        indices[1] = indices[0]; // repeated landmark in the multiset
+        let weights = gen_weights(rng, p);
+        let off = KernelBlockCache::new(0);
+        let on = KernelBlockCache::new(64 * 1024 * 1024);
+        let direct = off.weighted_columns(&kernel, &x, &indices, &weights);
+        let miss = on.weighted_columns(&kernel, &x, &indices, &weights);
+        let hit = on.weighted_columns(&kernel, &x, &indices, &weights);
+        assert_eq!(miss.as_slice(), direct.as_slice(), "cold lookup != direct");
+        assert_eq!(hit.as_slice(), miss.as_slice(), "warm lookup != cold lookup");
+        // A permuted request of the same multiset must hit the same entry
+        // and still match its own direct computation bit-for-bit.
+        let mut rev_idx = indices.clone();
+        rev_idx.reverse();
+        let mut rev_w = weights.clone();
+        rev_w.reverse();
+        let rev_direct = off.weighted_columns(&kernel, &x, &rev_idx, &rev_w);
+        let rev_hit = on.weighted_columns(&kernel, &x, &rev_idx, &rev_w);
+        assert_eq!(rev_hit.as_slice(), rev_direct.as_slice(), "permuted hit differs");
+        assert_eq!(on.stats().misses.get(), 1, "one block, one miss");
+        assert_eq!(on.stats().hits.get(), 2);
+        assert!(on.stats().hit_rate() > 0.5);
     });
 }
 
