@@ -57,6 +57,41 @@ fn run_load(engine: &Engine, x: &Mat, clients: usize, reqs: usize) -> (f64, Dura
     (thr, p50, p99)
 }
 
+/// Like [`run_load`], but each request round-robins across `names` via
+/// registry-resolved dispatch (`names` empty = unnamed default-model path).
+fn run_load_named(
+    engine: &Engine,
+    x: &Mat,
+    clients: usize,
+    reqs: usize,
+    names: &[String],
+) -> (f64, Duration, Duration) {
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let x = &x;
+            let engine = &engine;
+            s.spawn(move || {
+                let mut rng = Pcg64::new(c as u64);
+                for r in 0..reqs {
+                    let i = rng.below(x.rows());
+                    let _ = if names.is_empty() {
+                        engine.predict(x.row(i)).unwrap()
+                    } else {
+                        let name = names[(c + r) % names.len()].as_str();
+                        engine.predict_model(Some(name), None, x.row(i)).unwrap()
+                    };
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed();
+    let thr = (clients * reqs) as f64 / wall.as_secs_f64();
+    let p50 = engine.stats().latency.percentile(50.0);
+    let p99 = engine.stats().latency.percentile(99.0);
+    (thr, p50, p99)
+}
+
 fn main() {
     let (x, sm) = model_at_artifact_shapes();
     let artifact_dir = fastkrr::runtime::default_artifact_dir();
@@ -144,6 +179,53 @@ fn main() {
             "  clients={clients:<3} {thr:>9.0} req/s   p50 {p50:?}  p99 {p99:?}  mean batch {:.1}",
             engine.stats().mean_batch_size()
         );
+        engine.shutdown();
+    }
+
+    // Multi-model dispatch: identical-shape models published under
+    // distinct names; clients round-robin named requests across them.
+    // The acceptance bar is registry resolution + per-version batch
+    // grouping costing < 5% p50 over the unnamed single-model path.
+    section("multi-model dispatch (native backend, 8 clients × 300 reqs)");
+    let mut baseline_p50 = Duration::ZERO;
+    for (label, n_models, named) in [
+        ("1 model, unnamed (baseline)", 1usize, false),
+        ("1 model, named", 1, true),
+        ("2 models, round-robin", 2, true),
+        ("4 models, round-robin", 4, true),
+    ] {
+        let registry = std::sync::Arc::new(fastkrr::registry::ModelRegistry::new());
+        let names: Vec<String> = (0..n_models).map(|k| format!("m{k}")).collect();
+        for name in &names {
+            registry.publish(name, sm.clone()).unwrap();
+        }
+        let engine = Engine::start_with_registry(
+            registry,
+            EngineConfig {
+                backend: Backend::Native,
+                batcher: BatcherConfig {
+                    max_wait: Duration::from_millis(1),
+                    ..Default::default()
+                },
+                workers: bench_workers,
+            },
+        )
+        .unwrap();
+        let sel = if named { names } else { Vec::new() };
+        let (thr, p50, p99) = run_load_named(&engine, &x, 8, 300, &sel);
+        if !named {
+            baseline_p50 = p50;
+            println!("  {label:<28} {thr:>9.0} req/s   p50 {p50:?}  p99 {p99:?}");
+        } else {
+            let overhead = if baseline_p50 > Duration::ZERO {
+                (p50.as_secs_f64() / baseline_p50.as_secs_f64() - 1.0) * 100.0
+            } else {
+                0.0
+            };
+            println!(
+                "  {label:<28} {thr:>9.0} req/s   p50 {p50:?}  p99 {p99:?}  (p50 {overhead:+.1}% vs baseline)"
+            );
+        }
         engine.shutdown();
     }
 

@@ -17,7 +17,9 @@ use std::collections::BTreeMap;
 pub struct Args {
     pub command: String,
     pub positional: Vec<String>,
-    flags: BTreeMap<String, String>,
+    /// Valued flags; a repeated flag (e.g. `--model a=1 --model b=2`)
+    /// appends, `flag()` reads the last value, `flag_all()` reads all.
+    flags: BTreeMap<String, Vec<String>>,
     switches: Vec<String>,
 }
 
@@ -48,7 +50,10 @@ impl Args {
                 // A value follows if it isn't another flag.
                 match it.peek() {
                     Some(next) if !next.starts_with("--") => {
-                        flags.insert(name.to_string(), it.next().unwrap());
+                        flags
+                            .entry(name.to_string())
+                            .or_insert_with(Vec::new)
+                            .push(it.next().unwrap());
                     }
                     _ => switches.push(name.to_string()),
                 }
@@ -59,8 +64,17 @@ impl Args {
         Ok(Self { command, positional, flags, switches })
     }
 
+    /// Last value of a flag (the conventional "later overrides earlier").
     pub fn flag(&self, name: &str) -> Option<&str> {
-        self.flags.get(name).map(|s| s.as_str())
+        self.flags
+            .get(name)
+            .and_then(|v| v.last())
+            .map(|s| s.as_str())
+    }
+
+    /// Every value of a repeatable flag, in command-line order.
+    pub fn flag_all(&self, name: &str) -> &[String] {
+        self.flags.get(name).map(|v| v.as_slice()).unwrap_or(&[])
     }
 
     pub fn has(&self, name: &str) -> bool {
@@ -125,10 +139,15 @@ COMMANDS:
                 --strategy uniform|diagk|exact|approx[:ov]  --seed S
                 [--config <toml>] [--two-pass] [--save <model.fkrr>]
   serve       start the prediction server
-                [--model <model.fkrr>]  (else trains a demo model)
+                [--model [name=]<model.fkrr>]...  (repeatable: multi-model
+                serving; bare paths get the name 'default'; else trains a
+                demo model)
+                [--default-model <name>]  (which model unnamed requests hit)
                 [--config <toml>] [--addr host:port] [--backend pjrt|native]
                 [--workers N]  (engine executor-pool size, default 1)
                 [--synth <name>] [--p P]
+                Running servers hot-swap via the load_model / set_default /
+                unload_model wire ops — no restart needed.
   predict     query a running server: --remote host:port --data <csv>
   leverage    print λ-ridge leverage scores
                 --synth <name> [--n N] --lambda λ [--approx] [--p P]
@@ -157,6 +176,17 @@ mod tests {
         assert!(a.has("two-pass"));
         assert!(!a.has("nope"));
         assert_eq!(a.positional, vec!["table1"]);
+    }
+
+    #[test]
+    fn repeated_flags_accumulate() {
+        let a = parse(&[
+            "serve", "--model", "a=/x.fkrr", "--model", "b=/y.fkrr", "--p", "8",
+        ]);
+        assert_eq!(a.flag_all("model"), &["a=/x.fkrr", "b=/y.fkrr"]);
+        assert_eq!(a.flag("model"), Some("b=/y.fkrr"), "flag() = last value");
+        assert_eq!(a.flag_all("p"), &["8"]);
+        assert!(a.flag_all("nope").is_empty());
     }
 
     #[test]

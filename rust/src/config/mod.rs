@@ -54,6 +54,12 @@ pub struct ServeConfig {
     /// Executor-pool size: how many engine workers serve batches in
     /// parallel (each owns its own backend instance).
     pub workers: usize,
+    /// Models to publish into the registry at startup, as
+    /// `(name, path)` pairs from `models = ["name=path", ...]`.
+    pub models: Vec<(String, String)>,
+    /// Which loaded model serves requests that don't name one
+    /// (`default_model = "name"`); defaults to the first of `models`.
+    pub default_model: Option<String>,
 }
 
 impl Default for ServeConfig {
@@ -65,6 +71,8 @@ impl Default for ServeConfig {
             backend: "pjrt".into(),
             artifact_dir: None,
             workers: 1,
+            models: Vec::new(),
+            default_model: None,
         }
     }
 }
@@ -137,6 +145,14 @@ impl AppConfig {
             if let Some(v) = s.get("workers") {
                 cfg.serve.workers = v.as_usize()?;
             }
+            if let Some(v) = s.get("models") {
+                for spec in v.as_str_array()? {
+                    cfg.serve.models.push(parse_model_spec(spec)?);
+                }
+            }
+            if let Some(v) = s.get("default_model") {
+                cfg.serve.default_model = Some(v.as_str()?.to_string());
+            }
         }
         cfg.validate()?;
         Ok(cfg)
@@ -161,7 +177,45 @@ impl AppConfig {
         if self.serve.workers > 256 {
             return Err(Error::invalid("serve.workers must be <= 256"));
         }
+        let mut names = std::collections::BTreeSet::new();
+        for (name, _) in &self.serve.models {
+            if !names.insert(name.as_str()) {
+                return Err(Error::invalid(format!(
+                    "serve.models lists model '{name}' more than once"
+                )));
+            }
+        }
+        if let Some(d) = &self.serve.default_model {
+            if !self.serve.models.is_empty() && !names.contains(d.as_str()) {
+                return Err(Error::invalid(format!(
+                    "serve.default_model '{d}' is not among serve.models"
+                )));
+            }
+        }
         Ok(())
+    }
+}
+
+/// Parse a `name=path` model spec (CLI `--model` and `serve.models` share
+/// this). A bare path with no `=` gets the name `default`.
+pub fn parse_model_spec(spec: &str) -> Result<(String, String)> {
+    match spec.split_once('=') {
+        Some((name, path)) => {
+            let (name, path) = (name.trim(), path.trim());
+            if name.is_empty() || path.is_empty() {
+                return Err(Error::invalid(format!(
+                    "bad model spec '{spec}': expected name=path"
+                )));
+            }
+            Ok((name.to_string(), path.to_string()))
+        }
+        None => {
+            let path = spec.trim();
+            if path.is_empty() {
+                return Err(Error::invalid("empty model spec"));
+            }
+            Ok(("default".to_string(), path.to_string()))
+        }
     }
 }
 
@@ -207,6 +261,50 @@ workers = 4
         assert_eq!(cfg.train.p, 64);
         assert_eq!(cfg.serve.backend, "pjrt");
         assert_eq!(cfg.serve.workers, 1);
+    }
+
+    #[test]
+    fn parses_serve_models() {
+        let cfg = AppConfig::parse(
+            "[serve]\nmodels = [\"a=/m/a.fkrr\", \"b=/m/b.fkrr\"]\n\
+             default_model = \"b\"\n",
+        )
+        .unwrap();
+        assert_eq!(
+            cfg.serve.models,
+            vec![
+                ("a".to_string(), "/m/a.fkrr".to_string()),
+                ("b".to_string(), "/m/b.fkrr".to_string())
+            ]
+        );
+        assert_eq!(cfg.serve.default_model.as_deref(), Some("b"));
+        // Bare path in the list gets the name "default".
+        let cfg = AppConfig::parse("[serve]\nmodels = [\"/m/only.fkrr\"]\n").unwrap();
+        assert_eq!(cfg.serve.models[0].0, "default");
+        // Duplicate names and dangling defaults are rejected.
+        assert!(AppConfig::parse(
+            "[serve]\nmodels = [\"a=/x.fkrr\", \"a=/y.fkrr\"]\n"
+        )
+        .is_err());
+        assert!(AppConfig::parse(
+            "[serve]\nmodels = [\"a=/x.fkrr\"]\ndefault_model = \"ghost\"\n"
+        )
+        .is_err());
+        assert!(AppConfig::parse("[serve]\nmodels = [\"=nope\"]\n").is_err());
+    }
+
+    #[test]
+    fn model_spec_forms() {
+        assert_eq!(
+            parse_model_spec("m=/a/b.fkrr").unwrap(),
+            ("m".to_string(), "/a/b.fkrr".to_string())
+        );
+        assert_eq!(
+            parse_model_spec("/a/b.fkrr").unwrap(),
+            ("default".to_string(), "/a/b.fkrr".to_string())
+        );
+        assert!(parse_model_spec("").is_err());
+        assert!(parse_model_spec("name=").is_err());
     }
 
     #[test]

@@ -1,4 +1,5 @@
-//! Minimal TOML-subset parser: sections, scalar values, numeric arrays.
+//! Minimal TOML-subset parser: sections, scalar values, numeric and
+//! string arrays.
 
 use crate::util::{Error, Result};
 use std::collections::BTreeMap;
@@ -10,6 +11,7 @@ pub enum TomlValue {
     Num(f64),
     Bool(bool),
     NumArray(Vec<f64>),
+    StrArray(Vec<String>),
 }
 
 impl TomlValue {
@@ -42,6 +44,12 @@ impl TomlValue {
         match self {
             TomlValue::NumArray(v) => Ok(v),
             _ => Err(Error::invalid("expected numeric array")),
+        }
+    }
+    pub fn as_str_array(&self) -> Result<&[String]> {
+        match self {
+            TomlValue::StrArray(v) => Ok(v),
+            _ => Err(Error::invalid("expected string array")),
         }
     }
 }
@@ -157,6 +165,9 @@ fn parse_value(t: &str) -> Result<TomlValue> {
         if inner.is_empty() {
             return Ok(TomlValue::NumArray(vec![]));
         }
+        if inner.starts_with('"') {
+            return parse_str_array(inner);
+        }
         let nums: Result<Vec<f64>> = inner
             .split(',')
             .map(|s| {
@@ -170,6 +181,39 @@ fn parse_value(t: &str) -> Result<TomlValue> {
     t.parse::<f64>()
         .map(TomlValue::Num)
         .map_err(|_| Error::invalid(format!("cannot parse value '{t}'")))
+}
+
+/// Parse the inside of a `["a", "b"]` array: commas split elements only
+/// outside quotes, so strings like `"name=path,with,commas"` stay whole.
+fn parse_str_array(inner: &str) -> Result<TomlValue> {
+    let mut items = Vec::new();
+    let mut elem = String::new();
+    let mut in_str = false;
+    for c in inner.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                elem.push(c);
+            }
+            ',' if !in_str => items.push(std::mem::take(&mut elem)),
+            _ => elem.push(c),
+        }
+    }
+    if in_str {
+        return Err(Error::invalid("unterminated string in array"));
+    }
+    items.push(elem);
+    let mut out = Vec::with_capacity(items.len());
+    for item in items {
+        let s = item.trim();
+        if s.len() < 2 || !s.starts_with('"') || !s.ends_with('"') {
+            return Err(Error::invalid(format!(
+                "bad string array element '{s}': expected a quoted string"
+            )));
+        }
+        out.push(s[1..s.len() - 1].to_string());
+    }
+    Ok(TomlValue::StrArray(out))
 }
 
 #[cfg(test)]
@@ -191,6 +235,32 @@ mod tests {
         assert!(doc.section("b").is_some());
         assert!(doc.section("c").is_none());
         assert_eq!(a.keys().count(), 4);
+    }
+
+    #[test]
+    fn parses_string_arrays() {
+        let doc = TomlDoc::parse(
+            "[s]\nmodels = [\"a=/m/a.fkrr\", \"b=/m/b.fkrr\"]\none = [\"x\"]\n\
+             tricky = [\"p=/with,comma\", \"q=#notcomment\"]\n",
+        )
+        .unwrap();
+        let s = doc.section("s").unwrap();
+        assert_eq!(
+            s.get("models").unwrap().as_str_array().unwrap(),
+            &["a=/m/a.fkrr".to_string(), "b=/m/b.fkrr".to_string()]
+        );
+        assert_eq!(s.get("one").unwrap().as_str_array().unwrap(), &["x".to_string()]);
+        assert_eq!(
+            s.get("tricky").unwrap().as_str_array().unwrap(),
+            &["p=/with,comma".to_string(), "q=#notcomment".to_string()]
+        );
+        // Type confusion errors both ways.
+        assert!(s.get("models").unwrap().as_num_array().is_err());
+        let doc2 = TomlDoc::parse("w = [1, 2]\n").unwrap();
+        assert!(doc2.root().get("w").unwrap().as_str_array().is_err());
+        // Malformed string arrays.
+        assert!(TomlDoc::parse("k = [\"a\", 2]\n").is_err());
+        assert!(TomlDoc::parse("k = [\"unterminated]\n").is_err());
     }
 
     #[test]

@@ -1,19 +1,32 @@
 //! The serving engine: an **executor pool** of N worker threads, each
 //! owning its own backend instance (the PJRT [`Runtime`] handles are not
-//! `Send`, and the native path clones the small `ServingModel`), draining
-//! per-worker bounded request queues through the dynamic [`Batcher`].
+//! `Send`), draining per-worker bounded request queues through the dynamic
+//! [`Batcher`] and resolving models through the shared
+//! [`ModelRegistry`](crate::registry::ModelRegistry).
 //!
 //! Request flow:
-//!   caller → `Engine::predict` → round-robin pick of a worker queue
-//!   (bounded mpsc; on a full queue the other workers are tried once) →
-//!   executor worker (collect up to `max_wait` / batch ladder) → PJRT
-//!   `predict_b*` artifact (or the native fallback) → per-request oneshot
-//!   reply.
+//!   caller → `Engine::predict[_model]` → registry resolve of
+//!   `(model_name, version)` to one immutable `Arc<ModelVersion>` →
+//!   round-robin pick of a worker queue (bounded mpsc; on a full queue the
+//!   other workers are tried once) → executor worker (collect up to
+//!   `max_wait` / batch ladder, then group the collected jobs by resolved
+//!   model version) → PJRT `predict_b*` artifact (or the native fallback)
+//!   per group → per-request oneshot reply.
+//!
+//! Multi-model serving: each job carries the `Arc<ModelVersion>` it
+//! resolved at enqueue time, so a hot-swap mid-flight can never mix
+//! coefficients from two versions into one prediction. The PJRT backend
+//! pins its compiled artifacts to the default model's (d, p, bandwidth) at
+//! startup; models matching those shapes execute on PJRT (with a small
+//! per-worker cache of f32 landmark/weight buffers keyed by
+//! (name, version)), and non-matching models fall back to the in-worker
+//! native path.
 //!
 //! Scaling: workers batch independently, so N workers execute N batches
 //! concurrently; stats ([`EngineStats`]) are shared atomics across the
-//! pool. Worker count comes from `EngineConfig::workers` (config key
-//! `serve.workers`, CLI `--workers`).
+//! pool, and per-model counters live in the registry entries. Worker count
+//! comes from `EngineConfig::workers` (config key `serve.workers`, CLI
+//! `--workers`).
 //!
 //! Backpressure: the aggregate queue bound is `queue_cap`, sharded as
 //! `ceil(queue_cap / workers)` per queue; when every queue is full,
@@ -24,6 +37,7 @@ use super::batcher::{Batcher, BatcherConfig};
 use super::ServingModel;
 use crate::linalg::Mat;
 use crate::metrics::{Counter, LatencyHistogram};
+use crate::registry::{ModelRegistry, ModelVersion};
 use crate::runtime::Runtime;
 use crate::util::{Error, Result};
 use std::path::PathBuf;
@@ -86,6 +100,10 @@ impl EngineStats {
 
 struct Job {
     x: Vec<f64>,
+    /// The model version this request resolved at enqueue time. The whole
+    /// prediction uses exactly these coefficients — a registry swap
+    /// mid-flight cannot mix versions.
+    mv: Arc<ModelVersion>,
     enqueued: Instant,
     reply: SyncSender<Result<f64>>,
 }
@@ -98,7 +116,7 @@ pub struct Engine {
     stats: Arc<EngineStats>,
     /// Requests served per worker — dispatch-balance observability.
     worker_requests: Arc<Vec<Counter>>,
-    dim: usize,
+    registry: Arc<ModelRegistry>,
     ready: Arc<AtomicBool>,
     n_workers: usize,
     /// Largest compiled batch size — sizes the `predict_many` submitter pool.
@@ -106,10 +124,25 @@ pub struct Engine {
 }
 
 impl Engine {
-    /// Start the engine. Fails fast (before returning) if any worker's
-    /// backend cannot initialize — e.g. missing artifacts or a
-    /// model/artifact shape mismatch.
+    /// Start a single-model engine: publishes `model` as the registry's
+    /// `"default"` entry and serves it. Kept for the common case and wire
+    /// compatibility; multi-model serving goes through
+    /// [`Engine::start_with_registry`].
     pub fn start(model: ServingModel, cfg: EngineConfig) -> Result<Self> {
+        let registry = Arc::new(ModelRegistry::new());
+        registry.publish("default", model)?;
+        Self::start_with_registry(registry, cfg)
+    }
+
+    /// Start the engine over a shared model registry. Fails fast (before
+    /// returning) if any worker's backend cannot initialize — e.g. missing
+    /// artifacts or a model/artifact shape mismatch. The PJRT backend pins
+    /// its artifacts to the registry's default model at start time, so a
+    /// default model must exist for `Backend::Pjrt`.
+    pub fn start_with_registry(
+        registry: Arc<ModelRegistry>,
+        cfg: EngineConfig,
+    ) -> Result<Self> {
         cfg.batcher.validate()?;
         let n_workers = cfg.workers.max(1);
         if n_workers > 256 {
@@ -117,9 +150,15 @@ impl Engine {
                 "workers {n_workers} exceeds the sanity cap of 256"
             )));
         }
+        if matches!(cfg.backend, Backend::Pjrt { .. }) && registry.default_name().is_none()
+        {
+            return Err(Error::invalid(
+                "PJRT backend needs a default model in the registry at start \
+                 (artifact shapes are pinned to it)",
+            ));
+        }
         let stats = Arc::new(EngineStats::default());
         let ready = Arc::new(AtomicBool::new(false));
-        let dim = model.d();
         let per_cap = cfg.batcher.queue_cap_per_worker(n_workers);
         let worker_requests: Arc<Vec<Counter>> =
             Arc::new((0..n_workers).map(|_| Counter::new()).collect());
@@ -131,12 +170,14 @@ impl Engine {
             senders.push(tx);
             let stats = stats.clone();
             let init_tx = init_tx.clone();
-            let model = model.clone();
+            let registry = registry.clone();
             let cfg = cfg.clone();
             let worker_requests = worker_requests.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("fastkrr-engine-{w}"))
-                .spawn(move || executor_main(model, cfg, rx, stats, worker_requests, w, init_tx))
+                .spawn(move || {
+                    executor_main(registry, cfg, rx, stats, worker_requests, w, init_tx)
+                })
                 .map_err(|e| Error::runtime(format!("spawn engine worker {w}: {e}")))?;
             workers.push(handle);
         }
@@ -172,20 +213,46 @@ impl Engine {
             next: AtomicUsize::new(0),
             stats,
             worker_requests,
-            dim,
+            registry,
             ready,
             n_workers,
             max_batch,
         })
     }
 
-    /// Predict a single point (blocks until the batch containing it runs).
+    /// The model registry this engine serves from. Publishing, swapping,
+    /// or unloading through this handle takes effect for new requests
+    /// without restarting the engine.
+    pub fn registry(&self) -> &Arc<ModelRegistry> {
+        &self.registry
+    }
+
+    /// Predict a single point against the default model.
     pub fn predict(&self, x: &[f64]) -> Result<f64> {
-        if x.len() != self.dim {
+        let mv = self.registry.resolve(None, None)?;
+        self.predict_resolved(&mv, x)
+    }
+
+    /// Predict a single point against `(name, version)`; `None` name means
+    /// the default model, `None` version the active version.
+    pub fn predict_model(
+        &self,
+        name: Option<&str>,
+        version: Option<u64>,
+        x: &[f64],
+    ) -> Result<f64> {
+        let mv = self.registry.resolve(name, version)?;
+        self.predict_resolved(&mv, x)
+    }
+
+    /// Predict against an already-resolved version snapshot (blocks until
+    /// the batch containing the request runs).
+    fn predict_resolved(&self, mv: &Arc<ModelVersion>, x: &[f64]) -> Result<f64> {
+        if x.len() != mv.model.d() {
             return Err(Error::invalid(format!(
                 "query dimension {} != model dimension {}",
                 x.len(),
-                self.dim
+                mv.model.d()
             )));
         }
         let n = self.senders.len();
@@ -193,7 +260,12 @@ impl Engine {
             return Err(Error::runtime("engine stopped"));
         }
         let (reply_tx, reply_rx) = sync_channel(1);
-        let mut job = Job { x: x.to_vec(), enqueued: Instant::now(), reply: reply_tx };
+        let mut job = Job {
+            x: x.to_vec(),
+            mv: mv.clone(),
+            enqueued: Instant::now(),
+            reply: reply_tx,
+        };
         // Round-robin dispatch; when the chosen worker's queue is full,
         // try the remaining workers once before reporting backpressure.
         let start = self.next.fetch_add(1, Ordering::Relaxed);
@@ -220,14 +292,35 @@ impl Engine {
         }
     }
 
-    /// Convenience: predict many points (submitted concurrently so the
-    /// batchers can coalesce them across the worker pool).
+    /// Convenience: predict many points against the default model
+    /// (submitted concurrently so the batchers can coalesce them across
+    /// the worker pool).
+    pub fn predict_many(&self, xs: &Mat) -> Vec<Result<f64>> {
+        self.predict_many_model(None, None, xs)
+    }
+
+    /// Predict many points against `(name, version)`. The model is
+    /// resolved **once** for the whole call, so every row is served by the
+    /// same version even if a hot-swap lands mid-batch.
     ///
     /// Rows are fed through a **bounded** pool of submitter threads — enough
     /// in-flight requests to fill every worker's largest batch, capped at
     /// 256 — instead of one OS thread per row, which collapsed at large
     /// `xs`. Results come back in row order regardless of completion order.
-    pub fn predict_many(&self, xs: &Mat) -> Vec<Result<f64>> {
+    pub fn predict_many_model(
+        &self,
+        name: Option<&str>,
+        version: Option<u64>,
+        xs: &Mat,
+    ) -> Vec<Result<f64>> {
+        let mv = match self.registry.resolve(name, version) {
+            Ok(mv) => mv,
+            Err(e) => {
+                return (0..xs.rows())
+                    .map(|_| Err(Error::invalid(e.to_string())))
+                    .collect()
+            }
+        };
         let n = xs.rows();
         let submitters = (self.n_workers.saturating_mul(self.max_batch))
             .clamp(1, 256)
@@ -236,6 +329,7 @@ impl Engine {
         let mut out: Vec<Option<Result<f64>>> = (0..n).map(|_| None).collect();
         std::thread::scope(|s| {
             let counter = &counter;
+            let mv = &mv;
             let handles: Vec<_> = (0..submitters)
                 .map(|_| {
                     s.spawn(move || {
@@ -245,7 +339,7 @@ impl Engine {
                             if i >= n {
                                 break;
                             }
-                            local.push((i, self.predict(xs.row(i))));
+                            local.push((i, self.predict_resolved(mv, xs.row(i))));
                         }
                         local
                     })
@@ -310,21 +404,26 @@ impl Drop for Engine {
     }
 }
 
+/// Per-worker cap on cached f32 landmark/weight buffers for the PJRT path.
+const PJRT_F32_CACHE_CAP: usize = 8;
+
 enum ExecBackend {
     Pjrt {
         rt: Runtime,
         /// artifact name per compiled batch size, ascending.
         names: Vec<(usize, String)>,
-        landmarks_f32: Vec<f32>,
-        v_f32: Vec<f32>,
+        /// The (d, p, bandwidth) the loaded artifacts were compiled for.
+        shape: (usize, usize, f64),
+        /// f32 landmark/weight buffers per served version — rebuilding
+        /// them per batch would put two O(p·d) conversions on the hot
+        /// loop. Keyed by (name, version); tiny, linear-scanned.
+        f32_cache: Vec<((String, u64), (Vec<f32>, Vec<f32>))>,
     },
-    Native {
-        model: ServingModel,
-    },
+    Native,
 }
 
 fn executor_main(
-    model: ServingModel,
+    registry: Arc<ModelRegistry>,
     cfg: EngineConfig,
     rx: Receiver<Job>,
     stats: Arc<EngineStats>,
@@ -333,7 +432,7 @@ fn executor_main(
     init_tx: SyncSender<Result<()>>,
 ) {
     // ---- backend init (inside the thread: PJRT handles are !Send) -------
-    let (backend, batcher) = match init_backend(&model, &cfg) {
+    let (mut backend, batcher) = match init_backend(&registry, &cfg) {
         Ok(pair) => {
             let _ = init_tx.send(Ok(()));
             pair
@@ -343,7 +442,6 @@ fn executor_main(
             return;
         }
     };
-    let dim = model.d();
     // ---- batch loop ------------------------------------------------------
     loop {
         // Block for the first job of the next batch.
@@ -364,51 +462,87 @@ fn executor_main(
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
-        let plan = batcher.plan(jobs.len()).expect("non-empty");
-        debug_assert_eq!(plan.real, jobs.len());
-        // Flatten to f32 row-major.
-        let mut flat = Vec::with_capacity(jobs.len() * dim);
-        for j in &jobs {
-            flat.extend(j.x.iter().map(|&v| v as f32));
-        }
-        let padded = Batcher::pad_batch(&flat, plan.real, plan.compiled, dim);
-        let result = run_batch(&backend, plan.compiled, &padded, dim);
-        stats.batches.inc();
-        stats.requests.add(plan.real as u64);
-        stats.padded_slots.add((plan.compiled - plan.real) as u64);
-        worker_requests[widx].add(plan.real as u64);
-        match result {
-            Ok(ys) => {
-                for (i, job) in jobs.into_iter().enumerate() {
-                    stats.latency.record(job.enqueued.elapsed());
-                    let _ = job.reply.send(Ok(ys[i] as f64));
-                }
+        // Group the collected jobs by resolved model version (identity of
+        // the Arc — two requests naming the same version share a group) and
+        // execute one batch per group. Single-model serving degenerates to
+        // exactly the old one-batch path.
+        let mut groups: Vec<(Arc<ModelVersion>, Vec<Job>)> = Vec::new();
+        for job in jobs {
+            match groups.iter_mut().find(|(mv, _)| Arc::ptr_eq(mv, &job.mv)) {
+                Some((_, g)) => g.push(job),
+                None => groups.push((job.mv.clone(), vec![job])),
             }
-            Err(e) => {
-                stats.errors.inc();
-                for job in jobs {
-                    // Failed requests still count toward latency — error
-                    // paths must not make the histogram lie about tail time.
-                    stats.latency.record(job.enqueued.elapsed());
-                    let _ = job
-                        .reply
-                        .send(Err(Error::runtime(format!("batch failed: {e}"))));
-                }
+        }
+        for (mv, group) in groups {
+            run_group(&mut backend, &batcher, &mv, group, &stats, &worker_requests, widx);
+        }
+    }
+}
+
+/// Execute one same-version group of jobs as a single padded batch.
+fn run_group(
+    backend: &mut ExecBackend,
+    batcher: &Batcher,
+    mv: &Arc<ModelVersion>,
+    jobs: Vec<Job>,
+    stats: &EngineStats,
+    worker_requests: &[Counter],
+    widx: usize,
+) {
+    let dim = mv.model.d();
+    let plan = batcher.plan(jobs.len()).expect("non-empty");
+    debug_assert_eq!(plan.real, jobs.len());
+    // Flatten to f32 row-major.
+    let mut flat = Vec::with_capacity(jobs.len() * dim);
+    for j in &jobs {
+        flat.extend(j.x.iter().map(|&v| v as f32));
+    }
+    let padded = Batcher::pad_batch(&flat, plan.real, plan.compiled, dim);
+    let result = run_batch(backend, mv, plan.compiled, &padded, dim);
+    stats.batches.inc();
+    stats.requests.add(plan.real as u64);
+    stats.padded_slots.add((plan.compiled - plan.real) as u64);
+    worker_requests[widx].add(plan.real as u64);
+    mv.stats.requests.add(plan.real as u64);
+    match result {
+        Ok(ys) => {
+            for (i, job) in jobs.into_iter().enumerate() {
+                let elapsed = job.enqueued.elapsed();
+                stats.latency.record(elapsed);
+                mv.stats.latency.record(elapsed);
+                let _ = job.reply.send(Ok(ys[i] as f64));
+            }
+        }
+        Err(e) => {
+            stats.errors.inc();
+            mv.stats.errors.inc();
+            for job in jobs {
+                // Failed requests still count toward latency — error
+                // paths must not make the histogram lie about tail time.
+                let elapsed = job.enqueued.elapsed();
+                stats.latency.record(elapsed);
+                mv.stats.latency.record(elapsed);
+                let _ = job
+                    .reply
+                    .send(Err(Error::runtime(format!("batch failed: {e}"))));
             }
         }
     }
 }
 
 fn init_backend(
-    model: &ServingModel,
+    registry: &ModelRegistry,
     cfg: &EngineConfig,
 ) -> Result<(ExecBackend, Batcher)> {
     match &cfg.backend {
         Backend::Native => {
             let batcher = Batcher::new(&cfg.batcher)?;
-            Ok((ExecBackend::Native { model: model.clone() }, batcher))
+            Ok((ExecBackend::Native, batcher))
         }
         Backend::Pjrt { artifact_dir } => {
+            // Artifact shapes are pinned to the default model at start.
+            let mv = registry.resolve(None, None)?;
+            let model = &mv.model;
             let manifest =
                 crate::runtime::Manifest::load(&artifact_dir.join("manifest.json"))?;
             // Pick the predict artifacts matching the model's (d, p, bw).
@@ -443,8 +577,8 @@ fn init_backend(
                 ExecBackend::Pjrt {
                     rt,
                     names,
-                    landmarks_f32: model.landmarks.to_f32(),
-                    v_f32: model.v.iter().map(|&x| x as f32).collect(),
+                    shape: (model.d(), model.p(), model.bandwidth),
+                    f32_cache: Vec::new(),
                 },
                 batcher,
             ))
@@ -453,18 +587,45 @@ fn init_backend(
 }
 
 fn run_batch(
-    backend: &ExecBackend,
+    backend: &mut ExecBackend,
+    mv: &ModelVersion,
     compiled: usize,
     padded: &[f32],
     dim: usize,
 ) -> Result<Vec<f32>> {
+    let native = |model: &ServingModel| -> Result<Vec<f32>> {
+        let rows = padded.len() / dim;
+        let x = Mat::from_f32(rows, dim, padded)?;
+        Ok(model.predict_native(&x).iter().map(|&v| v as f32).collect())
+    };
     match backend {
-        ExecBackend::Native { model } => {
-            let rows = padded.len() / dim;
-            let x = Mat::from_f32(rows, dim, padded)?;
-            Ok(model.predict_native(&x).iter().map(|&v| v as f32).collect())
-        }
-        ExecBackend::Pjrt { rt, names, landmarks_f32, v_f32 } => {
+        ExecBackend::Native => native(&mv.model),
+        ExecBackend::Pjrt { rt, names, shape, f32_cache } => {
+            let model = &mv.model;
+            if *shape != (model.d(), model.p(), model.bandwidth) {
+                // This version's shapes don't match the compiled artifacts
+                // (e.g. a differently-sized model published after start):
+                // serve it on the in-worker native path instead of failing.
+                return native(model);
+            }
+            let key = (mv.name().to_string(), mv.version());
+            if !f32_cache.iter().any(|(k, _)| *k == key) {
+                if f32_cache.len() >= PJRT_F32_CACHE_CAP {
+                    f32_cache.remove(0);
+                }
+                f32_cache.push((
+                    key.clone(),
+                    (
+                        model.landmarks.to_f32(),
+                        model.v.iter().map(|&x| x as f32).collect(),
+                    ),
+                ));
+            }
+            let (landmarks_f32, v_f32) = &f32_cache
+                .iter()
+                .find(|(k, _)| *k == key)
+                .expect("just inserted")
+                .1;
             let name = names
                 .iter()
                 .find(|(b, _)| *b == compiled)
@@ -605,6 +766,86 @@ mod tests {
     }
 
     #[test]
+    fn multi_model_engine_routes_by_name() {
+        let (x, sm_a) = serving_model(60, 8, 16);
+        let (_, sm_b) = serving_model(60, 8, 12);
+        let want_a = sm_a.predict_native(&x);
+        let want_b = sm_b.predict_native(&x);
+        let registry = Arc::new(ModelRegistry::new());
+        registry.publish("a", sm_a).unwrap();
+        registry.publish("b", sm_b).unwrap();
+        let engine = Engine::start_with_registry(registry, native_cfg(2)).unwrap();
+        for i in 0..8 {
+            let ya = engine.predict_model(Some("a"), None, x.row(i)).unwrap();
+            let yb = engine.predict_model(Some("b"), None, x.row(i)).unwrap();
+            assert!((ya - want_a[i]).abs() < 1e-5, "i={i}");
+            assert!((yb - want_b[i]).abs() < 1e-5, "i={i}");
+            // Default is the first-published model.
+            let yd = engine.predict(x.row(i)).unwrap();
+            assert!((yd - want_a[i]).abs() < 1e-5, "i={i}");
+        }
+        // Per-model stats recorded against the right entry.
+        let infos = engine.registry().list();
+        let a = infos.iter().find(|m| m.name == "a").unwrap();
+        let b = infos.iter().find(|m| m.name == "b").unwrap();
+        assert_eq!(a.requests, 16, "a serves predicts + defaults");
+        assert_eq!(b.requests, 8);
+        assert!(engine.predict_model(Some("nope"), None, x.row(0)).is_err());
+        engine.shutdown();
+    }
+
+    #[test]
+    fn hot_swap_takes_effect_without_restart() {
+        let (x, sm1) = serving_model(40, 8, 16);
+        let (_, sm2) = serving_model(40, 8, 12);
+        let want1 = sm1.predict_native(&x);
+        let want2 = sm2.predict_native(&x);
+        let engine = Engine::start(sm1, native_cfg(2)).unwrap();
+        let y = engine.predict(x.row(0)).unwrap();
+        assert!((y - want1[0]).abs() < 1e-5);
+        let v2 = engine.registry().publish("default", sm2).unwrap();
+        assert_eq!(v2, 2);
+        let y = engine.predict(x.row(0)).unwrap();
+        assert!((y - want2[0]).abs() < 1e-5, "swap must take effect");
+        // The retained old version is still individually addressable.
+        let y = engine.predict_model(None, Some(1), x.row(0)).unwrap();
+        assert!((y - want1[0]).abs() < 1e-5, "pinned old version");
+        engine.shutdown();
+    }
+
+    #[test]
+    fn predict_many_pins_one_version_across_rows() {
+        let (x, sm1) = serving_model(200, 8, 16);
+        let want1 = sm1.predict_native(&x);
+        let engine = Engine::start(sm1, native_cfg(2)).unwrap();
+        let registry = engine.registry().clone();
+        // Swap concurrently with a large predict_many; every row must come
+        // from one version (resolve happens once per call). The swapper
+        // waits for the first served request, which can only happen after
+        // predict_many resolved its version snapshot.
+        let (got, _) = std::thread::scope(|s| {
+            let stats = engine.stats();
+            let h = s.spawn(|| engine.predict_many(&x));
+            let hs = s.spawn(move || {
+                while stats.requests.get() == 0 {
+                    std::thread::yield_now();
+                }
+                let (_, sm2) = serving_model(40, 8, 12);
+                registry.publish("default", sm2).unwrap()
+            });
+            (h.join().unwrap(), hs.join().unwrap())
+        });
+        for (i, r) in got.iter().enumerate() {
+            let v = r.as_ref().unwrap();
+            assert!(
+                (v - want1[i]).abs() < 1e-5,
+                "i={i}: row served by a different version mid-call"
+            );
+        }
+        engine.shutdown();
+    }
+
+    #[test]
     fn pjrt_backend_fails_fast_on_shape_mismatch() {
         // Model p=16 ≠ artifact p=64 → start must error, not hang — for a
         // multi-worker pool too (every worker joins before the error).
@@ -652,6 +893,35 @@ mod tests {
                 "i={i}: pjrt {v} vs native {}",
                 want[i]
             );
+        }
+        engine.shutdown();
+    }
+
+    #[test]
+    fn pjrt_serves_shape_mismatched_second_model_natively() {
+        let dir = crate::runtime::default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: no artifacts");
+            return;
+        }
+        let (x, sm) = serving_model(120, 8, 64);
+        let (_, other) = serving_model(60, 8, 16); // p=16: no artifact
+        let want = other.predict_native(&x);
+        let registry = Arc::new(ModelRegistry::new());
+        registry.publish("default", sm).unwrap();
+        registry.publish("small", other).unwrap();
+        let engine = Engine::start_with_registry(
+            registry,
+            EngineConfig {
+                backend: Backend::Pjrt { artifact_dir: dir },
+                batcher: BatcherConfig::default(),
+                workers: 2,
+            },
+        )
+        .unwrap();
+        for i in 0..8 {
+            let y = engine.predict_model(Some("small"), None, x.row(i)).unwrap();
+            assert!((y - want[i]).abs() < 1e-3, "i={i}");
         }
         engine.shutdown();
     }

@@ -9,6 +9,10 @@
 //! native fallback, batching concurrent prediction requests onto the
 //! fixed-shape AOT artifacts behind round-robin dispatch with shared
 //! stats and sharded backpressure (Python never runs at request time).
+//! Models reach the engine through the versioned
+//! [`registry`](crate::registry) — workers resolve `(model_name, version)`
+//! per request, so λ-sweep variants and D&C ensemble members can be
+//! loaded, compared, promoted, and retired with zero downtime.
 
 pub mod batcher;
 pub mod engine;

@@ -60,29 +60,48 @@ pub fn to_bytes(model: &ServingModel) -> Vec<u8> {
 
 /// Deserialize a ServingModel, validating magic/version/shape/CRC.
 pub fn from_bytes(data: &[u8]) -> Result<ServingModel> {
-    if data.len() < 4 + 4 + 16 + 8 + 8 {
-        return Err(Error::invalid("model file truncated"));
+    let min_len = 4 + 4 + 16 + 8 + 8;
+    if data.len() < min_len {
+        return Err(Error::invalid(format!(
+            "model file truncated: expected at least {min_len} bytes, found {}",
+            data.len()
+        )));
     }
     let (body, crc_bytes) = data.split_at(data.len() - 8);
     let stored = u64::from_le_bytes(crc_bytes.try_into().unwrap());
-    if crc64(body) != stored {
-        return Err(Error::invalid("model file checksum mismatch"));
+    let computed = crc64(body);
+    if computed != stored {
+        return Err(Error::invalid(format!(
+            "model file checksum mismatch: expected {stored:#018x} (stored), \
+             computed {computed:#018x} — file is corrupt"
+        )));
     }
     let mut off = 0usize;
     let take = |off: &mut usize, n: usize| -> Result<&[u8]> {
         if *off + n > body.len() {
-            return Err(Error::invalid("model file truncated"));
+            return Err(Error::invalid(format!(
+                "model file truncated: expected {n} bytes at offset {off}, \
+                 only {} remain",
+                body.len() - *off
+            )));
         }
         let s = &body[*off..*off + n];
         *off += n;
         Ok(s)
     };
-    if take(&mut off, 4)? != MAGIC {
-        return Err(Error::invalid("not a fastkrr model file"));
+    let magic = take(&mut off, 4)?;
+    if magic != MAGIC {
+        return Err(Error::invalid(format!(
+            "not a fastkrr model file: expected magic {:?}, found {:?}",
+            String::from_utf8_lossy(MAGIC),
+            String::from_utf8_lossy(magic)
+        )));
     }
     let version = u32::from_le_bytes(take(&mut off, 4)?.try_into().unwrap());
     if version != VERSION {
-        return Err(Error::invalid(format!("unsupported model version {version}")));
+        return Err(Error::invalid(format!(
+            "unsupported model format version: expected {VERSION}, found {version}"
+        )));
     }
     let p = u64::from_le_bytes(take(&mut off, 8)?.try_into().unwrap()) as usize;
     let d = u64::from_le_bytes(take(&mut off, 8)?.try_into().unwrap()) as usize;
@@ -100,12 +119,17 @@ pub fn from_bytes(data: &[u8]) -> Result<ServingModel> {
             .map(|c| f64::from_le_bytes(c.try_into().unwrap()))
             .collect())
     };
+    let expected_body = off + (p * d + p) * 8;
+    if body.len() != expected_body {
+        return Err(Error::invalid(format!(
+            "model payload size mismatch for p={p} d={d}: expected \
+             {expected_body} bytes before the checksum, found {}",
+            body.len()
+        )));
+    }
     let mut off2 = off;
     let lm = read_f64s(&mut off2, p * d)?;
     let v = read_f64s(&mut off2, p)?;
-    if off2 != body.len() {
-        return Err(Error::invalid("model file has trailing bytes"));
-    }
     if lm.iter().chain(v.iter()).any(|x| !x.is_finite()) {
         return Err(Error::invalid("non-finite values in model file"));
     }
@@ -125,13 +149,15 @@ pub fn save(model: &ServingModel, path: &Path) -> Result<()> {
     Ok(())
 }
 
-/// Load from a file.
+/// Load from a file. Decode failures name the offending path.
 pub fn load(path: &Path) -> Result<ServingModel> {
     let mut f = std::fs::File::open(path)
         .map_err(|e| Error::io(format!("open {}: {e}", path.display())))?;
     let mut buf = Vec::new();
-    f.read_to_end(&mut buf).map_err(|e| Error::io(e.to_string()))?;
+    f.read_to_end(&mut buf)
+        .map_err(|e| Error::io(format!("read {}: {e}", path.display())))?;
     from_bytes(&buf)
+        .map_err(|e| Error::invalid(format!("{}: {}", path.display(), e.message())))
 }
 
 #[cfg(test)]
@@ -173,20 +199,62 @@ mod tests {
     }
 
     #[test]
-    fn corruption_detected() {
+    fn corruption_detected_with_expected_vs_found() {
         let m = model(8, 3, 4);
+        // Flipped payload byte → checksum mismatch naming both CRCs.
         let mut bytes = to_bytes(&m);
-        // Flip a payload byte.
         let mid = bytes.len() / 2;
         bytes[mid] ^= 0xFF;
-        assert!(from_bytes(&bytes).is_err());
-        // Truncation.
+        let err = from_bytes(&bytes).unwrap_err().to_string();
+        assert!(
+            err.contains("checksum mismatch")
+                && err.contains("expected 0x")
+                && err.contains("computed 0x"),
+            "uninformative CRC error: {err}"
+        );
+        // Mid-payload truncation corrupts the CRC window → CRC error; a
+        // below-header truncation reports expected vs found byte counts.
         let m2 = to_bytes(&m);
         assert!(from_bytes(&m2[..m2.len() - 3]).is_err());
-        // Bad magic.
+        let err = from_bytes(&m2[..20]).unwrap_err().to_string();
+        assert!(
+            err.contains("expected at least") && err.contains("found 20"),
+            "uninformative truncation error: {err}"
+        );
+        // Bad magic names the expected and found magic (CRC recomputed so
+        // only the magic check can fire).
         let mut m3 = to_bytes(&m);
         m3[0] = b'X';
-        assert!(from_bytes(&m3).is_err());
+        let len = m3.len();
+        let crc = crc64(&m3[..len - 8]);
+        m3[len - 8..].copy_from_slice(&crc.to_le_bytes());
+        let err = from_bytes(&m3).unwrap_err().to_string();
+        assert!(
+            err.contains("FKRR") && err.contains("XKRR"),
+            "uninformative magic error: {err}"
+        );
+        // Unsupported version states expected vs found.
+        let mut m4 = to_bytes(&m);
+        m4[4..8].copy_from_slice(&99u32.to_le_bytes());
+        let len = m4.len();
+        let crc = crc64(&m4[..len - 8]);
+        m4[len - 8..].copy_from_slice(&crc.to_le_bytes());
+        let err = from_bytes(&m4).unwrap_err().to_string();
+        assert!(
+            err.contains("expected 1") && err.contains("found 99"),
+            "uninformative version error: {err}"
+        );
+        // Payload length that disagrees with the (p, d) header.
+        let mut m5 = to_bytes(&m);
+        let len = m5.len();
+        m5.truncate(len - 16); // drop one f64 + make room to re-append CRC
+        let crc = crc64(&m5);
+        m5.extend_from_slice(&crc.to_le_bytes());
+        let err = from_bytes(&m5).unwrap_err().to_string();
+        assert!(
+            err.contains("p=8 d=3") && err.contains("expected"),
+            "uninformative shape error: {err}"
+        );
         // Empty.
         assert!(from_bytes(&[]).is_err());
     }
@@ -194,5 +262,18 @@ mod tests {
     #[test]
     fn load_missing_file_errors() {
         assert!(load(Path::new("/nonexistent/m.fkrr")).is_err());
+    }
+
+    #[test]
+    fn load_decode_error_names_the_path() {
+        let path =
+            std::env::temp_dir().join(format!("fkrr_bad_{}.fkrr", std::process::id()));
+        std::fs::write(&path, b"definitely not a model").unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(
+            err.contains("fkrr_bad_"),
+            "decode error must include the path: {err}"
+        );
+        std::fs::remove_file(&path).ok();
     }
 }

@@ -43,6 +43,17 @@
 //!   request queue (`ceil(queue_cap / workers)`), fed by round-robin
 //!   dispatch that falls over to sibling queues before reporting
 //!   backpressure; stats are shared atomics.
+//! - **Model registry** ([`registry`]) — a versioned, named store of
+//!   [`coordinator::ServingModel`]s with epoch-style atomic publication:
+//!   the whole registry state is one immutable snapshot behind an `Arc`,
+//!   readers resolve `(model_name, version)` against a frozen view, and
+//!   writers validate → warm up → swap → retire (rollback when a
+//!   candidate's probe predictions fail its self-check). Every engine
+//!   request carries the `Arc<ModelVersion>` it resolved at enqueue time,
+//!   so hot-swaps can never mix two versions' coefficients in one
+//!   prediction; the server's `load_model` / `list_models` /
+//!   `set_default` / `unload_model` ops drive it over the wire, and
+//!   per-model request/latency counters surface in `stats`.
 //! - **Kernel-block cache** ([`kernel::cache`]) — a process-wide bounded
 //!   LRU of weighted Nyström column blocks `K[:, I]·diag(w)`, keyed by
 //!   (kernel `cache_key`, data fingerprint, **sorted** landmark multiset)
@@ -73,6 +84,7 @@ pub mod leverage;
 pub mod linalg;
 pub mod metrics;
 pub mod nystrom;
+pub mod registry;
 pub mod rng;
 pub mod runtime;
 pub mod server;

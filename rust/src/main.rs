@@ -148,11 +148,41 @@ fn cmd_train(args: &Args) -> Result<()> {
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let cfg = load_config(args)?;
-    // Serve a saved model directly when --model is given.
-    if let Some(path) = args.flag("model") {
-        let sm = fastkrr::coordinator::model_io::load(Path::new(path))?;
-        println!("loaded model from {path} (p={}, d={})", sm.p(), sm.d());
-        return serve_model(args, &cfg, sm, "loaded-model");
+    let registry = std::sync::Arc::new(fastkrr::registry::ModelRegistry::new());
+    // Model specs: config `serve.models` first, then repeatable
+    // `--model [name=]path` flags (a CLI spec replaces a config spec of
+    // the same name).
+    let mut specs: Vec<(String, String)> = cfg.serve.models.clone();
+    for raw in args.flag_all("model") {
+        let (name, path) = fastkrr::config::parse_model_spec(raw)?;
+        match specs.iter_mut().find(|(n, _)| *n == name) {
+            Some(slot) => slot.1 = path,
+            None => specs.push((name, path)),
+        }
+    }
+    if !specs.is_empty() {
+        for (name, path) in &specs {
+            let version = registry.load_file(name, Path::new(path))?;
+            let mv = registry.resolve(Some(name), Some(version))?;
+            println!(
+                "loaded model '{name}' v{version} from {path} (p={}, d={})",
+                mv.model.p(),
+                mv.model.d()
+            );
+        }
+        if let Some(d) = args
+            .flag("default-model")
+            .map(str::to_string)
+            .or_else(|| cfg.serve.default_model.clone())
+        {
+            registry.set_default(&d)?;
+        }
+        let source = if specs.len() == 1 {
+            format!("model '{}'", specs[0].0)
+        } else {
+            format!("{} models", specs.len())
+        };
+        return serve_registry(args, &cfg, registry, &source);
     }
     // Otherwise train a demo model. Default matches the compiled artifacts:
     // d=8, p=64, rbf bw=1.0.
@@ -180,14 +210,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let model = NystromKrr::fit(&ds.x, &ds.y, KernelKind::Rbf { bandwidth: 1.0 }, &ncfg)?;
     let sm = ServingModel::from_nystrom(&model)?;
-    serve_model(args, &cfg, sm, &ds.name)
+    registry.publish("default", sm)?;
+    let source = format!("demo model ({})", ds.name);
+    serve_registry(args, &cfg, registry, &source)
 }
 
-/// Start the engine + server around a ready ServingModel and block.
-fn serve_model(
+/// Start the engine + server around a populated model registry and block.
+fn serve_registry(
     args: &Args,
     cfg: &AppConfig,
-    sm: ServingModel,
+    registry: std::sync::Arc<fastkrr::registry::ModelRegistry>,
     source: &str,
 ) -> Result<()> {
     let backend_name = args.flag("backend").unwrap_or(&cfg.serve.backend).to_string();
@@ -207,7 +239,10 @@ fn serve_model(
             )))
         }
     };
-    let (p, d) = (sm.p(), sm.d());
+    let default_mv = registry.resolve(None, None)?;
+    let (p, d) = (default_mv.model.p(), default_mv.model.d());
+    let default_name = default_mv.name().to_string();
+    drop(default_mv);
     // Same bounds the config-file path enforces in AppConfig::validate.
     let workers = args.flag_usize("workers")?.unwrap_or(cfg.serve.workers);
     if workers == 0 || workers > 256 {
@@ -215,8 +250,9 @@ fn serve_model(
             "--workers must be in [1, 256]",
         ));
     }
-    let engine = Engine::start(
-        sm,
+    let n_models = registry.len();
+    let engine = Engine::start_with_registry(
+        registry,
         EngineConfig {
             backend,
             batcher: BatcherConfig {
@@ -230,7 +266,8 @@ fn serve_model(
     let addr = args.flag("addr").unwrap_or(&cfg.serve.addr).to_string();
     let server = Server::start(&addr, engine)?;
     println!(
-        "serving {source} (d={d}, p={p}) on {} [backend={backend_name}, workers={workers}] — Ctrl-C to stop",
+        "serving {source} ({n_models} loaded, default '{default_name}': d={d}, p={p}) on {} \
+         [backend={backend_name}, workers={workers}] — Ctrl-C to stop",
         server.addr(),
     );
     // Block forever (demo server; Ctrl-C terminates the process).

@@ -1,0 +1,500 @@
+//! Versioned model registry with atomic hot-swap.
+//!
+//! A named store of [`ServingModel`]s, each name holding a small window of
+//! numbered versions, built for zero-downtime serving:
+//!
+//! - **Epoch-style publication.** The whole registry state lives in one
+//!   immutable [`Snapshot`] behind an `Arc`; readers grab the current `Arc`
+//!   (a pointer clone under a briefly-held read lock) and resolve against
+//!   that frozen view, so a concurrent publish can never present a
+//!   half-updated registry. Writers build a new snapshot copy-on-write
+//!   (version handles are `Arc`s, so the copy is cheap) and swap the `Arc`
+//!   in one store.
+//! - **Validate → warm up → swap → retire.** [`ModelRegistry::publish`]
+//!   runs the candidate model on a deterministic probe batch *before*
+//!   touching the snapshot: the first pass warms the predict path and must
+//!   produce finite values; a second pass must reproduce the first
+//!   bit-for-bit (the model's *self-check*). A candidate that fails either
+//!   check — or that changes the feature dimension clients are already
+//!   sending — is rejected and the previous version keeps serving
+//!   (rollback is "the swap never happens"). Only after the checks pass is
+//!   the new version made active; versions older than the retention window
+//!   are retired from the snapshot and freed once in-flight requests drop
+//!   their `Arc`s.
+//! - **No torn reads.** A prediction resolves `(name, version)` to one
+//!   `Arc<ModelVersion>` up front and uses exactly that version's
+//!   landmarks *and* weights; a swap mid-request retires the old version
+//!   from the registry but cannot mix its coefficients with the new one's.
+//!
+//! Per-name [`ModelStats`] (requests / errors / latency) are shared across
+//! versions so a hot-swap does not reset the serving counters; the server's
+//! `stats` op reports them per model.
+
+use crate::coordinator::{model_io, ServingModel};
+use crate::linalg::Mat;
+use crate::metrics::{Counter, LatencyHistogram};
+use crate::rng::Pcg64;
+use crate::util::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::{Arc, Mutex, RwLock};
+
+/// Retired versions kept resolvable per name (besides the active one).
+/// Old enough versions are retired on swap; in-flight requests holding an
+/// `Arc` to a retired version still complete against it.
+pub const RETAINED_VERSIONS: usize = 4;
+
+/// Number of deterministic probe points used by the publish self-check.
+const SELF_CHECK_POINTS: usize = 8;
+
+/// Serving counters for one model name, shared across its versions so a
+/// hot-swap does not reset them.
+#[derive(Debug, Default)]
+pub struct ModelStats {
+    pub requests: Counter,
+    pub errors: Counter,
+    pub latency: LatencyHistogram,
+}
+
+/// One immutable published version of a named model.
+#[derive(Debug)]
+pub struct ModelVersion {
+    name: String,
+    version: u64,
+    /// The model itself (immutable once published).
+    pub model: ServingModel,
+    /// Per-name counters (shared with sibling versions).
+    pub stats: Arc<ModelStats>,
+    /// Probe predictions recorded at publish time — the self-check that
+    /// validation compared against.
+    self_check: Vec<f64>,
+}
+
+impl ModelVersion {
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+    pub fn version(&self) -> u64 {
+        self.version
+    }
+    /// The probe predictions recorded when this version was validated.
+    pub fn self_check(&self) -> &[f64] {
+        &self.self_check
+    }
+}
+
+/// Deterministic probe batch for a model's shape: every publish of a model
+/// with the same (p, d, bandwidth) validates on the same points, so the
+/// self-check is reproducible across processes.
+fn probe_points(model: &ServingModel) -> Mat {
+    let seed = (model.p() as u64)
+        .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+        .wrapping_add(model.d() as u64)
+        .wrapping_add(model.bandwidth.to_bits());
+    let mut rng = Pcg64::new(seed);
+    Mat::from_fn(SELF_CHECK_POINTS, model.d(), |_, _| rng.normal())
+}
+
+/// Summary row returned by [`ModelRegistry::list`].
+#[derive(Debug, Clone)]
+pub struct ModelInfo {
+    pub name: String,
+    pub active_version: u64,
+    /// All resolvable versions (retained window), ascending.
+    pub versions: Vec<u64>,
+    pub p: usize,
+    pub d: usize,
+    pub is_default: bool,
+    pub requests: u64,
+    pub errors: u64,
+}
+
+#[derive(Debug, Clone)]
+struct Entry {
+    /// Resolvable versions: the active one plus the retained window.
+    versions: BTreeMap<u64, Arc<ModelVersion>>,
+    active: u64,
+    next_version: u64,
+    stats: Arc<ModelStats>,
+}
+
+/// One immutable registry state; readers resolve against a frozen snapshot.
+#[derive(Debug, Clone, Default)]
+struct Snapshot {
+    models: BTreeMap<String, Entry>,
+    default: Option<String>,
+}
+
+/// The registry handle shared by the engine, the server, and the CLI.
+#[derive(Debug, Default)]
+pub struct ModelRegistry {
+    snap: RwLock<Arc<Snapshot>>,
+    /// Serializes writers; readers never take it.
+    write: Mutex<()>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn snapshot(&self) -> Arc<Snapshot> {
+        self.snap.read().expect("registry lock poisoned").clone()
+    }
+
+    fn install(&self, next: Snapshot) {
+        *self.snap.write().expect("registry lock poisoned") = Arc::new(next);
+    }
+
+    /// Validate, warm up, and atomically publish a new version of `name`.
+    /// Returns the assigned version number. The first published name
+    /// becomes the default model. On any validation failure the previous
+    /// version keeps serving untouched.
+    pub fn publish(&self, name: &str, model: ServingModel) -> Result<u64> {
+        if name.is_empty() {
+            return Err(Error::invalid("model name must be non-empty"));
+        }
+        // ---- validate + warm up (off the locks: this is the slow part) --
+        let probes = probe_points(&model);
+        let first = model.predict_native(&probes); // warm-up pass
+        if first.iter().any(|y| !y.is_finite()) {
+            return Err(Error::invalid(format!(
+                "model '{name}' rejected: non-finite probe predictions \
+                 (previous version, if any, keeps serving)"
+            )));
+        }
+        let second = model.predict_native(&probes); // self-check pass
+        if first != second {
+            return Err(Error::invalid(format!(
+                "model '{name}' rejected: self-check predictions not \
+                 reproducible (previous version, if any, keeps serving)"
+            )));
+        }
+        // ---- swap (copy-on-write under the writer lock) -----------------
+        let _w = self.write.lock().expect("registry writer lock poisoned");
+        let cur = self.snapshot();
+        let mut next = (*cur).clone();
+        let entry = next.models.entry(name.to_string()).or_insert_with(|| Entry {
+            versions: BTreeMap::new(),
+            active: 0,
+            next_version: 1,
+            stats: Arc::new(ModelStats::default()),
+        });
+        if let Some(active) = entry.versions.get(&entry.active) {
+            if active.model.d() != model.d() {
+                return Err(Error::invalid(format!(
+                    "model '{name}' rejected: feature dimension {} != \
+                     serving dimension {} of active version {} \
+                     (clients are already sending d={} queries)",
+                    model.d(),
+                    active.model.d(),
+                    entry.active,
+                    active.model.d()
+                )));
+            }
+        }
+        let version = entry.next_version;
+        entry.next_version += 1;
+        entry.versions.insert(
+            version,
+            Arc::new(ModelVersion {
+                name: name.to_string(),
+                version,
+                model,
+                stats: entry.stats.clone(),
+                self_check: first,
+            }),
+        );
+        entry.active = version;
+        // Retire versions that fell out of the retention window; in-flight
+        // requests holding their Arcs still complete.
+        while entry.versions.len() > RETAINED_VERSIONS {
+            let oldest = *entry.versions.keys().next().unwrap();
+            entry.versions.remove(&oldest);
+        }
+        if next.default.is_none() {
+            next.default = Some(name.to_string());
+        }
+        self.install(next);
+        Ok(version)
+    }
+
+    /// Load a persisted model file and publish it under `name`.
+    pub fn load_file(&self, name: &str, path: &Path) -> Result<u64> {
+        let model = model_io::load(path)?;
+        self.publish(name, model)
+    }
+
+    /// Resolve `(name, version)` to one immutable version snapshot.
+    /// `name = None` resolves the default model; `version = None` resolves
+    /// the active version. The returned `Arc` stays valid (and its
+    /// coefficients immutable) even if the version is swapped out or
+    /// unloaded mid-request.
+    pub fn resolve(
+        &self,
+        name: Option<&str>,
+        version: Option<u64>,
+    ) -> Result<Arc<ModelVersion>> {
+        let snap = self.snapshot();
+        let name = match name {
+            Some(n) => n,
+            None => snap
+                .default
+                .as_deref()
+                .ok_or_else(|| Error::invalid("no default model loaded"))?,
+        };
+        let entry = snap
+            .models
+            .get(name)
+            .ok_or_else(|| Error::invalid(format!("unknown model '{name}'")))?;
+        let v = version.unwrap_or(entry.active);
+        entry.versions.get(&v).cloned().ok_or_else(|| {
+            Error::invalid(format!(
+                "model '{name}' has no resolvable version {v} \
+                 (active is {}, retained: {:?})",
+                entry.active,
+                entry.versions.keys().collect::<Vec<_>>()
+            ))
+        })
+    }
+
+    /// Name of the current default model.
+    pub fn default_name(&self) -> Option<String> {
+        self.snapshot().default.clone()
+    }
+
+    /// Make `name` the default model for requests that don't name one.
+    pub fn set_default(&self, name: &str) -> Result<()> {
+        let _w = self.write.lock().expect("registry writer lock poisoned");
+        let cur = self.snapshot();
+        if !cur.models.contains_key(name) {
+            return Err(Error::invalid(format!("unknown model '{name}'")));
+        }
+        let mut next = (*cur).clone();
+        next.default = Some(name.to_string());
+        self.install(next);
+        Ok(())
+    }
+
+    /// Remove every version of `name`. The default model cannot be
+    /// unloaded (promote another model first); in-flight requests holding
+    /// version `Arc`s still complete.
+    pub fn unload(&self, name: &str) -> Result<()> {
+        let _w = self.write.lock().expect("registry writer lock poisoned");
+        let cur = self.snapshot();
+        if !cur.models.contains_key(name) {
+            return Err(Error::invalid(format!("unknown model '{name}'")));
+        }
+        if cur.default.as_deref() == Some(name) {
+            return Err(Error::invalid(format!(
+                "cannot unload default model '{name}'; set another default first"
+            )));
+        }
+        let mut next = (*cur).clone();
+        next.models.remove(name);
+        self.install(next);
+        Ok(())
+    }
+
+    /// Summaries of every loaded model (sorted by name).
+    pub fn list(&self) -> Vec<ModelInfo> {
+        let snap = self.snapshot();
+        snap.models
+            .iter()
+            .map(|(name, e)| {
+                let active = &e.versions[&e.active];
+                ModelInfo {
+                    name: name.clone(),
+                    active_version: e.active,
+                    versions: e.versions.keys().copied().collect(),
+                    p: active.model.p(),
+                    d: active.model.d(),
+                    is_default: snap.default.as_deref() == Some(name),
+                    requests: e.stats.requests.get(),
+                    errors: e.stats.errors.get(),
+                }
+            })
+            .collect()
+    }
+
+    /// Number of loaded model names.
+    pub fn len(&self) -> usize {
+        self.snapshot().models.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model(p: usize, d: usize, seed: u64) -> ServingModel {
+        let mut rng = Pcg64::new(seed);
+        ServingModel {
+            landmarks: Mat::from_fn(p, d, |_, _| rng.normal()),
+            v: rng.normal_vec(p),
+            bandwidth: 1.0,
+        }
+    }
+
+    #[test]
+    fn publish_resolve_roundtrip_and_default() {
+        let reg = ModelRegistry::new();
+        assert!(reg.resolve(None, None).is_err(), "no default yet");
+        let v = reg.publish("a", model(8, 4, 1)).unwrap();
+        assert_eq!(v, 1);
+        assert_eq!(reg.default_name().as_deref(), Some("a"));
+        let mv = reg.resolve(None, None).unwrap();
+        assert_eq!(mv.name(), "a");
+        assert_eq!(mv.version(), 1);
+        assert_eq!(mv.self_check().len(), SELF_CHECK_POINTS);
+        // Explicit name + version resolve to the same Arc.
+        let mv2 = reg.resolve(Some("a"), Some(1)).unwrap();
+        assert!(Arc::ptr_eq(&mv, &mv2));
+        assert!(reg.resolve(Some("b"), None).is_err());
+        assert!(reg.resolve(Some("a"), Some(2)).is_err());
+    }
+
+    #[test]
+    fn versions_bump_and_old_window_retires() {
+        let reg = ModelRegistry::new();
+        for k in 0..6u64 {
+            let v = reg.publish("m", model(6, 3, 10 + k)).unwrap();
+            assert_eq!(v, k + 1);
+        }
+        let info = &reg.list()[0];
+        assert_eq!(info.active_version, 6);
+        assert_eq!(info.versions.len(), RETAINED_VERSIONS);
+        assert_eq!(info.versions, vec![3, 4, 5, 6]);
+        // Retired versions no longer resolve; retained ones do.
+        assert!(reg.resolve(Some("m"), Some(1)).is_err());
+        assert_eq!(reg.resolve(Some("m"), Some(3)).unwrap().version(), 3);
+        // Unversioned resolve gets the active one.
+        assert_eq!(reg.resolve(Some("m"), None).unwrap().version(), 6);
+    }
+
+    #[test]
+    fn in_flight_arc_survives_swap_and_unload() {
+        let reg = ModelRegistry::new();
+        reg.publish("keep", model(4, 2, 1)).unwrap();
+        reg.publish("m", model(4, 2, 2)).unwrap();
+        let held = reg.resolve(Some("m"), None).unwrap();
+        for k in 0..RETAINED_VERSIONS as u64 + 1 {
+            reg.publish("m", model(4, 2, 3 + k)).unwrap();
+        }
+        assert!(reg.resolve(Some("m"), Some(1)).is_err(), "retired");
+        // The held Arc still serves its original coefficients.
+        let x = Mat::from_fn(2, 2, |i, j| (i + j) as f64 * 0.1);
+        let y = held.model.predict_native(&x);
+        assert!(y.iter().all(|v| v.is_finite()));
+        assert_eq!(held.version(), 1);
+        // Unload under a different default: held Arc still valid.
+        reg.set_default("keep").unwrap();
+        reg.unload("m").unwrap();
+        assert!(reg.resolve(Some("m"), None).is_err());
+        assert_eq!(held.model.predict_native(&x), y);
+    }
+
+    #[test]
+    fn non_finite_model_rejected_previous_keeps_serving() {
+        let reg = ModelRegistry::new();
+        reg.publish("m", model(4, 2, 1)).unwrap();
+        let mut bad = model(4, 2, 2);
+        bad.v[0] = f64::NAN;
+        let err = reg.publish("m", bad).unwrap_err();
+        assert!(err.to_string().contains("non-finite"), "{err}");
+        // Rollback: version 1 still active.
+        assert_eq!(reg.resolve(Some("m"), None).unwrap().version(), 1);
+    }
+
+    #[test]
+    fn dimension_change_rejected() {
+        let reg = ModelRegistry::new();
+        reg.publish("m", model(4, 3, 1)).unwrap();
+        let err = reg.publish("m", model(4, 5, 2)).unwrap_err();
+        assert!(err.to_string().contains("dimension"), "{err}");
+        assert_eq!(reg.resolve(Some("m"), None).unwrap().model.d(), 3);
+    }
+
+    #[test]
+    fn default_cannot_be_unloaded() {
+        let reg = ModelRegistry::new();
+        reg.publish("a", model(4, 2, 1)).unwrap();
+        reg.publish("b", model(4, 2, 2)).unwrap();
+        assert!(reg.unload("a").is_err(), "a is the default");
+        reg.set_default("b").unwrap();
+        reg.unload("a").unwrap();
+        assert_eq!(reg.len(), 1);
+        assert!(reg.set_default("a").is_err());
+        assert!(reg.unload("nope").is_err());
+    }
+
+    #[test]
+    fn stats_shared_across_versions() {
+        let reg = ModelRegistry::new();
+        reg.publish("m", model(4, 2, 1)).unwrap();
+        let v1 = reg.resolve(Some("m"), None).unwrap();
+        v1.stats.requests.add(5);
+        reg.publish("m", model(4, 2, 2)).unwrap();
+        let v2 = reg.resolve(Some("m"), None).unwrap();
+        assert_eq!(v2.stats.requests.get(), 5, "hot-swap must not reset stats");
+        assert_eq!(reg.list()[0].requests, 5);
+    }
+
+    #[test]
+    fn list_reports_shapes_and_default_flag() {
+        let reg = ModelRegistry::new();
+        reg.publish("a", model(8, 4, 1)).unwrap();
+        reg.publish("b", model(6, 2, 2)).unwrap();
+        let infos = reg.list();
+        assert_eq!(infos.len(), 2);
+        let a = infos.iter().find(|i| i.name == "a").unwrap();
+        assert!(a.is_default);
+        assert_eq!((a.p, a.d), (8, 4));
+        let b = infos.iter().find(|i| i.name == "b").unwrap();
+        assert!(!b.is_default);
+        assert_eq!((b.p, b.d), (6, 2));
+    }
+
+    #[test]
+    fn concurrent_publish_and_resolve_never_tear() {
+        // Readers resolving while a writer swaps must always observe a
+        // complete version (name+coefficients from exactly one publish).
+        let reg = Arc::new(ModelRegistry::new());
+        reg.publish("m", model(4, 2, 0)).unwrap();
+        let stop = std::sync::atomic::AtomicBool::new(false);
+        std::thread::scope(|s| {
+            let reg2 = reg.clone();
+            let stop = &stop;
+            s.spawn(move || {
+                for k in 0..50u64 {
+                    reg2.publish("m", model(4, 2, k + 1)).unwrap();
+                }
+                stop.store(true, std::sync::atomic::Ordering::Release);
+            });
+            for _ in 0..4 {
+                let reg = reg.clone();
+                s.spawn(move || {
+                    let x = Mat::from_fn(1, 2, |_, j| j as f64);
+                    while !stop.load(std::sync::atomic::Ordering::Acquire) {
+                        let mv = reg.resolve(Some("m"), None).unwrap();
+                        let y = mv.model.predict_native(&x);
+                        assert!(y[0].is_finite());
+                        // The resolved version must reproduce its own
+                        // recorded self-check exactly (no mixed state).
+                        let probes = probe_points(&mv.model);
+                        assert_eq!(
+                            mv.model.predict_native(&probes),
+                            mv.self_check(),
+                            "torn version state"
+                        );
+                    }
+                });
+            }
+        });
+        assert_eq!(reg.resolve(Some("m"), None).unwrap().version(), 51);
+    }
+}

@@ -4,11 +4,26 @@
 //! environment, and the engine already owns the batching concurrency):
 //!
 //! ```text
-//! → {"op":"predict","x":[0.1, ...]}          ← {"ok":true,"y":1.23}
-//! → {"op":"predict_batch","xs":[[...],...]}  ← {"ok":true,"ys":[...]}
-//! → {"op":"stats"}                           ← {"ok":true,"requests":...,...}
-//! → {"op":"ping"}                            ← {"ok":true}
+//! → {"op":"predict","x":[...]}                ← {"ok":true,"y":1.23}
+//!   optional: "model":"name", "version":N      (default model otherwise)
+//! → {"op":"predict_batch","xs":[[...],...]}   ← {"ok":true,"ys":[...]}
+//!   optional: "model":"name", "version":N
+//! → {"op":"load_model","name":"a",
+//!    "path":"/m.fkrr"}                        ← {"ok":true,"name":"a","version":2}
+//! → {"op":"list_models"}                      ← {"ok":true,"default":"a",
+//!                                                "models":[{"name":...,...}]}
+//! → {"op":"set_default","name":"a"}           ← {"ok":true}
+//! → {"op":"unload_model","name":"b"}          ← {"ok":true}
+//! → {"op":"stats"}                            ← {"ok":true,"requests":...,
+//!                                                "cache_hits":...,"models":{...}}
+//! → {"op":"ping"}                             ← {"ok":true}
 //! ```
+//!
+//! `load_model` validates, warms up, and atomically publishes a new
+//! version through the [`registry`](crate::registry) — in-flight requests
+//! keep their resolved version, new requests see the new one, and a model
+//! that fails its publish self-check is rejected with the previous
+//! version still serving (zero-downtime hot-swap).
 //!
 //! Malformed requests get `{"ok":false,"error":"..."}` and the connection
 //! stays open; socket errors close only that connection.
@@ -16,8 +31,10 @@
 use crate::coordinator::Engine;
 use crate::util::json::Json;
 use crate::util::{Error, Result};
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::path::Path;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 
@@ -147,6 +164,19 @@ fn handle_request(line: &str, engine: &Engine) -> Json {
     }
 }
 
+/// Optional `"model"` / `"version"` request fields → registry coordinates.
+fn model_selector(req: &Json) -> Result<(Option<String>, Option<u64>)> {
+    let name = match req.opt("model") {
+        Some(m) => Some(m.as_str()?.to_string()),
+        None => None,
+    };
+    let version = match req.opt("version") {
+        Some(v) => Some(v.as_usize()? as u64),
+        None => None,
+    };
+    Ok((name, version))
+}
+
 fn handle_request_inner(line: &str, engine: &Engine) -> Result<Json> {
     if line.is_empty() {
         return Err(Error::invalid("empty request"));
@@ -158,7 +188,8 @@ fn handle_request_inner(line: &str, engine: &Engine) -> Result<Json> {
         "predict" => {
             let xs: Result<Vec<f64>> =
                 req.get("x")?.as_arr()?.iter().map(|v| v.as_f64()).collect();
-            let y = engine.predict(&xs?)?;
+            let (name, version) = model_selector(&req)?;
+            let y = engine.predict_model(name.as_deref(), version, &xs?)?;
             Ok(Json::obj(vec![("ok", Json::Bool(true)), ("y", Json::num(y))]))
         }
         "predict_batch" => {
@@ -181,7 +212,8 @@ fn handle_request_inner(line: &str, engine: &Engine) -> Result<Json> {
                 flat.extend_from_slice(r);
             }
             let m = crate::linalg::Mat::from_vec(parsed.len(), d, flat)?;
-            let results = engine.predict_many(&m);
+            let (name, version) = model_selector(&req)?;
+            let results = engine.predict_many_model(name.as_deref(), version, &m);
             let mut ys = Vec::with_capacity(results.len());
             for r in results {
                 ys.push(r?);
@@ -191,6 +223,55 @@ fn handle_request_inner(line: &str, engine: &Engine) -> Result<Json> {
                 ("ys", Json::arr_f64(&ys)),
             ]))
         }
+        "load_model" => {
+            let name = req.get("name")?.as_str()?;
+            let path = req.get("path")?.as_str()?;
+            let version = engine.registry().load_file(name, Path::new(path))?;
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("name", Json::str(name)),
+                ("version", Json::num(version as f64)),
+            ]))
+        }
+        "list_models" => {
+            let registry = engine.registry();
+            let models: Vec<Json> = registry
+                .list()
+                .into_iter()
+                .map(|info| {
+                    let versions: Vec<f64> =
+                        info.versions.iter().map(|&v| v as f64).collect();
+                    Json::obj(vec![
+                        ("name", Json::str(info.name)),
+                        ("active_version", Json::num(info.active_version as f64)),
+                        ("versions", Json::arr_f64(&versions)),
+                        ("p", Json::num(info.p as f64)),
+                        ("d", Json::num(info.d as f64)),
+                        ("default", Json::Bool(info.is_default)),
+                        ("requests", Json::num(info.requests as f64)),
+                        ("errors", Json::num(info.errors as f64)),
+                    ])
+                })
+                .collect();
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                (
+                    "default",
+                    registry.default_name().map(Json::str).unwrap_or(Json::Null),
+                ),
+                ("models", Json::Arr(models)),
+            ]))
+        }
+        "set_default" => {
+            let name = req.get("name")?.as_str()?;
+            engine.registry().set_default(name)?;
+            Ok(Json::obj(vec![("ok", Json::Bool(true))]))
+        }
+        "unload_model" => {
+            let name = req.get("name")?.as_str()?;
+            engine.registry().unload(name)?;
+            Ok(Json::obj(vec![("ok", Json::Bool(true))]))
+        }
         "stats" => {
             let s = engine.stats();
             let per_worker: Vec<f64> = engine
@@ -198,6 +279,25 @@ fn handle_request_inner(line: &str, engine: &Engine) -> Result<Json> {
                 .into_iter()
                 .map(|c| c as f64)
                 .collect();
+            // Per-model serving counters, keyed by model name.
+            let registry = engine.registry();
+            let mut models = BTreeMap::new();
+            for info in registry.list() {
+                let p50_us = registry
+                    .resolve(Some(info.name.as_str()), None)
+                    .map(|mv| mv.stats.latency.percentile(50.0).as_micros() as f64)
+                    .unwrap_or(0.0);
+                models.insert(
+                    info.name.clone(),
+                    Json::obj(vec![
+                        ("active_version", Json::num(info.active_version as f64)),
+                        ("requests", Json::num(info.requests as f64)),
+                        ("errors", Json::num(info.errors as f64)),
+                        ("p50_us", Json::num(p50_us)),
+                    ]),
+                );
+            }
+            let cache = crate::kernel::cache::global().stats();
             Ok(Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("workers", Json::num(engine.workers() as f64)),
@@ -215,6 +315,10 @@ fn handle_request_inner(line: &str, engine: &Engine) -> Result<Json> {
                     "p99_us",
                     Json::num(s.latency.percentile(99.0).as_micros() as f64),
                 ),
+                ("cache_hits", Json::num(cache.hits.get() as f64)),
+                ("cache_misses", Json::num(cache.misses.get() as f64)),
+                ("cache_evictions", Json::num(cache.evictions.get() as f64)),
+                ("models", Json::Obj(models)),
             ]))
         }
         other => Err(Error::invalid(format!("unknown op '{other}'"))),
@@ -274,6 +378,16 @@ impl Client {
         v.get("y")?.as_f64()
     }
 
+    /// Predict against a named model (active version).
+    pub fn predict_model(&mut self, model: &str, x: &[f64]) -> Result<f64> {
+        let v = self.roundtrip(Json::obj(vec![
+            ("op", Json::str("predict")),
+            ("model", Json::str(model)),
+            ("x", Json::arr_f64(x)),
+        ]))?;
+        v.get("y")?.as_f64()
+    }
+
     pub fn predict_batch(&mut self, xs: &[Vec<f64>]) -> Result<Vec<f64>> {
         let rows: Vec<Json> = xs.iter().map(|r| Json::arr_f64(r)).collect();
         let v = self.roundtrip(Json::obj(vec![
@@ -281,6 +395,55 @@ impl Client {
             ("xs", Json::Arr(rows)),
         ]))?;
         v.get("ys")?.as_arr()?.iter().map(|y| y.as_f64()).collect()
+    }
+
+    /// Batch-predict against a named model (active version).
+    pub fn predict_batch_model(
+        &mut self,
+        model: &str,
+        xs: &[Vec<f64>],
+    ) -> Result<Vec<f64>> {
+        let rows: Vec<Json> = xs.iter().map(|r| Json::arr_f64(r)).collect();
+        let v = self.roundtrip(Json::obj(vec![
+            ("op", Json::str("predict_batch")),
+            ("model", Json::str(model)),
+            ("xs", Json::Arr(rows)),
+        ]))?;
+        v.get("ys")?.as_arr()?.iter().map(|y| y.as_f64()).collect()
+    }
+
+    /// Load a `.fkrr` file (server-side path) as a new version of `name`;
+    /// returns the assigned version number.
+    pub fn load_model(&mut self, name: &str, path: &str) -> Result<u64> {
+        let v = self.roundtrip(Json::obj(vec![
+            ("op", Json::str("load_model")),
+            ("name", Json::str(name)),
+            ("path", Json::str(path)),
+        ]))?;
+        Ok(v.get("version")?.as_usize()? as u64)
+    }
+
+    /// List loaded models (raw JSON reply — see the protocol table).
+    pub fn list_models(&mut self) -> Result<Json> {
+        self.roundtrip(Json::obj(vec![("op", Json::str("list_models"))]))
+    }
+
+    /// Promote `name` to the default model.
+    pub fn set_default(&mut self, name: &str) -> Result<()> {
+        self.roundtrip(Json::obj(vec![
+            ("op", Json::str("set_default")),
+            ("name", Json::str(name)),
+        ]))?;
+        Ok(())
+    }
+
+    /// Unload every version of `name` (the default cannot be unloaded).
+    pub fn unload_model(&mut self, name: &str) -> Result<()> {
+        self.roundtrip(Json::obj(vec![
+            ("op", Json::str("unload_model")),
+            ("name", Json::str(name)),
+        ]))?;
+        Ok(())
     }
 
     pub fn stats(&mut self) -> Result<Json> {
@@ -307,23 +470,28 @@ mod tests {
     use crate::kernel::KernelKind;
     use crate::krr::{NystromKrr, NystromKrrConfig};
     use crate::linalg::Mat;
+    use crate::registry::ModelRegistry;
     use crate::rng::Pcg64;
     use crate::sketch::SketchStrategy;
 
-    fn test_server() -> (Server, Mat, Vec<f64>) {
-        let mut rng = Pcg64::new(21);
+    fn fit_model(seed: u64, p: usize) -> (Mat, ServingModel) {
+        let mut rng = Pcg64::new(seed);
         let x = Mat::from_fn(60, 4, |_, _| rng.normal());
         let y: Vec<f64> = (0..60).map(|i| x.row(i)[0].tanh()).collect();
         let cfg = NystromKrrConfig {
             lambda: 1e-3,
-            p: 12,
+            p,
             strategy: SketchStrategy::DiagK,
             gamma: 0.0,
-            seed: 3,
+            seed,
         };
         let model =
             NystromKrr::fit(&x, &y, KernelKind::Rbf { bandwidth: 1.0 }, &cfg).unwrap();
-        let sm = ServingModel::from_nystrom(&model).unwrap();
+        (x, ServingModel::from_nystrom(&model).unwrap())
+    }
+
+    fn test_server() -> (Server, Mat, Vec<f64>) {
+        let (x, sm) = fit_model(21, 12);
         let want = sm.predict_native(&x);
         let engine = Engine::start(
             sm,
@@ -366,6 +534,92 @@ mod tests {
     }
 
     #[test]
+    fn model_ops_roundtrip() {
+        // Start with model "a"; hot-load "b" from a file over the wire,
+        // route per-request, promote it, and unload "a" — all without
+        // restarting the server.
+        let (x, sm_a) = fit_model(21, 12);
+        let (_, sm_b) = fit_model(22, 8);
+        let want_a = sm_a.predict_native(&x);
+        let want_b = sm_b.predict_native(&x);
+        let path = std::env::temp_dir()
+            .join(format!("fkrr_ops_{}.fkrr", std::process::id()));
+        crate::coordinator::model_io::save(&sm_b, &path).unwrap();
+
+        let registry = Arc::new(ModelRegistry::new());
+        registry.publish("a", sm_a).unwrap();
+        let engine = Engine::start_with_registry(
+            registry,
+            EngineConfig {
+                backend: Backend::Native,
+                batcher: BatcherConfig::default(),
+                workers: 2,
+            },
+        )
+        .unwrap();
+        let server = Server::start("127.0.0.1:0", engine).unwrap();
+        let mut c = Client::connect(&server.addr().to_string()).unwrap();
+
+        // Load "b" over the wire, then route to each model by name.
+        let v = c.load_model("b", path.to_str().unwrap()).unwrap();
+        assert_eq!(v, 1);
+        let ya = c.predict_model("a", x.row(0)).unwrap();
+        let yb = c.predict_model("b", x.row(0)).unwrap();
+        assert!((ya - want_a[0]).abs() < 1e-5);
+        assert!((yb - want_b[0]).abs() < 1e-5);
+        let ys = c.predict_batch_model("b", &[x.row(1).to_vec()]).unwrap();
+        assert!((ys[0] - want_b[1]).abs() < 1e-5);
+        // Unnamed predicts still hit the default ("a").
+        let y = c.predict(x.row(0)).unwrap();
+        assert!((y - want_a[0]).abs() < 1e-5);
+
+        // list_models reflects both, with "a" the default.
+        let listed = c.list_models().unwrap();
+        assert_eq!(listed.get("default").unwrap().as_str().unwrap(), "a");
+        let models = listed.get("models").unwrap().as_arr().unwrap();
+        assert_eq!(models.len(), 2);
+
+        // Promote "b", retire "a".
+        c.set_default("b").unwrap();
+        let y = c.predict(x.row(0)).unwrap();
+        assert!((y - want_b[0]).abs() < 1e-5, "default must follow promotion");
+        assert!(c.unload_model("b").is_err(), "default is protected");
+        c.unload_model("a").unwrap();
+        assert!(c.predict_model("a", x.row(0)).is_err());
+        let listed = c.list_models().unwrap();
+        assert_eq!(listed.get("models").unwrap().as_arr().unwrap().len(), 1);
+
+        // Unknown model / bad selector errors keep the connection alive.
+        assert!(c.predict_model("nope", x.row(0)).is_err());
+        let reply = c
+            .raw(r#"{"op":"predict","model":"b","version":99,"x":[0,0,0,0]}"#)
+            .unwrap();
+        assert!(reply.contains("\"ok\":false"), "{reply}");
+        c.ping().unwrap();
+        server.shutdown();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn load_model_failure_reports_expected_vs_found() {
+        let (server, _, _) = test_server();
+        let mut c = Client::connect(&server.addr().to_string()).unwrap();
+        let path = std::env::temp_dir()
+            .join(format!("fkrr_garbage_{}.fkrr", std::process::id()));
+        std::fs::write(&path, b"XKRRgarbage_that_is_long_enough_to_pass_min_len_checks")
+            .unwrap();
+        let err = c.load_model("bad", path.to_str().unwrap()).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("fkrr_garbage_"), "path missing: {msg}");
+        // Previous state untouched: the default model still serves.
+        c.ping().unwrap();
+        let listed = c.list_models().unwrap();
+        assert_eq!(listed.get("models").unwrap().as_arr().unwrap().len(), 1);
+        server.shutdown();
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
     fn malformed_requests_keep_connection_alive() {
         let (server, x, want) = test_server();
         let mut client = Client::connect(&server.addr().to_string()).unwrap();
@@ -376,8 +630,13 @@ mod tests {
             r#"{"op":"predict"}"#,
             r#"{"op":"predict","x":"nope"}"#,
             r#"{"op":"predict","x":[1.0]}"#,          // wrong dim
+            r#"{"op":"predict","model":7,"x":[1.0]}"#, // non-string model
+            r#"{"op":"predict","version":-1,"x":[1.0]}"#, // bad version
             r#"{"op":"predict_batch","xs":[]}"#,      // empty
             r#"{"op":"predict_batch","xs":[[1],[1,2]]}"#, // ragged
+            r#"{"op":"load_model","name":"x"}"#,      // missing path
+            r#"{"op":"set_default"}"#,                // missing name
+            r#"{"op":"unload_model","name":"ghost"}"#, // unknown name
         ] {
             let reply = client.raw(bad).unwrap();
             assert!(reply.contains("\"ok\":false"), "bad={bad} reply={reply}");

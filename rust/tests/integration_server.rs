@@ -140,6 +140,28 @@ fn multi_worker_concurrent_clients_survive_poison() {
     let reqs = stats.get("requests").unwrap().as_f64().unwrap();
     assert_eq!(reqs, total_points as f64, "requests {reqs}");
     assert_eq!(stats.get("errors").unwrap().as_f64().unwrap(), 0.0);
+    // Per-worker counters: one entry per pool worker, summing exactly to
+    // the engine-level request count.
+    let wr = stats.get("worker_requests").unwrap().as_arr().unwrap();
+    assert_eq!(wr.len(), 4, "one counter per worker");
+    let wr_sum: f64 = wr.iter().map(|v| v.as_f64().unwrap()).sum();
+    assert_eq!(wr_sum, reqs, "worker_requests must sum to requests");
+    // Kernel-block cache counters ride along in the same stats reply
+    // (process-wide, so only presence + sanity is asserted here).
+    for key in ["cache_hits", "cache_misses", "cache_evictions"] {
+        assert!(
+            stats.get(key).unwrap().as_f64().unwrap() >= 0.0,
+            "missing {key}"
+        );
+    }
+    // Per-model counters: everything here went to the default model.
+    let models = stats.get("models").unwrap();
+    let default_stats = models.get("default").unwrap();
+    assert_eq!(
+        default_stats.get("requests").unwrap().as_f64().unwrap(),
+        total_points as f64
+    );
+    assert_eq!(default_stats.get("errors").unwrap().as_f64().unwrap(), 0.0);
     // Still alive after the storm.
     let y = c.predict(x.row(0)).unwrap();
     assert!((y - want[0]).abs() < 1e-5);
@@ -231,6 +253,124 @@ fn engine_backpressure_reports_queue_full() {
         .count();
     assert!(ok >= 1, "some requests must succeed");
     assert_eq!(ok + full, 32, "every request either served or backpressured");
+    engine.shutdown();
+}
+
+/// The ISSUE-7 hot-swap soak: 8 client threads hammer the engine while a
+/// writer publishes 24 new versions of the model under them. Versions are
+/// *tagged* through their weights — version k has `v = k·ones`, over the
+/// same landmarks — so any prediction must equal `k·s(x)` for exactly one
+/// whole k: a torn read mixing two versions' coefficients would land
+/// between integers. Every request must succeed (a swap is never allowed
+/// to fail a request), and each `predict_many` call must see a single
+/// version across all of its rows.
+#[test]
+fn hot_swap_soak_no_failures_no_torn_reads() {
+    use fastkrr::registry::ModelRegistry;
+    use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+    use std::sync::Arc;
+
+    const SWAPS: u64 = 24; // versions 2..=25 on top of the initial publish
+    let mut rng = Pcg64::new(99);
+    let landmarks = Mat::from_fn(16, 6, |_, _| rng.normal());
+    let tagged = |k: u64| ServingModel {
+        landmarks: landmarks.clone(),
+        v: vec![k as f64; 16],
+        bandwidth: 1.0,
+    };
+    let x = Mat::from_fn(40, 6, |_, _| rng.normal());
+    // s(x) = Σ_j k_rbf(x, l_j): the version-1 predictions. RBF terms are
+    // positive, so s > 0 and the ratio y/s is well-conditioned.
+    let s = tagged(1).predict_native(&x);
+    assert!(s.iter().all(|&v| v > 1e-6));
+
+    let registry = Arc::new(ModelRegistry::new());
+    registry.publish("m", tagged(1)).unwrap();
+    let engine = Engine::start_with_registry(
+        registry.clone(),
+        EngineConfig {
+            backend: Backend::Native,
+            batcher: BatcherConfig {
+                max_wait: Duration::from_millis(1),
+                queue_cap: 4096,
+                ..Default::default()
+            },
+            workers: 4,
+        },
+    )
+    .unwrap();
+
+    let done = AtomicBool::new(false);
+    let sent = AtomicU64::new(0);
+    let check = |y: f64, i: usize| -> u64 {
+        let ratio = y / s[i];
+        let k = ratio.round();
+        assert!(
+            (ratio - k).abs() < 1e-3 && (1.0..=(SWAPS + 1) as f64).contains(&k),
+            "torn read: y/s = {ratio} is not a published version tag"
+        );
+        k as u64
+    };
+    std::thread::scope(|sc| {
+        // Writer: swap in a new tagged version every few hundred µs.
+        let writer_reg = registry.clone();
+        let done_ref = &done;
+        sc.spawn(move || {
+            for k in 2..=SWAPS + 1 {
+                writer_reg.publish("m", tagged(k)).unwrap();
+                std::thread::sleep(Duration::from_micros(300));
+            }
+            done_ref.store(true, Ordering::Release);
+        });
+        // 8 clients: predict (and periodically batch-predict) until the
+        // writer has finished all swaps, so the load brackets every swap.
+        for t in 0..8usize {
+            let engine = &engine;
+            let x = &x;
+            let done = &done;
+            let sent = &sent;
+            let check = &check;
+            sc.spawn(move || {
+                let mut rng = Pcg64::new(5000 + t as u64);
+                let mut iter = 0usize;
+                while !done.load(Ordering::Acquire) || iter < 40 {
+                    iter += 1;
+                    if iter % 8 == 0 {
+                        // One predict_many call resolves one version for
+                        // every row: all tags must agree.
+                        let idx: Vec<usize> =
+                            (0..4).map(|_| rng.below(x.rows())).collect();
+                        let rows = Mat::from_fn(4, 6, |r, c| x.row(idx[r])[c]);
+                        let ks: Vec<u64> = engine
+                            .predict_many(&rows)
+                            .into_iter()
+                            .enumerate()
+                            .map(|(r, y)| check(y.expect("batch predict failed"), idx[r]))
+                            .collect();
+                        assert!(
+                            ks.windows(2).all(|w| w[0] == w[1]),
+                            "predict_many mixed versions {ks:?} in one call"
+                        );
+                        sent.fetch_add(4, Ordering::Relaxed);
+                    } else {
+                        let i = rng.below(x.rows());
+                        let y = engine.predict(x.row(i)).expect("predict failed");
+                        check(y, i);
+                        sent.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+
+    // All swaps landed; the final version is active and per-model counters
+    // survived every swap (stats are shared across versions).
+    let mv = registry.resolve(Some("m"), None).unwrap();
+    assert_eq!(mv.version(), SWAPS + 1);
+    let info = &registry.list()[0];
+    assert_eq!(info.requests, sent.load(Ordering::Relaxed));
+    assert_eq!(info.errors, 0);
+    assert_eq!(engine.stats().errors.get(), 0);
     engine.shutdown();
 }
 
