@@ -127,6 +127,7 @@ fn main() {
                     ..Default::default()
                 },
                 workers: bench_workers,
+                ..EngineConfig::default()
             },
         )
         .unwrap();
@@ -149,6 +150,7 @@ fn main() {
                     ..Default::default()
                 },
                 workers,
+                ..EngineConfig::default()
             },
         )
         .unwrap();
@@ -171,6 +173,7 @@ fn main() {
                     ..Default::default()
                 },
                 workers: bench_workers,
+                ..EngineConfig::default()
             },
         )
         .unwrap();
@@ -208,6 +211,7 @@ fn main() {
                     ..Default::default()
                 },
                 workers: bench_workers,
+                ..EngineConfig::default()
             },
         )
         .unwrap();

@@ -67,6 +67,7 @@ fn main() {
                 ..Default::default()
             },
             workers,
+            ..EngineConfig::default()
         },
     )
     .unwrap();

@@ -145,6 +145,9 @@ COMMANDS:
                 [--default-model <name>]  (which model unnamed requests hit)
                 [--config <toml>] [--addr host:port] [--backend pjrt|native]
                 [--workers N]  (engine executor-pool size, default 1)
+                [--request-timeout-ms T]  (per-request deadline, default 2000)
+                [--max-inflight N]  (admission cap; 0 = auto from queue depth)
+                [--max-conns N]  (concurrent client connections, default 256)
                 [--synth <name>] [--p P]
                 Running servers hot-swap via the load_model / set_default /
                 unload_model wire ops — no restart needed.

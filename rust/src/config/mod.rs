@@ -60,6 +60,22 @@ pub struct ServeConfig {
     /// Which loaded model serves requests that don't name one
     /// (`default_model = "name"`); defaults to the first of `models`.
     pub default_model: Option<String>,
+    /// Per-request deadline in milliseconds: requests still queued past
+    /// this age are dropped with a retryable `deadline_exceeded` error.
+    pub request_timeout_ms: u64,
+    /// Admission-control high-water mark: requests beyond this many in
+    /// flight are shed with a retryable `overloaded` error. 0 sizes the
+    /// cap automatically from `queue_cap` and `workers`.
+    pub max_inflight: usize,
+    /// Maximum concurrent client connections the server accepts; excess
+    /// connections get one `overloaded` error line and are closed.
+    pub max_conns: usize,
+    /// Consecutive batch failures before a model's circuit breaker trips
+    /// open. 0 disables circuit breaking.
+    pub breaker_failures: u64,
+    /// How long a tripped breaker stays open before admitting a half-open
+    /// probe request.
+    pub breaker_cooldown_ms: u64,
 }
 
 impl Default for ServeConfig {
@@ -73,6 +89,11 @@ impl Default for ServeConfig {
             workers: 1,
             models: Vec::new(),
             default_model: None,
+            request_timeout_ms: 2000,
+            max_inflight: 0,
+            max_conns: 256,
+            breaker_failures: 5,
+            breaker_cooldown_ms: 1000,
         }
     }
 }
@@ -153,6 +174,21 @@ impl AppConfig {
             if let Some(v) = s.get("default_model") {
                 cfg.serve.default_model = Some(v.as_str()?.to_string());
             }
+            if let Some(v) = s.get("request_timeout_ms") {
+                cfg.serve.request_timeout_ms = v.as_usize()? as u64;
+            }
+            if let Some(v) = s.get("max_inflight") {
+                cfg.serve.max_inflight = v.as_usize()?;
+            }
+            if let Some(v) = s.get("max_conns") {
+                cfg.serve.max_conns = v.as_usize()?;
+            }
+            if let Some(v) = s.get("breaker_failures") {
+                cfg.serve.breaker_failures = v.as_usize()? as u64;
+            }
+            if let Some(v) = s.get("breaker_cooldown_ms") {
+                cfg.serve.breaker_cooldown_ms = v.as_usize()? as u64;
+            }
         }
         cfg.validate()?;
         Ok(cfg)
@@ -176,6 +212,18 @@ impl AppConfig {
         }
         if self.serve.workers > 256 {
             return Err(Error::invalid("serve.workers must be <= 256"));
+        }
+        if self.serve.request_timeout_ms == 0 {
+            return Err(Error::invalid("serve.request_timeout_ms must be >= 1"));
+        }
+        if self.serve.max_conns == 0 {
+            return Err(Error::invalid("serve.max_conns must be >= 1"));
+        }
+        if self.serve.breaker_failures > 0 && self.serve.breaker_cooldown_ms == 0 {
+            return Err(Error::invalid(
+                "serve.breaker_cooldown_ms must be >= 1 when circuit breaking \
+                 is enabled (serve.breaker_failures > 0)",
+            ));
         }
         let mut names = std::collections::BTreeSet::new();
         for (name, _) in &self.serve.models {
@@ -308,6 +356,32 @@ workers = 4
     }
 
     #[test]
+    fn parses_resilience_keys_with_defaults() {
+        let cfg = AppConfig::parse("").unwrap();
+        assert_eq!(cfg.serve.request_timeout_ms, 2000);
+        assert_eq!(cfg.serve.max_inflight, 0, "0 = auto-sized");
+        assert_eq!(cfg.serve.max_conns, 256);
+        assert_eq!(cfg.serve.breaker_failures, 5);
+        assert_eq!(cfg.serve.breaker_cooldown_ms, 1000);
+        let cfg = AppConfig::parse(
+            "[serve]\nrequest_timeout_ms = 500\nmax_inflight = 64\n\
+             max_conns = 8\nbreaker_failures = 3\nbreaker_cooldown_ms = 250\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.serve.request_timeout_ms, 500);
+        assert_eq!(cfg.serve.max_inflight, 64);
+        assert_eq!(cfg.serve.max_conns, 8);
+        assert_eq!(cfg.serve.breaker_failures, 3);
+        assert_eq!(cfg.serve.breaker_cooldown_ms, 250);
+        // breaker_failures = 0 disables breaking; cooldown then irrelevant.
+        let cfg = AppConfig::parse(
+            "[serve]\nbreaker_failures = 0\nbreaker_cooldown_ms = 0\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.serve.breaker_failures, 0);
+    }
+
+    #[test]
     fn rejects_invalid_values() {
         assert!(AppConfig::parse("[train]\nlambda = 0.0\n").is_err());
         assert!(AppConfig::parse("[train]\np = 0\n").is_err());
@@ -316,5 +390,11 @@ workers = 4
         assert!(AppConfig::parse("[train]\nepsilon = 2.0\n").is_err());
         assert!(AppConfig::parse("[serve]\nworkers = 0\n").is_err());
         assert!(AppConfig::parse("[serve]\nworkers = 1000\n").is_err());
+        assert!(AppConfig::parse("[serve]\nrequest_timeout_ms = 0\n").is_err());
+        assert!(AppConfig::parse("[serve]\nmax_conns = 0\n").is_err());
+        assert!(AppConfig::parse(
+            "[serve]\nbreaker_failures = 2\nbreaker_cooldown_ms = 0\n"
+        )
+        .is_err());
     }
 }

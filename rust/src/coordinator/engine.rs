@@ -28,23 +28,48 @@
 //! comes from `EngineConfig::workers` (config key `serve.workers`, CLI
 //! `--workers`).
 //!
-//! Backpressure: the aggregate queue bound is `queue_cap`, sharded as
-//! `ceil(queue_cap / workers)` per queue; when every queue is full,
-//! `predict` returns `ErrorKind::Runtime` ("queue full") instead of
-//! blocking forever — callers decide whether to retry.
+//! Backpressure and resilience (the failure-domain contract):
+//!
+//! - **Admission control.** A shared in-flight gauge with a high-water
+//!   mark caps concurrent requests at `EngineConfig::max_inflight`
+//!   (`serve.max_inflight`; 0 = auto, 2× the aggregate queue bound).
+//!   Requests beyond the cap — and requests that find every worker queue
+//!   full — are shed up front with a retryable `ErrorKind::Overloaded`
+//!   instead of blocking forever. An RAII [`InflightToken`] rides inside
+//!   each job so the gauge is released exactly once on every exit path
+//!   (reply, deadline drop, shed, drain).
+//! - **Request deadlines.** Every job carries
+//!   `enqueue time + EngineConfig::request_timeout`
+//!   (`serve.request_timeout_ms`, default 2000). Workers drop expired jobs
+//!   at dequeue with a retryable `ErrorKind::DeadlineExceeded` — no cycles
+//!   burned computing for a client that already gave up — and the caller
+//!   additionally bounds its reply wait at deadline + a small grace, so a
+//!   stalled worker cannot hang a client past its deadline.
+//! - **Worker supervision.** Each batch executes under `catch_unwind`
+//!   (with the `testing::faults` injection site inside the guard): a
+//!   panicking batch fails its jobs with a structured "worker panicked"
+//!   error, bumps `EngineStats::worker_panics`, and the worker's
+//!   supervisor loop re-enters service on the same thread — the pool never
+//!   shrinks (`EngineStats::workers_alive` tracks it).
+//! - **Circuit breaking.** Batch outcomes feed the per-model
+//!   [`CircuitBreaker`](crate::registry::CircuitBreaker) living in the
+//!   registry's shared `ModelStats`; after `EngineConfig::breaker_failures`
+//!   consecutive failures the model's requests are rejected up front with
+//!   a retryable `circuit_open` error until a half-open probe succeeds.
 
 use super::batcher::{Batcher, BatcherConfig};
 use super::ServingModel;
 use crate::linalg::Mat;
-use crate::metrics::{Counter, LatencyHistogram};
+use crate::metrics::{Counter, Gauge, LatencyHistogram};
 use crate::registry::{ModelRegistry, ModelVersion};
 use crate::runtime::Runtime;
 use crate::util::{Error, Result};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{sync_channel, Receiver, RecvTimeoutError, SyncSender, TrySendError};
-use std::sync::Arc;
-use std::time::Instant;
+use std::sync::{Arc, Mutex, RwLock};
+use std::time::{Duration, Instant};
 
 /// Which compute backend executes batches.
 #[derive(Debug, Clone)]
@@ -63,6 +88,18 @@ pub struct EngineConfig {
     /// Number of executor workers. Each owns its own backend instance and
     /// batches independently; 0 is treated as 1.
     pub workers: usize,
+    /// Per-request deadline (`serve.request_timeout_ms`). Jobs that expire
+    /// before a worker dequeues them fail with `DeadlineExceeded`.
+    pub request_timeout: Duration,
+    /// Admission cap on concurrent in-flight requests
+    /// (`serve.max_inflight`); 0 = auto (2× the aggregate queue bound).
+    /// Requests beyond the cap are shed with a retryable `Overloaded`.
+    pub max_inflight: usize,
+    /// Consecutive model failures that trip its circuit breaker
+    /// (`serve.breaker_failures`); 0 disables breaking.
+    pub breaker_failures: u64,
+    /// Breaker open→half-open cooldown (`serve.breaker_cooldown_ms`).
+    pub breaker_cooldown: Duration,
 }
 
 impl Default for EngineConfig {
@@ -73,6 +110,10 @@ impl Default for EngineConfig {
             },
             batcher: BatcherConfig::default(),
             workers: 1,
+            request_timeout: Duration::from_millis(2000),
+            max_inflight: 0,
+            breaker_failures: 5,
+            breaker_cooldown: Duration::from_millis(1000),
         }
     }
 }
@@ -85,6 +126,19 @@ pub struct EngineStats {
     pub padded_slots: Counter,
     pub errors: Counter,
     pub latency: LatencyHistogram,
+    /// Batches that panicked under the worker's `catch_unwind` guard.
+    pub worker_panics: Counter,
+    /// Jobs dropped at dequeue because their deadline had already expired.
+    pub deadline_expired: Counter,
+    /// Requests rejected up front by admission control (in-flight cap or
+    /// all queues full).
+    pub shed: Counter,
+    /// Concurrent in-flight requests (admission → reply); the high-water
+    /// mark is the observed peak.
+    pub inflight: Gauge,
+    /// Executor workers currently in service; supervision keeps this at
+    /// the configured pool size.
+    pub workers_alive: Gauge,
 }
 
 impl EngineStats {
@@ -98,6 +152,25 @@ impl EngineStats {
     }
 }
 
+/// RAII guard for the in-flight gauge: created at admission, decrements on
+/// drop. It travels inside the [`Job`], so whichever path consumes the job
+/// — normal reply, deadline drop, worker panic, queue-close drain, or an
+/// enqueue that never succeeded — releases the slot exactly once.
+struct InflightToken(Arc<EngineStats>);
+
+impl InflightToken {
+    fn new(stats: Arc<EngineStats>) -> Self {
+        stats.inflight.inc();
+        Self(stats)
+    }
+}
+
+impl Drop for InflightToken {
+    fn drop(&mut self) {
+        self.0.inflight.dec();
+    }
+}
+
 struct Job {
     x: Vec<f64>,
     /// The model version this request resolved at enqueue time. The whole
@@ -105,13 +178,26 @@ struct Job {
     /// mid-flight cannot mix versions.
     mv: Arc<ModelVersion>,
     enqueued: Instant,
+    /// Workers drop the job unserved once this passes (`DeadlineExceeded`).
+    deadline: Instant,
     reply: SyncSender<Result<f64>>,
+    /// Holds the in-flight slot for the job's whole life.
+    _inflight: InflightToken,
 }
 
+/// Extra time the caller waits past the request deadline for the worker's
+/// structured reply (covers a worker that dequeued just before expiry).
+const REPLY_GRACE: Duration = Duration::from_millis(250);
+
 /// Handle to a running serving engine (the executor pool).
+///
+/// Interior mutability on the shutdown path (`senders` behind a `RwLock`,
+/// worker handles behind a `Mutex`) lets [`Engine::stop`] take `&self`, so
+/// one thread can stop the engine while others are mid-`predict` — those
+/// requests drain or fail with "engine stopped", never hang.
 pub struct Engine {
-    senders: Vec<SyncSender<Job>>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    senders: RwLock<Vec<SyncSender<Job>>>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
     next: AtomicUsize,
     stats: Arc<EngineStats>,
     /// Requests served per worker — dispatch-balance observability.
@@ -121,6 +207,9 @@ pub struct Engine {
     n_workers: usize,
     /// Largest compiled batch size — sizes the `predict_many` submitter pool.
     max_batch: usize,
+    request_timeout: Duration,
+    /// Resolved admission cap (auto already applied).
+    max_inflight: usize,
 }
 
 impl Engine {
@@ -157,9 +246,19 @@ impl Engine {
                  (artifact shapes are pinned to it)",
             ));
         }
+        // Per-model circuit breaking is engine policy applied to the shared
+        // registry: every current and future model gets it.
+        registry.set_breaker_policy(cfg.breaker_failures, cfg.breaker_cooldown);
         let stats = Arc::new(EngineStats::default());
         let ready = Arc::new(AtomicBool::new(false));
         let per_cap = cfg.batcher.queue_cap_per_worker(n_workers);
+        let max_inflight = if cfg.max_inflight == 0 {
+            // Auto: room for every queue slot plus as much again in flight
+            // (jobs being batched / awaiting replies).
+            (per_cap * n_workers).saturating_mul(2).max(1)
+        } else {
+            cfg.max_inflight
+        };
         let worker_requests: Arc<Vec<Counter>> =
             Arc::new((0..n_workers).map(|_| Counter::new()).collect());
         let (init_tx, init_rx) = sync_channel::<Result<()>>(n_workers);
@@ -208,8 +307,8 @@ impl Engine {
         ready.store(true, Ordering::Release);
         let max_batch = cfg.batcher.batch_sizes.iter().copied().max().unwrap_or(1);
         Ok(Self {
-            senders,
-            workers,
+            senders: RwLock::new(senders),
+            workers: Mutex::new(workers),
             next: AtomicUsize::new(0),
             stats,
             worker_requests,
@@ -217,6 +316,8 @@ impl Engine {
             ready,
             n_workers,
             max_batch,
+            request_timeout: cfg.request_timeout,
+            max_inflight,
         })
     }
 
@@ -246,7 +347,8 @@ impl Engine {
     }
 
     /// Predict against an already-resolved version snapshot (blocks until
-    /// the batch containing the request runs).
+    /// the batch containing the request runs, bounded by the request
+    /// deadline plus a small grace).
     fn predict_resolved(&self, mv: &Arc<ModelVersion>, x: &[f64]) -> Result<f64> {
         if x.len() != mv.model.d() {
             return Err(Error::invalid(format!(
@@ -255,29 +357,63 @@ impl Engine {
                 mv.model.d()
             )));
         }
-        let n = self.senders.len();
+        // Circuit breaker: a model that keeps failing is rejected up front
+        // (retryable) instead of occupying queue slots.
+        mv.stats.breaker.admit(mv.name())?;
+        // Admission control: shed beyond the in-flight cap. The gauge inc
+        // happens inside the token, so the check-then-inc race can only
+        // overshoot by the number of concurrently-admitting threads.
+        if self.stats.inflight.current() >= self.max_inflight as u64 {
+            self.stats.shed.inc();
+            return Err(Error::overloaded(format!(
+                "engine overloaded: {} requests in flight (cap {})",
+                self.stats.inflight.current(),
+                self.max_inflight
+            )));
+        }
+        let token = InflightToken::new(self.stats.clone());
+        let (reply_tx, reply_rx) = sync_channel(1);
+        let enqueued = Instant::now();
+        let job = Job {
+            x: x.to_vec(),
+            mv: mv.clone(),
+            enqueued,
+            deadline: enqueued + self.request_timeout,
+            reply: reply_tx,
+            _inflight: token,
+        };
+        self.try_enqueue(job)?; // on Err the job (and its token) dropped here
+        // Bound the reply wait: even a wedged worker cannot hang the caller
+        // past deadline + grace. The worker side replies through the
+        // structured paths (result / deadline drop / panic / drain) in the
+        // common case; this timeout is the backstop.
+        match reply_rx.recv_timeout(self.request_timeout + REPLY_GRACE) {
+            Ok(res) => res,
+            Err(RecvTimeoutError::Timeout) => Err(Error::deadline_exceeded(format!(
+                "no reply within deadline + grace ({:?})",
+                self.request_timeout + REPLY_GRACE
+            ))),
+            Err(RecvTimeoutError::Disconnected) => {
+                Err(Error::runtime("engine dropped request"))
+            }
+        }
+    }
+
+    /// Round-robin dispatch; when the chosen worker's queue is full, the
+    /// remaining workers are tried once before shedding. Holds the senders
+    /// read lock only for the non-blocking sends — never while waiting on
+    /// a reply — so `stop(&self)` can always make progress.
+    fn try_enqueue(&self, mut job: Job) -> Result<()> {
+        let senders = self.senders.read().expect("engine senders lock poisoned");
+        let n = senders.len();
         if n == 0 {
             return Err(Error::runtime("engine stopped"));
         }
-        let (reply_tx, reply_rx) = sync_channel(1);
-        let mut job = Job {
-            x: x.to_vec(),
-            mv: mv.clone(),
-            enqueued: Instant::now(),
-            reply: reply_tx,
-        };
-        // Round-robin dispatch; when the chosen worker's queue is full,
-        // try the remaining workers once before reporting backpressure.
         let start = self.next.fetch_add(1, Ordering::Relaxed);
         let mut disconnected = 0usize;
         for k in 0..n {
-            let tx = &self.senders[(start + k) % n];
-            match tx.try_send(job) {
-                Ok(()) => {
-                    return reply_rx
-                        .recv()
-                        .map_err(|_| Error::runtime("engine dropped request"))?;
-                }
+            match senders[(start + k) % n].try_send(job) {
+                Ok(()) => return Ok(()),
                 Err(TrySendError::Full(j)) => job = j,
                 Err(TrySendError::Disconnected(j)) => {
                     job = j;
@@ -288,7 +424,8 @@ impl Engine {
         if disconnected == n {
             Err(Error::runtime("engine stopped"))
         } else {
-            Err(Error::runtime("queue full (backpressure)"))
+            self.stats.shed.inc();
+            Err(Error::overloaded("queue full (backpressure)"))
         }
     }
 
@@ -379,20 +516,22 @@ impl Engine {
     }
 
     /// Stop the executor pool and wait for it to drain.
-    pub fn shutdown(mut self) {
-        self.shutdown_inner();
+    pub fn shutdown(self) {
+        self.stop();
     }
 
-    /// Stop the pool in place (idempotent). Unlike [`Self::shutdown`] the
-    /// handle stays usable: stats remain readable and later `predict` calls
-    /// return an "engine stopped" error instead of serving.
-    pub fn stop(&mut self) {
-        self.shutdown_inner();
-    }
-
-    fn shutdown_inner(&mut self) {
-        self.senders.clear(); // close every queue
-        for h in self.workers.drain(..) {
+    /// Stop the pool in place (idempotent, callable from any thread while
+    /// other threads are mid-`predict`). Closing the queues lets workers
+    /// drain every job already enqueued — those requests complete with real
+    /// results — and later `predict` calls return an "engine stopped" error
+    /// instead of serving. Stats remain readable afterwards.
+    pub fn stop(&self) {
+        // Close every queue. Requests racing with us either enqueue before
+        // the clear (drained by their worker) or observe the empty senders
+        // list / disconnected channels and fail with "engine stopped".
+        self.senders.write().expect("engine senders lock poisoned").clear();
+        let mut workers = self.workers.lock().expect("engine workers lock poisoned");
+        for h in workers.drain(..) {
             let _ = h.join();
         }
     }
@@ -400,7 +539,7 @@ impl Engine {
 
 impl Drop for Engine {
     fn drop(&mut self) {
-        self.shutdown_inner();
+        self.stop();
     }
 }
 
@@ -442,7 +581,39 @@ fn executor_main(
             return;
         }
     };
-    // ---- batch loop ------------------------------------------------------
+    // ---- supervisor loop -------------------------------------------------
+    // Batch-level panics are caught (and answered) inside `run_group`; this
+    // outer guard is the supervisor for anything that escapes it — the
+    // worker re-enters service on the same OS thread instead of silently
+    // shrinking the pool. The receiver lives out here, so an unwinding
+    // iteration cannot drop the queue (pending callers would see "engine
+    // dropped request" instead of a structured reply).
+    stats.workers_alive.inc();
+    loop {
+        let exit = catch_unwind(AssertUnwindSafe(|| {
+            executor_loop(&rx, &cfg, &batcher, &mut backend, &stats, &worker_requests, widx)
+        }));
+        match exit {
+            Ok(()) => break, // queues closed → clean shutdown
+            Err(_) => {
+                stats.worker_panics.inc();
+                continue; // respawn: pool stays at full strength
+            }
+        }
+    }
+    stats.workers_alive.dec();
+}
+
+/// One worker's batch loop; returns when the engine closes the queues.
+fn executor_loop(
+    rx: &Receiver<Job>,
+    cfg: &EngineConfig,
+    batcher: &Batcher,
+    backend: &mut ExecBackend,
+    stats: &EngineStats,
+    worker_requests: &[Counter],
+    widx: usize,
+) {
     loop {
         // Block for the first job of the next batch.
         let first = match rx.recv() {
@@ -462,24 +633,61 @@ fn executor_main(
                 Err(RecvTimeoutError::Disconnected) => break,
             }
         }
+        // Deadline check at dequeue: don't spend a batch slot computing for
+        // a client that already gave up. Expired jobs get a structured
+        // (retryable) error; their latency still counts — the histogram
+        // must not hide queueing time.
+        let now = Instant::now();
+        let mut live = Vec::with_capacity(jobs.len());
+        for job in jobs {
+            if now >= job.deadline {
+                stats.deadline_expired.inc();
+                let elapsed = job.enqueued.elapsed();
+                stats.latency.record(elapsed);
+                job.mv.stats.latency.record(elapsed);
+                let _ = job.reply.send(Err(Error::deadline_exceeded(format!(
+                    "deadline exceeded after {elapsed:?} in queue"
+                ))));
+            } else {
+                live.push(job);
+            }
+        }
+        if live.is_empty() {
+            continue;
+        }
         // Group the collected jobs by resolved model version (identity of
         // the Arc — two requests naming the same version share a group) and
         // execute one batch per group. Single-model serving degenerates to
         // exactly the old one-batch path.
         let mut groups: Vec<(Arc<ModelVersion>, Vec<Job>)> = Vec::new();
-        for job in jobs {
+        for job in live {
             match groups.iter_mut().find(|(mv, _)| Arc::ptr_eq(mv, &job.mv)) {
                 Some((_, g)) => g.push(job),
                 None => groups.push((job.mv.clone(), vec![job])),
             }
         }
         for (mv, group) in groups {
-            run_group(&mut backend, &batcher, &mv, group, &stats, &worker_requests, widx);
+            run_group(backend, batcher, &mv, group, stats, worker_requests, widx);
         }
     }
 }
 
-/// Execute one same-version group of jobs as a single padded batch.
+/// Best-effort panic payload → message (covers `panic!("...")` and
+/// `panic!(String)`; anything else gets a placeholder).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Execute one same-version group of jobs as a single padded batch. The
+/// compute runs under `catch_unwind` while the jobs stay owned out here, so
+/// a panicking batch (bug or injected fault) still answers every caller
+/// with a structured error instead of dropping their reply channels.
 fn run_group(
     backend: &mut ExecBackend,
     batcher: &Batcher,
@@ -497,15 +705,24 @@ fn run_group(
     for j in &jobs {
         flat.extend(j.x.iter().map(|&v| v as f32));
     }
-    let padded = Batcher::pad_batch(&flat, plan.real, plan.compiled, dim);
-    let result = run_batch(backend, mv, plan.compiled, &padded, dim);
+    let result = catch_unwind(AssertUnwindSafe(|| {
+        crate::testing::faults::worker_site();
+        let padded = Batcher::pad_batch(&flat, plan.real, plan.compiled, dim);
+        run_batch(backend, mv, plan.compiled, &padded, dim)
+    }));
     stats.batches.inc();
     stats.requests.add(plan.real as u64);
     stats.padded_slots.add((plan.compiled - plan.real) as u64);
     worker_requests[widx].add(plan.real as u64);
     mv.stats.requests.add(plan.real as u64);
+    // Batch outcome feeds the model's circuit breaker: one success closes
+    // it / resets the streak, one failure or panic extends the streak.
+    match &result {
+        Ok(Ok(_)) => mv.stats.breaker.record_success(),
+        _ => mv.stats.breaker.record_failure(),
+    }
     match result {
-        Ok(ys) => {
+        Ok(Ok(ys)) => {
             for (i, job) in jobs.into_iter().enumerate() {
                 let elapsed = job.enqueued.elapsed();
                 stats.latency.record(elapsed);
@@ -513,20 +730,37 @@ fn run_group(
                 let _ = job.reply.send(Ok(ys[i] as f64));
             }
         }
-        Err(e) => {
-            stats.errors.inc();
-            mv.stats.errors.inc();
-            for job in jobs {
-                // Failed requests still count toward latency — error
-                // paths must not make the histogram lie about tail time.
-                let elapsed = job.enqueued.elapsed();
-                stats.latency.record(elapsed);
-                mv.stats.latency.record(elapsed);
-                let _ = job
-                    .reply
-                    .send(Err(Error::runtime(format!("batch failed: {e}"))));
-            }
+        Ok(Err(e)) => {
+            fail_group(jobs, stats, mv, Error::runtime(format!("batch failed: {e}")));
         }
+        Err(payload) => {
+            stats.worker_panics.inc();
+            fail_group(
+                jobs,
+                stats,
+                mv,
+                Error::runtime(format!(
+                    "worker panicked mid-batch: {}",
+                    panic_message(payload.as_ref())
+                )),
+            );
+        }
+    }
+}
+
+/// Answer every job in a failed group with (a clone of) `err`; failed
+/// requests still count toward latency — error paths must not make the
+/// histogram lie about tail time.
+fn fail_group(jobs: Vec<Job>, stats: &EngineStats, mv: &Arc<ModelVersion>, err: Error) {
+    stats.errors.inc();
+    mv.stats.errors.inc();
+    for job in jobs {
+        let elapsed = job.enqueued.elapsed();
+        stats.latency.record(elapsed);
+        mv.stats.latency.record(elapsed);
+        let _ = job
+            .reply
+            .send(Err(Error::new(err.kind(), err.message().to_string())));
     }
 }
 
@@ -674,6 +908,7 @@ mod tests {
             backend: Backend::Native,
             batcher: BatcherConfig::default(),
             workers,
+            ..EngineConfig::default()
         }
     }
 
@@ -701,7 +936,12 @@ mod tests {
         bcfg.max_wait = std::time::Duration::from_millis(5);
         let engine = Engine::start(
             sm,
-            EngineConfig { backend: Backend::Native, batcher: bcfg, workers: 1 },
+            EngineConfig {
+                backend: Backend::Native,
+                batcher: bcfg,
+                workers: 1,
+                ..EngineConfig::default()
+            },
         )
         .unwrap();
         let got = engine.predict_many(&x);
@@ -745,7 +985,12 @@ mod tests {
         bcfg.max_wait = std::time::Duration::from_micros(100);
         let engine = Engine::start(
             sm,
-            EngineConfig { backend: Backend::Native, batcher: bcfg, workers: 3 },
+            EngineConfig {
+                backend: Backend::Native,
+                batcher: bcfg,
+                workers: 3,
+                ..EngineConfig::default()
+            },
         )
         .unwrap();
         for i in 0..x.rows() {
@@ -861,6 +1106,7 @@ mod tests {
                 backend: Backend::Pjrt { artifact_dir: dir },
                 batcher: BatcherConfig::default(),
                 workers: 3,
+                ..EngineConfig::default()
             },
         );
         assert!(res.is_err());
@@ -882,6 +1128,7 @@ mod tests {
                 backend: Backend::Pjrt { artifact_dir: dir },
                 batcher: BatcherConfig::default(),
                 workers: 2,
+                ..EngineConfig::default()
             },
         )
         .unwrap();
@@ -916,6 +1163,7 @@ mod tests {
                 backend: Backend::Pjrt { artifact_dir: dir },
                 batcher: BatcherConfig::default(),
                 workers: 2,
+                ..EngineConfig::default()
             },
         )
         .unwrap();
@@ -929,7 +1177,7 @@ mod tests {
     #[test]
     fn shutdown_then_predict_errors() {
         let (x, sm) = serving_model(20, 8, 8);
-        let mut engine = Engine::start(sm, native_cfg(2)).unwrap();
+        let engine = Engine::start(sm, native_cfg(2)).unwrap();
         engine.predict(x.row(0)).unwrap();
         assert_eq!(engine.stats().requests.get(), 1);
         engine.stop();
@@ -959,6 +1207,82 @@ mod tests {
         }
         assert_eq!(engine.stats().requests.get(), 300);
         assert_eq!(engine.stats().latency.count(), 300);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn stop_under_load_resolves_every_request() {
+        // stop(&self) racing 8 predict threads: every request must resolve
+        // to a real result or a structured "engine stopped" error — no
+        // hangs, no dropped responders — and the pool must wind down to 0.
+        let (x, sm) = serving_model(40, 8, 8);
+        let engine = Engine::start(sm, native_cfg(2)).unwrap();
+        assert_eq!(engine.stats().workers_alive.current(), 2);
+        let outcomes: Vec<Result<f64>> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..8)
+                .map(|t: usize| {
+                    let engine = &engine;
+                    let x = &x;
+                    s.spawn(move || {
+                        (0..25)
+                            .map(|i| engine.predict(x.row((t * 5 + i) % x.rows())))
+                            .collect::<Vec<_>>()
+                    })
+                })
+                .collect();
+            std::thread::sleep(std::time::Duration::from_millis(2));
+            engine.stop();
+            handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+        });
+        assert_eq!(outcomes.len(), 200);
+        let mut stopped = 0usize;
+        for r in &outcomes {
+            match r {
+                Ok(v) => assert!(v.is_finite()),
+                Err(e) => {
+                    assert!(
+                        e.message().contains("engine stopped"),
+                        "unexpected failure mode: {e}"
+                    );
+                    stopped += 1;
+                }
+            }
+        }
+        assert!(stopped > 0, "stop landed after all 200 requests finished");
+        assert_eq!(engine.stats().workers_alive.current(), 0);
+        assert_eq!(engine.stats().inflight.current(), 0, "leaked in-flight slot");
+    }
+
+    #[test]
+    fn admission_cap_sheds_with_retryable_overloaded() {
+        let (x, sm) = serving_model(20, 8, 8);
+        let mut bcfg = BatcherConfig::default();
+        bcfg.max_wait = std::time::Duration::from_millis(300);
+        let engine = Engine::start(
+            sm,
+            EngineConfig {
+                backend: Backend::Native,
+                batcher: bcfg,
+                workers: 1,
+                max_inflight: 1,
+                ..EngineConfig::default()
+            },
+        )
+        .unwrap();
+        std::thread::scope(|s| {
+            let first = s.spawn(|| engine.predict(x.row(0)));
+            // Give the first request time to be admitted; it then sits in
+            // the batcher for up to max_wait holding the only slot.
+            std::thread::sleep(std::time::Duration::from_millis(60));
+            let err = engine.predict(x.row(1)).unwrap_err();
+            assert_eq!(err.kind(), crate::util::ErrorKind::Overloaded);
+            assert!(err.retryable());
+            assert!(err.message().contains("overloaded"), "{err}");
+            assert!(first.join().unwrap().is_ok(), "admitted request still served");
+        });
+        assert!(engine.stats().shed.get() >= 1);
+        assert_eq!(engine.stats().inflight.high_water(), 1);
+        assert_eq!(engine.stats().inflight.current(), 0);
         engine.shutdown();
     }
 }

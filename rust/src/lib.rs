@@ -67,6 +67,33 @@
 //!   bit-identical because per-entry kernel values are independent of
 //!   block column order.
 //!
+//! ## Serving resilience
+//!
+//! The serving path is built to fail structurally, never silently
+//! ([`coordinator::engine`], [`server`], [`registry::CircuitBreaker`]):
+//!
+//! - **Worker supervision** — executor workers run every batch under
+//!   `catch_unwind`; a panicking batch fails its own jobs with a
+//!   structured `runtime` error, bumps `worker_panics`, and the worker
+//!   keeps serving, so the pool never shrinks (`workers_alive` gauge).
+//! - **Request deadlines** — every request carries a deadline
+//!   (`serve.request_timeout_ms`, default 2000); jobs that expire while
+//!   queued are dropped at dequeue with a retryable `deadline_exceeded`
+//!   error, and the caller's reply wait is bounded by deadline + grace
+//!   even if a worker wedges. The wire [`server::Client`] adds a socket
+//!   read deadline and jittered-exponential connect retries.
+//! - **Load shedding** — admission control rejects work beyond
+//!   `serve.max_inflight` concurrent requests (retryable `overloaded`),
+//!   and each model has a circuit breaker
+//!   (`serve.breaker_failures` / `serve.breaker_cooldown_ms`) that trips
+//!   open after consecutive batch failures and recovers through a single
+//!   half-open probe.
+//! - **Fault injection** ([`testing::faults`]) — `FASTKRR_FAULTS=`
+//!   `panic_worker:0.05,stall:0.1,stall_ms:50,seed:7` deterministically
+//!   injects worker panics and stalls at the batch-compute site;
+//!   `tests/resilience.rs` soaks hot-swaps, panics, stalls, and overload
+//!   under it (nightly CI runs it with faults on).
+//!
 //! ## Replaying property-test failures
 //!
 //! The seeded suites print `replay with FASTKRR_PROP_SEED=<seed>` on

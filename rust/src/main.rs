@@ -250,6 +250,19 @@ fn serve_registry(
             "--workers must be in [1, 256]",
         ));
     }
+    let request_timeout_ms = args
+        .flag_u64("request-timeout-ms")?
+        .unwrap_or(cfg.serve.request_timeout_ms);
+    if request_timeout_ms == 0 {
+        return Err(fastkrr::util::Error::invalid(
+            "--request-timeout-ms must be >= 1",
+        ));
+    }
+    let max_inflight = args.flag_usize("max-inflight")?.unwrap_or(cfg.serve.max_inflight);
+    let max_conns = args.flag_usize("max-conns")?.unwrap_or(cfg.serve.max_conns);
+    if max_conns == 0 {
+        return Err(fastkrr::util::Error::invalid("--max-conns must be >= 1"));
+    }
     let n_models = registry.len();
     let engine = Engine::start_with_registry(
         registry,
@@ -261,10 +274,18 @@ fn serve_registry(
                 ..Default::default()
             },
             workers,
+            request_timeout: std::time::Duration::from_millis(request_timeout_ms),
+            max_inflight,
+            breaker_failures: cfg.serve.breaker_failures,
+            breaker_cooldown: std::time::Duration::from_millis(cfg.serve.breaker_cooldown_ms),
         },
     )?;
     let addr = args.flag("addr").unwrap_or(&cfg.serve.addr).to_string();
-    let server = Server::start(&addr, engine)?;
+    let server = Server::start_with(
+        &addr,
+        engine,
+        fastkrr::server::ServerConfig { max_conns },
+    )?;
     println!(
         "serving {source} ({n_models} loaded, default '{default_name}': d={d}, p={p}) on {} \
          [backend={backend_name}, workers={workers}] — Ctrl-C to stop",

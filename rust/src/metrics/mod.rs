@@ -28,6 +28,52 @@ impl Counter {
     }
 }
 
+/// Up/down gauge with a monotonic high-water mark (thread-safe). Used for
+/// the serving engine's in-flight request count and live-worker count;
+/// `inc`/`dec` must be paired by the caller (RAII tokens on the engine
+/// side guarantee this).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    current: AtomicU64,
+    high_water: AtomicU64,
+}
+
+impl Gauge {
+    pub fn new() -> Self {
+        Self::default()
+    }
+    /// Increment and return the new current value; updates the high-water
+    /// mark.
+    pub fn inc(&self) -> u64 {
+        let cur = self.current.fetch_add(1, Ordering::Relaxed) + 1;
+        self.high_water.fetch_max(cur, Ordering::Relaxed);
+        cur
+    }
+    /// Decrement (saturating at 0 defensively — a mismatch is a caller bug
+    /// but must not wrap the gauge to 2⁶⁴).
+    pub fn dec(&self) {
+        let mut cur = self.current.load(Ordering::Relaxed);
+        while cur > 0 {
+            match self.current.compare_exchange_weak(
+                cur,
+                cur - 1,
+                Ordering::Relaxed,
+                Ordering::Relaxed,
+            ) {
+                Ok(_) => return,
+                Err(seen) => cur = seen,
+            }
+        }
+    }
+    pub fn current(&self) -> u64 {
+        self.current.load(Ordering::Relaxed)
+    }
+    /// Largest value `current` ever reached.
+    pub fn high_water(&self) -> u64 {
+        self.high_water.load(Ordering::Relaxed)
+    }
+}
+
 /// Hit/miss/eviction counters for a cache (e.g. the kernel-block cache).
 /// All counters are thread-safe; `hit_rate` is a point-in-time snapshot.
 #[derive(Debug, Default)]
@@ -239,6 +285,34 @@ mod tests {
             }
         });
         assert_eq!(c.get(), 8000);
+    }
+
+    #[test]
+    fn gauge_tracks_current_and_high_water() {
+        let g = Gauge::new();
+        assert_eq!(g.current(), 0);
+        assert_eq!(g.high_water(), 0);
+        g.inc();
+        g.inc();
+        assert_eq!(g.current(), 2);
+        g.dec();
+        assert_eq!(g.current(), 1);
+        assert_eq!(g.high_water(), 2, "high water survives the dec");
+        g.dec();
+        g.dec(); // extra dec saturates at 0 instead of wrapping
+        assert_eq!(g.current(), 0);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for _ in 0..100 {
+                        g.inc();
+                        g.dec();
+                    }
+                });
+            }
+        });
+        assert_eq!(g.current(), 0);
+        assert!(g.high_water() >= 2);
     }
 
     #[test]

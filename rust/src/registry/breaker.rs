@@ -1,0 +1,313 @@
+//! Per-model circuit breaker.
+//!
+//! Classic three-state breaker guarding one model name: **closed** (serving
+//! normally) → trips **open** after K *consecutive* batch failures (requests
+//! are rejected up front with a retryable `circuit_open` error instead of
+//! burning a worker slot on a model that keeps failing) → **half-open**
+//! after a cooldown, letting exactly one probe request through; a probe
+//! success closes the breaker, a probe failure re-opens it for another
+//! cooldown.
+//!
+//! The breaker lives in [`ModelStats`](super::ModelStats) so hot-swapping a
+//! version neither resets the failure streak nor loses the open state — a
+//! *publish* that fixes the model closes the breaker the honest way, by its
+//! first successful probe.
+//!
+//! All state is lock-free atomics; timestamps are milliseconds since a
+//! process-local epoch so they fit an `AtomicU64`. A threshold of 0
+//! disables the breaker entirely (the default — policy is applied
+//! explicitly by the engine from `serve.breaker_failures` /
+//! `serve.breaker_cooldown_ms`).
+
+use crate::util::{Error, Result};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::OnceLock;
+use std::time::{Duration, Instant};
+
+const CLOSED: u8 = 0;
+const OPEN: u8 = 1;
+const HALF_OPEN: u8 = 2;
+
+/// Milliseconds elapsed since the first call in this process. Monotonic,
+/// cheap, and small enough to store in an `AtomicU64`.
+fn now_ms() -> u64 {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_millis() as u64
+}
+
+/// Observable breaker state.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BreakerState {
+    Closed,
+    Open,
+    HalfOpen,
+}
+
+impl BreakerState {
+    /// Stable lowercase name used in `stats` replies.
+    pub fn name(&self) -> &'static str {
+        match self {
+            BreakerState::Closed => "closed",
+            BreakerState::Open => "open",
+            BreakerState::HalfOpen => "half_open",
+        }
+    }
+}
+
+/// Lock-free circuit breaker; see the module docs for the state machine.
+#[derive(Debug, Default)]
+pub struct CircuitBreaker {
+    state: AtomicU8,
+    /// Consecutive failures since the last success (resets on success).
+    consecutive: AtomicU64,
+    /// `now_ms()` when the breaker last opened (or granted an escape probe).
+    opened_at: AtomicU64,
+    /// Times the breaker tripped closed→open or re-opened from half-open.
+    trips: AtomicU64,
+    /// Trip threshold; 0 disables the breaker.
+    threshold: AtomicU64,
+    cooldown_ms: AtomicU64,
+}
+
+impl CircuitBreaker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Set the trip threshold (0 disables) and cooldown. Safe to call while
+    /// serving; a disabled breaker force-closes so stale opens can't wedge.
+    pub fn set_policy(&self, failures: u64, cooldown: Duration) {
+        self.threshold.store(failures, Ordering::Relaxed);
+        self.cooldown_ms
+            .store(cooldown.as_millis().min(u64::MAX as u128) as u64, Ordering::Relaxed);
+        if failures == 0 {
+            self.state.store(CLOSED, Ordering::Relaxed);
+        }
+    }
+
+    fn enabled(&self) -> bool {
+        self.threshold.load(Ordering::Relaxed) > 0
+    }
+
+    /// Admission check, called before a request is enqueued. `Err` carries
+    /// a retryable `circuit_open` error naming the model.
+    pub fn admit(&self, name: &str) -> Result<()> {
+        if !self.enabled() {
+            return Ok(());
+        }
+        match self.state.load(Ordering::Acquire) {
+            CLOSED => Ok(()),
+            OPEN => {
+                let cooldown = self.cooldown_ms.load(Ordering::Relaxed);
+                let opened = self.opened_at.load(Ordering::Relaxed);
+                if now_ms().saturating_sub(opened) >= cooldown {
+                    // Cooldown elapsed: exactly one caller wins the CAS and
+                    // becomes the half-open probe; the rest stay rejected.
+                    if self
+                        .state
+                        .compare_exchange(OPEN, HALF_OPEN, Ordering::AcqRel, Ordering::Acquire)
+                        .is_ok()
+                    {
+                        return Ok(());
+                    }
+                }
+                Err(Self::open_err(name, cooldown))
+            }
+            _ => {
+                // HALF_OPEN: a probe is already in flight. If its outcome
+                // never arrived (e.g. the probe was deadline-dropped before
+                // reaching a worker), allow a fresh probe after a second
+                // cooldown so the breaker can't wedge half-open forever.
+                let cooldown = self.cooldown_ms.load(Ordering::Relaxed);
+                let opened = self.opened_at.load(Ordering::Relaxed);
+                let now = now_ms();
+                if now.saturating_sub(opened) >= cooldown.saturating_mul(2)
+                    && self
+                        .opened_at
+                        .compare_exchange(opened, now.saturating_sub(cooldown), Ordering::AcqRel, Ordering::Acquire)
+                        .is_ok()
+                {
+                    return Ok(());
+                }
+                Err(Self::open_err(name, cooldown))
+            }
+        }
+    }
+
+    fn open_err(name: &str, cooldown_ms: u64) -> Error {
+        Error::circuit_open(format!(
+            "circuit breaker open for model '{name}' \
+             (retry after ~{cooldown_ms}ms)"
+        ))
+    }
+
+    /// Record a successful batch for this model: the failure streak resets
+    /// and the breaker closes (a half-open probe succeeded, or it was
+    /// already closed).
+    pub fn record_success(&self) {
+        self.consecutive.store(0, Ordering::Relaxed);
+        if self.state.load(Ordering::Acquire) != CLOSED {
+            self.state.store(CLOSED, Ordering::Release);
+        }
+    }
+
+    /// Record a failed batch. From half-open this re-opens immediately
+    /// (the probe failed); from closed it trips once the consecutive
+    /// failure count reaches the threshold.
+    pub fn record_failure(&self) {
+        let streak = self.consecutive.fetch_add(1, Ordering::Relaxed) + 1;
+        if !self.enabled() {
+            return;
+        }
+        match self.state.load(Ordering::Acquire) {
+            HALF_OPEN => self.trip(HALF_OPEN),
+            CLOSED if streak >= self.threshold.load(Ordering::Relaxed) => self.trip(CLOSED),
+            _ => {}
+        }
+    }
+
+    fn trip(&self, from: u8) {
+        if self
+            .state
+            .compare_exchange(from, OPEN, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+        {
+            self.opened_at.store(now_ms(), Ordering::Relaxed);
+            self.trips.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    pub fn state(&self) -> BreakerState {
+        if !self.enabled() {
+            return BreakerState::Closed;
+        }
+        match self.state.load(Ordering::Acquire) {
+            OPEN => BreakerState::Open,
+            HALF_OPEN => BreakerState::HalfOpen,
+            _ => BreakerState::Closed,
+        }
+    }
+
+    /// Times this breaker has tripped open (including half-open re-opens).
+    pub fn trips(&self) -> u64 {
+        self.trips.load(Ordering::Relaxed)
+    }
+
+    /// Current consecutive-failure streak.
+    pub fn consecutive_failures(&self) -> u64 {
+        self.consecutive.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_breaker_never_trips() {
+        let b = CircuitBreaker::new();
+        for _ in 0..100 {
+            b.record_failure();
+            assert!(b.admit("m").is_ok());
+        }
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert_eq!(b.trips(), 0);
+        assert_eq!(b.consecutive_failures(), 100);
+    }
+
+    #[test]
+    fn trips_after_threshold_and_rejects() {
+        let b = CircuitBreaker::new();
+        b.set_policy(3, Duration::from_secs(60));
+        b.record_failure();
+        b.record_failure();
+        assert!(b.admit("m").is_ok(), "below threshold");
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.trips(), 1);
+        let err = b.admit("m").unwrap_err();
+        assert!(err.retryable());
+        assert!(err.message().contains("circuit breaker open"), "{err}");
+        assert!(err.message().contains('m'));
+    }
+
+    #[test]
+    fn success_resets_streak() {
+        let b = CircuitBreaker::new();
+        b.set_policy(3, Duration::from_secs(60));
+        b.record_failure();
+        b.record_failure();
+        b.record_success();
+        assert_eq!(b.consecutive_failures(), 0);
+        b.record_failure();
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Closed, "streak restarted");
+    }
+
+    #[test]
+    fn half_open_probe_success_closes() {
+        let b = CircuitBreaker::new();
+        b.set_policy(1, Duration::from_millis(20));
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        assert!(b.admit("m").is_err(), "cooldown not elapsed");
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(b.admit("m").is_ok(), "cooldown elapsed: probe admitted");
+        assert_eq!(b.state(), BreakerState::HalfOpen);
+        assert!(b.admit("m").is_err(), "only one probe at a time");
+        b.record_success();
+        assert_eq!(b.state(), BreakerState::Closed);
+        assert!(b.admit("m").is_ok());
+    }
+
+    #[test]
+    fn half_open_probe_failure_reopens() {
+        let b = CircuitBreaker::new();
+        b.set_policy(1, Duration::from_millis(10));
+        b.record_failure();
+        std::thread::sleep(Duration::from_millis(15));
+        assert!(b.admit("m").is_ok());
+        b.record_failure();
+        assert_eq!(b.state(), BreakerState::Open);
+        assert_eq!(b.trips(), 2, "re-open counts as a trip");
+        assert!(b.admit("m").is_err());
+    }
+
+    #[test]
+    fn stuck_half_open_probe_escapes_after_double_cooldown() {
+        let b = CircuitBreaker::new();
+        b.set_policy(1, Duration::from_millis(10));
+        b.record_failure();
+        std::thread::sleep(Duration::from_millis(15));
+        assert!(b.admit("m").is_ok(), "first probe admitted...");
+        // ...but its outcome never gets recorded (deadline-dropped).
+        assert!(b.admit("m").is_err(), "second probe rejected immediately");
+        std::thread::sleep(Duration::from_millis(25));
+        assert!(b.admit("m").is_ok(), "escape probe after 2x cooldown");
+        b.record_success();
+        assert_eq!(b.state(), BreakerState::Closed);
+    }
+
+    #[test]
+    fn concurrent_cooldown_expiry_admits_single_probe() {
+        let b = CircuitBreaker::new();
+        b.set_policy(1, Duration::from_millis(5));
+        b.record_failure();
+        std::thread::sleep(Duration::from_millis(10));
+        let admitted = std::sync::atomic::AtomicU64::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    if b.admit("m").is_ok() {
+                        admitted.fetch_add(1, Ordering::Relaxed);
+                    }
+                });
+            }
+        });
+        assert_eq!(
+            admitted.load(Ordering::Relaxed),
+            1,
+            "exactly one CAS winner becomes the probe"
+        );
+    }
+}

@@ -26,9 +26,14 @@
 //!   landmarks *and* weights; a swap mid-request retires the old version
 //!   from the registry but cannot mix its coefficients with the new one's.
 //!
-//! Per-name [`ModelStats`] (requests / errors / latency) are shared across
-//! versions so a hot-swap does not reset the serving counters; the server's
-//! `stats` op reports them per model.
+//! Per-name [`ModelStats`] (requests / errors / latency / circuit breaker)
+//! are shared across versions so a hot-swap does not reset the serving
+//! counters or the breaker's failure streak; the server's `stats` op
+//! reports them per model.
+
+pub mod breaker;
+
+pub use breaker::{BreakerState, CircuitBreaker};
 
 use crate::coordinator::{model_io, ServingModel};
 use crate::linalg::Mat;
@@ -37,7 +42,9 @@ use crate::rng::Pcg64;
 use crate::util::{Error, Result};
 use std::collections::BTreeMap;
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, RwLock};
+use std::time::Duration;
 
 /// Retired versions kept resolvable per name (besides the active one).
 /// Old enough versions are retired on swap; in-flight requests holding an
@@ -48,12 +55,15 @@ pub const RETAINED_VERSIONS: usize = 4;
 const SELF_CHECK_POINTS: usize = 8;
 
 /// Serving counters for one model name, shared across its versions so a
-/// hot-swap does not reset them.
+/// hot-swap does not reset them. The circuit breaker rides along for the
+/// same reason: a version swap must not erase an open breaker — only a
+/// successful probe closes it.
 #[derive(Debug, Default)]
 pub struct ModelStats {
     pub requests: Counter,
     pub errors: Counter,
     pub latency: LatencyHistogram,
+    pub breaker: CircuitBreaker,
 }
 
 /// One immutable published version of a named model.
@@ -107,6 +117,10 @@ pub struct ModelInfo {
     pub is_default: bool,
     pub requests: u64,
     pub errors: u64,
+    /// Circuit-breaker state name: "closed" / "open" / "half_open".
+    pub circuit: &'static str,
+    /// Times this model's breaker has tripped open.
+    pub breaker_trips: u64,
 }
 
 #[derive(Debug, Clone)]
@@ -131,6 +145,10 @@ pub struct ModelRegistry {
     snap: RwLock<Arc<Snapshot>>,
     /// Serializes writers; readers never take it.
     write: Mutex<()>,
+    /// Breaker policy applied to every model (current and future); 0
+    /// failures disables breaking. Set by the engine from `serve.*` config.
+    breaker_failures: AtomicU64,
+    breaker_cooldown_ms: AtomicU64,
 }
 
 impl ModelRegistry {
@@ -144,6 +162,24 @@ impl ModelRegistry {
 
     fn install(&self, next: Snapshot) {
         *self.snap.write().expect("registry lock poisoned") = Arc::new(next);
+    }
+
+    /// Set the circuit-breaker policy for every model name, current and
+    /// future (`failures = 0` disables breaking entirely, the default).
+    pub fn set_breaker_policy(&self, failures: u64, cooldown: Duration) {
+        self.breaker_failures.store(failures, Ordering::Relaxed);
+        self.breaker_cooldown_ms
+            .store(cooldown.as_millis().min(u64::MAX as u128) as u64, Ordering::Relaxed);
+        for entry in self.snapshot().models.values() {
+            entry.stats.breaker.set_policy(failures, cooldown);
+        }
+    }
+
+    fn apply_breaker_policy(&self, stats: &ModelStats) {
+        stats.breaker.set_policy(
+            self.breaker_failures.load(Ordering::Relaxed),
+            Duration::from_millis(self.breaker_cooldown_ms.load(Ordering::Relaxed)),
+        );
     }
 
     /// Validate, warm up, and atomically publish a new version of `name`.
@@ -174,11 +210,10 @@ impl ModelRegistry {
         let _w = self.write.lock().expect("registry writer lock poisoned");
         let cur = self.snapshot();
         let mut next = (*cur).clone();
-        let entry = next.models.entry(name.to_string()).or_insert_with(|| Entry {
-            versions: BTreeMap::new(),
-            active: 0,
-            next_version: 1,
-            stats: Arc::new(ModelStats::default()),
+        let entry = next.models.entry(name.to_string()).or_insert_with(|| {
+            let stats = Arc::new(ModelStats::default());
+            self.apply_breaker_policy(&stats);
+            Entry { versions: BTreeMap::new(), active: 0, next_version: 1, stats }
         });
         if let Some(active) = entry.versions.get(&entry.active) {
             if active.model.d() != model.d() {
@@ -312,6 +347,8 @@ impl ModelRegistry {
                     is_default: snap.default.as_deref() == Some(name),
                     requests: e.stats.requests.get(),
                     errors: e.stats.errors.get(),
+                    circuit: e.stats.breaker.state().name(),
+                    breaker_trips: e.stats.breaker.trips(),
                 }
             })
             .collect()
@@ -442,6 +479,33 @@ mod tests {
         let v2 = reg.resolve(Some("m"), None).unwrap();
         assert_eq!(v2.stats.requests.get(), 5, "hot-swap must not reset stats");
         assert_eq!(reg.list()[0].requests, 5);
+    }
+
+    #[test]
+    fn breaker_policy_applies_to_existing_and_future_models() {
+        let reg = ModelRegistry::new();
+        reg.publish("old", model(4, 2, 1)).unwrap();
+        reg.set_breaker_policy(2, Duration::from_secs(60));
+        reg.publish("new", model(4, 2, 2)).unwrap();
+        for name in ["old", "new"] {
+            let mv = reg.resolve(Some(name), None).unwrap();
+            mv.stats.breaker.record_failure();
+            mv.stats.breaker.record_failure();
+            assert_eq!(mv.stats.breaker.state(), BreakerState::Open, "{name}");
+            assert!(mv.stats.breaker.admit(name).is_err());
+        }
+        assert!(reg
+            .list()
+            .iter()
+            .all(|i| i.circuit == "open" && i.breaker_trips == 1));
+        // Hot-swap shares stats, so it must not reset an open breaker.
+        reg.publish("old", model(4, 2, 3)).unwrap();
+        let mv = reg.resolve(Some("old"), None).unwrap();
+        assert_eq!(mv.stats.breaker.state(), BreakerState::Open);
+        mv.stats.breaker.record_success();
+        let infos = reg.list();
+        let old = infos.iter().find(|i| i.name == "old").unwrap();
+        assert_eq!(old.circuit, "closed");
     }
 
     #[test]

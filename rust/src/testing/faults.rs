@@ -1,0 +1,249 @@
+//! Deterministic fault-injection harness for resilience testing.
+//!
+//! A [`Faults`] plan assigns probabilities to failure modes at named
+//! injection sites inside the serving stack (currently the executor
+//! worker's batch-compute site). The plan can be installed two ways:
+//!
+//! - **Environment**: `FASTKRR_FAULTS=panic_worker:0.05,stall:0.1,stall_ms:50,seed:7`
+//!   — read once, lazily, the first time any site is evaluated. This is
+//!   how the nightly CI soak turns faults on without recompiling.
+//! - **Programmatic**: [`install`] from a test (overrides the
+//!   environment). `install(None)` turns all injection off.
+//!
+//! Spec keys:
+//!
+//! | key            | meaning                                             |
+//! |----------------|-----------------------------------------------------|
+//! | `panic_worker` | probability a worker batch panics (per batch)       |
+//! | `stall`        | probability a worker batch stalls before computing  |
+//! | `stall_ms`     | stall duration in milliseconds (default 50)         |
+//! | `seed`         | RNG seed for the probability draws (default 0)      |
+//!
+//! Draws come from one seeded [`Pcg64`] stream, so a single-threaded
+//! replay is exactly reproducible; under concurrency the *sequence* of
+//! draws is deterministic even though their assignment to threads is not.
+//!
+//! The hot-path cost when no plan is installed is one relaxed atomic load.
+
+use crate::rng::Pcg64;
+use crate::util::{Error, Result};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
+use std::time::Duration;
+
+/// Injected-panic message marker; panic hooks and log filters can match on
+/// it to separate injected faults from real bugs.
+pub const INJECTED_PANIC_MSG: &str = "injected worker panic (fault harness)";
+
+/// A parsed fault plan. Probabilities are clamped to [0, 1] by `parse`.
+#[derive(Debug, Clone)]
+pub struct Faults {
+    /// Probability that a worker batch panics at the compute site.
+    pub panic_worker: f64,
+    /// Probability that a worker batch stalls for `stall_ms` first.
+    pub stall: f64,
+    /// Stall duration when the stall fault fires.
+    pub stall_ms: u64,
+    /// Seed for the shared draw stream.
+    pub seed: u64,
+}
+
+impl Default for Faults {
+    fn default() -> Self {
+        Self { panic_worker: 0.0, stall: 0.0, stall_ms: 50, seed: 0 }
+    }
+}
+
+impl Faults {
+    /// Parse a `key:value,key:value` spec (the `FASTKRR_FAULTS` format).
+    /// Unknown keys are rejected so typos fail loudly instead of silently
+    /// disabling a fault.
+    pub fn parse(spec: &str) -> Result<Self> {
+        let mut f = Faults::default();
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, value) = part.split_once(':').ok_or_else(|| {
+                Error::invalid(format!("bad fault spec '{part}': expected key:value"))
+            })?;
+            let bad = |what: &str| {
+                Error::invalid(format!("bad fault spec '{part}': {what}"))
+            };
+            match key.trim() {
+                "panic_worker" => {
+                    f.panic_worker = value
+                        .trim()
+                        .parse::<f64>()
+                        .map_err(|_| bad("probability must be a number"))?
+                        .clamp(0.0, 1.0);
+                }
+                "stall" => {
+                    f.stall = value
+                        .trim()
+                        .parse::<f64>()
+                        .map_err(|_| bad("probability must be a number"))?
+                        .clamp(0.0, 1.0);
+                }
+                "stall_ms" => {
+                    f.stall_ms = value
+                        .trim()
+                        .parse::<u64>()
+                        .map_err(|_| bad("duration must be an integer (ms)"))?;
+                }
+                "seed" => {
+                    f.seed = value
+                        .trim()
+                        .parse::<u64>()
+                        .map_err(|_| bad("seed must be an integer"))?;
+                }
+                other => {
+                    return Err(Error::invalid(format!(
+                        "unknown fault key '{other}' \
+                         (panic_worker|stall|stall_ms|seed)"
+                    )))
+                }
+            }
+        }
+        Ok(f)
+    }
+
+    /// Whether this plan can ever fire.
+    pub fn any_active(&self) -> bool {
+        self.panic_worker > 0.0 || self.stall > 0.0
+    }
+}
+
+/// Active plan plus its seeded draw stream.
+struct ActivePlan {
+    faults: Faults,
+    rng: Mutex<Pcg64>,
+}
+
+/// Fast-path gate: false ⇒ every site is a single relaxed load.
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+fn slot() -> &'static RwLock<Option<Arc<ActivePlan>>> {
+    static SLOT: OnceLock<RwLock<Option<Arc<ActivePlan>>>> = OnceLock::new();
+    SLOT.get_or_init(|| RwLock::new(None))
+}
+
+/// One-time env initialization marker: after the first site evaluation (or
+/// the first explicit [`install`]) the environment is never re-read.
+static ENV_LOADED: OnceLock<()> = OnceLock::new();
+
+fn ensure_env_loaded() {
+    ENV_LOADED.get_or_init(|| {
+        if let Ok(spec) = std::env::var("FASTKRR_FAULTS") {
+            match Faults::parse(&spec) {
+                Ok(f) => set_plan(Some(f)),
+                Err(e) => eprintln!("FASTKRR_FAULTS ignored: {e}"),
+            }
+        }
+    });
+}
+
+fn set_plan(f: Option<Faults>) {
+    let next = f.filter(Faults::any_active).map(|faults| {
+        let rng = Mutex::new(Pcg64::new(faults.seed));
+        Arc::new(ActivePlan { faults, rng })
+    });
+    let enabled = next.is_some();
+    *slot().write().expect("fault slot poisoned") = next;
+    ENABLED.store(enabled, Ordering::Release);
+}
+
+/// Install a fault plan (tests), overriding any `FASTKRR_FAULTS`
+/// environment plan; `None` disables all injection. Global per process —
+/// serialize tests that install different plans.
+pub fn install(f: Option<Faults>) {
+    // Mark env as consumed so a later lazy site evaluation cannot clobber
+    // an explicit install with the environment plan.
+    let _ = ENV_LOADED.set(());
+    set_plan(f);
+}
+
+/// The currently active plan, if any (after lazy env initialization).
+pub fn active() -> Option<Faults> {
+    ensure_env_loaded();
+    slot()
+        .read()
+        .expect("fault slot poisoned")
+        .as_ref()
+        .map(|p| p.faults.clone())
+}
+
+fn current() -> Option<Arc<ActivePlan>> {
+    ensure_env_loaded();
+    if !ENABLED.load(Ordering::Acquire) {
+        return None;
+    }
+    slot().read().expect("fault slot poisoned").clone()
+}
+
+/// Injection site: executor worker, once per batch, inside the worker's
+/// `catch_unwind` region. May sleep (stall fault) and/or panic (panic
+/// fault). No-op (one relaxed load) when no plan is installed.
+pub fn worker_site() {
+    // Cheap pre-check before the lazy env read: if a plan was never
+    // installed and the env was already consumed, skip everything.
+    if ENV_LOADED.get().is_some() && !ENABLED.load(Ordering::Relaxed) {
+        return;
+    }
+    let Some(plan) = current() else { return };
+    let (do_stall, do_panic) = {
+        let mut rng = plan.rng.lock().expect("fault rng poisoned");
+        (
+            plan.faults.stall > 0.0 && rng.uniform() < plan.faults.stall,
+            plan.faults.panic_worker > 0.0 && rng.uniform() < plan.faults.panic_worker,
+        )
+    };
+    if do_stall {
+        std::thread::sleep(Duration::from_millis(plan.faults.stall_ms));
+    }
+    if do_panic {
+        panic!("{INJECTED_PANIC_MSG}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_full_spec() {
+        let f = Faults::parse("panic_worker:0.25,stall:0.5,stall_ms:20,seed:9").unwrap();
+        assert_eq!(f.panic_worker, 0.25);
+        assert_eq!(f.stall, 0.5);
+        assert_eq!(f.stall_ms, 20);
+        assert_eq!(f.seed, 9);
+        assert!(f.any_active());
+    }
+
+    #[test]
+    fn parse_partial_and_empty() {
+        let f = Faults::parse("panic_worker:0.1").unwrap();
+        assert_eq!(f.panic_worker, 0.1);
+        assert_eq!(f.stall, 0.0);
+        assert_eq!(f.stall_ms, 50, "default stall duration");
+        let f = Faults::parse("").unwrap();
+        assert!(!f.any_active());
+        // Probabilities clamp instead of erroring.
+        let f = Faults::parse("panic_worker:7.0").unwrap();
+        assert_eq!(f.panic_worker, 1.0);
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        assert!(Faults::parse("panic_worker").is_err());
+        assert!(Faults::parse("panic_worker:x").is_err());
+        assert!(Faults::parse("warp_core_breach:0.5").is_err());
+        assert!(Faults::parse("stall_ms:1.5").is_err());
+        assert!(Faults::parse("seed:abc").is_err());
+    }
+
+    // NOTE: install()/worker_site() mutate process-global state, so their
+    // behavioural coverage lives in tests/resilience.rs where the fault
+    // tests serialize on one mutex; unit tests here stay read-only.
+}

@@ -7,6 +7,8 @@
 //! (set `FASTKRR_PROP_SEED`). Case counts default to 32 and can be raised
 //! with `FASTKRR_PROP_CASES` for deeper soak runs.
 
+pub mod faults;
+
 use crate::kernel::{KernelFn, KernelKind};
 use crate::linalg::{syrk_at_a, Mat};
 use crate::rng::Pcg64;

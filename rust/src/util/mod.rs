@@ -15,7 +15,8 @@ pub struct Error {
 }
 
 /// Broad category of a [`Error`]; used by callers that dispatch on failure
-/// class (e.g. the server maps `InvalidInput` to a 4xx-style reply).
+/// class (e.g. the server maps `InvalidInput` to a 4xx-style reply and
+/// marks the load-shedding kinds retryable on the wire).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum ErrorKind {
     /// Caller handed us something malformed (bad shape, bad config, ...).
@@ -28,6 +29,53 @@ pub enum ErrorKind {
     Runtime,
     /// Internal invariant violated — a bug in this crate.
     Internal,
+    /// Load shed: the serving engine is at its admission limit (in-flight
+    /// high-water mark or full queues). Retryable after backoff.
+    Overloaded,
+    /// The request's deadline expired before a result was produced.
+    DeadlineExceeded,
+    /// A per-model circuit breaker is open after consecutive failures.
+    /// Retryable after the breaker's cooldown.
+    CircuitOpen,
+}
+
+impl ErrorKind {
+    /// Stable lowercase name used in wire replies (`"kind"` field).
+    pub fn wire_name(&self) -> &'static str {
+        match self {
+            ErrorKind::InvalidInput => "invalid",
+            ErrorKind::Numerical => "numerical",
+            ErrorKind::Io => "io",
+            ErrorKind::Runtime => "runtime",
+            ErrorKind::Internal => "internal",
+            ErrorKind::Overloaded => "overloaded",
+            ErrorKind::DeadlineExceeded => "deadline_exceeded",
+            ErrorKind::CircuitOpen => "circuit_open",
+        }
+    }
+
+    /// Inverse of [`Self::wire_name`]; unknown names map to `Runtime`.
+    pub fn from_wire_name(name: &str) -> Self {
+        match name {
+            "invalid" => ErrorKind::InvalidInput,
+            "numerical" => ErrorKind::Numerical,
+            "io" => ErrorKind::Io,
+            "internal" => ErrorKind::Internal,
+            "overloaded" => ErrorKind::Overloaded,
+            "deadline_exceeded" => ErrorKind::DeadlineExceeded,
+            "circuit_open" => ErrorKind::CircuitOpen,
+            _ => ErrorKind::Runtime,
+        }
+    }
+
+    /// Whether a client can expect the same request to succeed after a
+    /// short backoff (transient serving-side conditions).
+    pub fn retryable(&self) -> bool {
+        matches!(
+            self,
+            ErrorKind::Overloaded | ErrorKind::DeadlineExceeded | ErrorKind::CircuitOpen
+        )
+    }
 }
 
 impl Error {
@@ -49,8 +97,22 @@ impl Error {
     pub fn internal(msg: impl Into<String>) -> Self {
         Self::new(ErrorKind::Internal, msg)
     }
+    pub fn overloaded(msg: impl Into<String>) -> Self {
+        Self::new(ErrorKind::Overloaded, msg)
+    }
+    pub fn deadline_exceeded(msg: impl Into<String>) -> Self {
+        Self::new(ErrorKind::DeadlineExceeded, msg)
+    }
+    pub fn circuit_open(msg: impl Into<String>) -> Self {
+        Self::new(ErrorKind::CircuitOpen, msg)
+    }
     pub fn kind(&self) -> ErrorKind {
         self.kind
+    }
+    /// Whether this error is transient and worth retrying (see
+    /// [`ErrorKind::retryable`]).
+    pub fn retryable(&self) -> bool {
+        self.kind.retryable()
     }
     pub fn message(&self) -> &str {
         &self.msg
@@ -134,6 +196,29 @@ mod tests {
         assert_eq!(e.kind(), ErrorKind::InvalidInput);
         assert_eq!(e.message(), "bad shape");
         assert!(e.to_string().contains("bad shape"));
+    }
+
+    #[test]
+    fn resilience_kinds_wire_names_and_retryability() {
+        for kind in [
+            ErrorKind::InvalidInput,
+            ErrorKind::Numerical,
+            ErrorKind::Io,
+            ErrorKind::Runtime,
+            ErrorKind::Internal,
+            ErrorKind::Overloaded,
+            ErrorKind::DeadlineExceeded,
+            ErrorKind::CircuitOpen,
+        ] {
+            assert_eq!(ErrorKind::from_wire_name(kind.wire_name()), kind);
+        }
+        assert_eq!(ErrorKind::from_wire_name("???"), ErrorKind::Runtime);
+        assert!(Error::overloaded("x").retryable());
+        assert!(Error::deadline_exceeded("x").retryable());
+        assert!(Error::circuit_open("x").retryable());
+        assert!(!Error::invalid("x").retryable());
+        assert!(!Error::runtime("x").retryable());
+        assert_eq!(Error::overloaded("x").kind(), ErrorKind::Overloaded);
     }
 
     #[test]

@@ -67,6 +67,7 @@ fn pipeline_to_engine_full_stack_native() {
             backend: Backend::Native,
             batcher: BatcherConfig::default(),
             workers: 2,
+            ..EngineConfig::default()
         },
     )
     .unwrap();
@@ -107,6 +108,7 @@ fn pipeline_to_engine_full_stack_pjrt() {
             backend: Backend::Pjrt { artifact_dir: dir },
             batcher: BatcherConfig::default(),
             workers: 2,
+            ..EngineConfig::default()
         },
     )
     .unwrap();

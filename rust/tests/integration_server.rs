@@ -40,6 +40,7 @@ fn start_server(queue_cap: usize, max_wait_ms: u64, workers: usize) -> (Server, 
                 ..Default::default()
             },
             workers,
+            ..EngineConfig::default()
         },
     )
     .unwrap();
@@ -228,6 +229,7 @@ fn engine_backpressure_reports_queue_full() {
                 ..Default::default()
             },
             workers: 1,
+            ..EngineConfig::default()
         },
     )
     .unwrap();
@@ -296,6 +298,7 @@ fn hot_swap_soak_no_failures_no_torn_reads() {
                 ..Default::default()
             },
             workers: 4,
+            ..EngineConfig::default()
         },
     )
     .unwrap();
@@ -384,6 +387,7 @@ fn engine_survives_rapid_start_stop() {
                 backend: Backend::Native,
                 batcher: BatcherConfig::default(),
                 workers: 1 + (seed as usize % 3),
+                ..EngineConfig::default()
             },
         )
         .unwrap();

@@ -1,0 +1,422 @@
+//! Fault-injected serving resilience: worker supervision, request
+//! deadlines, circuit breaking, and load shedding under a deterministic
+//! fault plan ([`fastkrr::testing::faults`]).
+//!
+//! The soak test honours `FASTKRR_FAULTS` so the nightly CI job can run it
+//! with injection enabled (`panic_worker`/`stall` probabilities) at an
+//! elevated `FASTKRR_PROP_CASES`; the regular CI run leaves the variable
+//! unset and exercises the same request/hot-swap choreography fault-free.
+//!
+//! Fault plans are process-global, so every test that installs one
+//! serializes on [`fault_lock`] and restores the clean state through
+//! [`FaultGuard`] even when an assertion panics.
+
+use fastkrr::coordinator::{
+    Backend, BatcherConfig, Engine, EngineConfig, ServingModel,
+};
+use fastkrr::kernel::KernelKind;
+use fastkrr::krr::{NystromKrr, NystromKrrConfig};
+use fastkrr::linalg::Mat;
+use fastkrr::registry::{BreakerState, ModelRegistry};
+use fastkrr::rng::Pcg64;
+use fastkrr::sketch::SketchStrategy;
+use fastkrr::testing::faults::{self, Faults, INJECTED_PANIC_MSG};
+use fastkrr::util::ErrorKind;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, Once};
+use std::time::{Duration, Instant};
+
+/// Serializes tests that install process-global fault plans. A panicking
+/// test poisons the mutex; the next test just takes the inner guard.
+fn fault_lock() -> MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Installs a quiet panic hook (once per process) that swallows the
+/// harness's own injected panics — they are expected by the dozen during a
+/// soak — while real panics still print through the default hook.
+fn quiet_injected_panics() {
+    static ONCE: Once = Once::new();
+    ONCE.call_once(|| {
+        let default_hook = std::panic::take_hook();
+        std::panic::set_hook(Box::new(move |info| {
+            let injected = info
+                .payload()
+                .downcast_ref::<&str>()
+                .map(|s| s.contains(INJECTED_PANIC_MSG))
+                .or_else(|| {
+                    info.payload()
+                        .downcast_ref::<String>()
+                        .map(|s| s.contains(INJECTED_PANIC_MSG))
+                })
+                .unwrap_or(false);
+            if !injected {
+                default_hook(info);
+            }
+        }));
+    });
+}
+
+/// RAII fault-plan installation: restores the no-faults state on drop so a
+/// failing assertion can't leak injection into the next test.
+struct FaultGuard;
+
+impl FaultGuard {
+    fn install(f: Faults) -> Self {
+        quiet_injected_panics();
+        faults::install(Some(f));
+        Self
+    }
+}
+
+impl Drop for FaultGuard {
+    fn drop(&mut self) {
+        faults::install(None);
+    }
+}
+
+fn make_model(seed: u64) -> (Mat, ServingModel) {
+    let mut rng = Pcg64::new(seed);
+    let x = Mat::from_fn(60, 6, |_, _| rng.normal());
+    let y: Vec<f64> = (0..60).map(|i| x.row(i)[0].sin()).collect();
+    let cfg = NystromKrrConfig {
+        lambda: 1e-3,
+        p: 12,
+        strategy: SketchStrategy::DiagK,
+        gamma: 0.0,
+        seed,
+    };
+    let m = NystromKrr::fit(&x, &y, KernelKind::Rbf { bandwidth: 1.0 }, &cfg).unwrap();
+    (x, ServingModel::from_nystrom(&m).unwrap())
+}
+
+fn native_cfg(workers: usize) -> EngineConfig {
+    EngineConfig {
+        backend: Backend::Native,
+        batcher: BatcherConfig {
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        },
+        workers,
+        ..EngineConfig::default()
+    }
+}
+
+#[test]
+fn injected_panics_fail_structured_and_pool_survives() {
+    let _serial = fault_lock();
+    let (x, sm) = make_model(11);
+    let engine = Engine::start(
+        sm,
+        EngineConfig {
+            breaker_failures: 0, // isolate supervision from circuit breaking
+            ..native_cfg(2)
+        },
+    )
+    .unwrap();
+    assert_eq!(engine.stats().workers_alive.current(), 2);
+
+    let guard = FaultGuard::install(Faults {
+        panic_worker: 1.0,
+        ..Faults::default()
+    });
+    let mut panicked = 0;
+    for i in 0..6 {
+        let err = engine.predict(x.row(i)).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::Runtime, "{err}");
+        assert!(err.message().contains("worker panicked"), "{err}");
+        assert!(err.message().contains(INJECTED_PANIC_MSG), "{err}");
+        panicked += 1;
+    }
+    assert_eq!(panicked, 6);
+    assert!(engine.stats().worker_panics.get() >= 6);
+
+    // Faults off: the same pool keeps serving — no worker was lost.
+    drop(guard);
+    assert_eq!(engine.stats().workers_alive.current(), 2);
+    for i in 0..4 {
+        engine.predict(x.row(i)).unwrap();
+    }
+    engine.shutdown();
+}
+
+#[test]
+fn stalled_worker_expires_queued_deadlines() {
+    let _serial = fault_lock();
+    let (x, sm) = make_model(12);
+    let engine = Arc::new(
+        Engine::start(
+            sm,
+            EngineConfig {
+                request_timeout: Duration::from_millis(60),
+                breaker_failures: 0,
+                ..native_cfg(1)
+            },
+        )
+        .unwrap(),
+    );
+    let _guard = FaultGuard::install(Faults {
+        stall: 1.0,
+        stall_ms: 200,
+        ..Faults::default()
+    });
+    // First request occupies the single worker for ~200ms; the second sits
+    // queued past its 60ms deadline and must be dropped at dequeue.
+    let e2 = engine.clone();
+    let row0: Vec<f64> = x.row(0).to_vec();
+    let first = std::thread::spawn(move || e2.predict(&row0));
+    std::thread::sleep(Duration::from_millis(30));
+    let err = engine.predict(x.row(1)).unwrap_err();
+    assert_eq!(err.kind(), ErrorKind::DeadlineExceeded, "{err}");
+    assert!(err.retryable());
+    // The stalled request itself may finish inside deadline + grace (Ok)
+    // or miss it (DeadlineExceeded) depending on scheduling; both are
+    // structured resolutions, never a hang.
+    match first.join().unwrap() {
+        Ok(_) => {}
+        Err(e) => assert_eq!(e.kind(), ErrorKind::DeadlineExceeded, "{e}"),
+    }
+    assert!(engine.stats().deadline_expired.get() >= 1);
+}
+
+#[test]
+fn caller_reply_backstop_bounds_a_wedged_worker() {
+    let _serial = fault_lock();
+    let (x, sm) = make_model(13);
+    let engine = Engine::start(
+        sm,
+        EngineConfig {
+            request_timeout: Duration::from_millis(80),
+            breaker_failures: 0,
+            ..native_cfg(1)
+        },
+    )
+    .unwrap();
+    let _guard = FaultGuard::install(Faults {
+        stall: 1.0,
+        stall_ms: 700, // past deadline + reply grace: caller must not wait it out
+        ..Faults::default()
+    });
+    let t0 = Instant::now();
+    let err = engine.predict(x.row(0)).unwrap_err();
+    let elapsed = t0.elapsed();
+    assert_eq!(err.kind(), ErrorKind::DeadlineExceeded, "{err}");
+    assert!(
+        elapsed < Duration::from_millis(650),
+        "caller waited {elapsed:?}, longer than deadline + grace"
+    );
+}
+
+#[test]
+fn breaker_trips_after_streak_and_recovers_via_probe() {
+    let _serial = fault_lock();
+    let (x, sm) = make_model(14);
+    let registry = Arc::new(ModelRegistry::new());
+    registry.publish("m", sm).unwrap();
+    let engine = Engine::start_with_registry(
+        registry,
+        EngineConfig {
+            breaker_failures: 3,
+            breaker_cooldown: Duration::from_millis(150),
+            ..native_cfg(1)
+        },
+    )
+    .unwrap();
+    let guard = FaultGuard::install(Faults {
+        panic_worker: 1.0,
+        ..Faults::default()
+    });
+    // Three consecutive batch panics trip the breaker...
+    for i in 0..3 {
+        let err = engine.predict_model(Some("m"), None, x.row(i)).unwrap_err();
+        assert_eq!(err.kind(), ErrorKind::Runtime, "failure #{i}: {err}");
+    }
+    // ...so the fourth request is rejected at admission, without touching
+    // a worker.
+    let err = engine.predict_model(Some("m"), None, x.row(3)).unwrap_err();
+    assert_eq!(err.kind(), ErrorKind::CircuitOpen, "{err}");
+    assert!(err.retryable());
+    assert!(err.message().contains('m'), "{err}");
+    let info = engine
+        .registry()
+        .list()
+        .into_iter()
+        .find(|i| i.name == "m")
+        .unwrap();
+    assert_eq!(info.circuit, "open");
+    assert!(info.breaker_trips >= 1);
+
+    // Heal the model, wait out the cooldown: the half-open probe succeeds
+    // and closes the breaker.
+    drop(guard);
+    std::thread::sleep(Duration::from_millis(200));
+    engine.predict_model(Some("m"), None, x.row(4)).unwrap();
+    let mv = engine.registry().resolve(Some("m"), None).unwrap();
+    assert_eq!(mv.stats.breaker.state(), BreakerState::Closed);
+    engine.shutdown();
+}
+
+/// The headline soak: 8 client threads hammer the engine while a publisher
+/// thread hot-swaps the served model, under whatever fault plan
+/// `FASTKRR_FAULTS` specifies (none in regular CI). Every request must
+/// resolve to a structured outcome — ok with an untorn value, or a
+/// retryable rejection — with the pool intact and the in-flight gauge
+/// drained afterwards.
+#[test]
+fn fault_soak_hot_swap_under_panics_stalls_and_overload() {
+    let _serial = fault_lock();
+    quiet_injected_panics();
+    let env_plan = std::env::var("FASTKRR_FAULTS")
+        .ok()
+        .map(|s| Faults::parse(&s).expect("bad FASTKRR_FAULTS"));
+    let faults_on = env_plan.as_ref().map(Faults::any_active).unwrap_or(false);
+    faults::install(env_plan);
+    let _restore = FaultGuard; // install(None) on exit, panic included
+
+    let (xa, sm_a) = make_model(21);
+    let (_, sm_b) = make_model(22);
+    // Torn-read oracle: every Ok must match one of the two versions'
+    // native predictions on the query row — never a blend.
+    let want_a = sm_a.predict_native(&xa);
+    let want_b = sm_b.predict_native(&xa);
+
+    let registry = Arc::new(ModelRegistry::new());
+    registry.publish("m", sm_a.clone()).unwrap();
+    let engine = Arc::new(
+        Engine::start_with_registry(
+            registry.clone(),
+            EngineConfig {
+                request_timeout: Duration::from_millis(500),
+                max_inflight: 4, // below the client count: forces shedding
+                breaker_failures: 5,
+                breaker_cooldown: Duration::from_millis(100),
+                ..native_cfg(3)
+            },
+        )
+        .unwrap(),
+    );
+    assert_eq!(engine.stats().workers_alive.current(), 3);
+
+    let per_client = fastkrr::testing::default_cases().max(25);
+    let clients: usize = 8;
+    let ok = AtomicUsize::new(0);
+    let shed = AtomicUsize::new(0);
+    let expired = AtomicUsize::new(0);
+    let open = AtomicUsize::new(0);
+    let panicked = AtomicUsize::new(0);
+    let swapping = std::sync::atomic::AtomicBool::new(true);
+
+    std::thread::scope(|s| {
+        // Publisher: hot-swap versions for the whole soak.
+        s.spawn(|| {
+            let mut flip = false;
+            while swapping.load(Ordering::Relaxed) {
+                let sm = if flip { sm_b.clone() } else { sm_a.clone() };
+                registry.publish("m", sm).unwrap();
+                flip = !flip;
+                std::thread::sleep(Duration::from_millis(5));
+            }
+        });
+        let handles: Vec<_> = (0..clients).map(|t| {
+            let engine = engine.clone();
+            let (xa, want_a, want_b) = (&xa, &want_a, &want_b);
+            let (ok, shed, expired, open, panicked) =
+                (&ok, &shed, &expired, &open, &panicked);
+            s.spawn(move || {
+                let mut rng = Pcg64::new(1000 + t as u64);
+                for _ in 0..per_client {
+                    let i = rng.below(xa.rows());
+                    // Alternate named and default routing.
+                    let name = if rng.uniform() < 0.5 { Some("m") } else { None };
+                    match engine.predict_model(name, None, xa.row(i)) {
+                        Ok(v) => {
+                            assert!(v.is_finite(), "non-finite prediction {v}");
+                            let da = (v - want_a[i]).abs();
+                            let db = (v - want_b[i]).abs();
+                            assert!(
+                                da < 1e-5 || db < 1e-5,
+                                "torn read at row {i}: {v} matches neither \
+                                 version ({} / {})",
+                                want_a[i],
+                                want_b[i]
+                            );
+                            ok.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(e) => match e.kind() {
+                            ErrorKind::Overloaded => {
+                                assert!(e.retryable());
+                                shed.fetch_add(1, Ordering::Relaxed);
+                            }
+                            ErrorKind::DeadlineExceeded => {
+                                assert!(e.retryable());
+                                expired.fetch_add(1, Ordering::Relaxed);
+                            }
+                            ErrorKind::CircuitOpen if faults_on => {
+                                assert!(e.retryable());
+                                open.fetch_add(1, Ordering::Relaxed);
+                            }
+                            ErrorKind::Runtime if faults_on => {
+                                assert!(
+                                    e.message().contains("worker panicked"),
+                                    "unexpected runtime error: {e}"
+                                );
+                                panicked.fetch_add(1, Ordering::Relaxed);
+                            }
+                            _ => panic!("unacceptable soak outcome: {e}"),
+                        },
+                    }
+                }
+            })
+        }).collect();
+        // Join the clients, THEN release the publisher (it loops on the
+        // flag, so the scope would deadlock if the flag flipped only after
+        // the scope's implicit join). Panics propagate after the flip so a
+        // failing client can't wedge the publisher either.
+        let results: Vec<_> = handles.into_iter().map(|h| h.join()).collect();
+        swapping.store(false, Ordering::Relaxed);
+        for r in results {
+            if let Err(p) = r {
+                std::panic::resume_unwind(p);
+            }
+        }
+    });
+
+    let total = clients * per_client;
+    let resolved = ok.load(Ordering::Relaxed)
+        + shed.load(Ordering::Relaxed)
+        + expired.load(Ordering::Relaxed)
+        + open.load(Ordering::Relaxed)
+        + panicked.load(Ordering::Relaxed);
+    assert_eq!(resolved, total, "every request must resolve structurally");
+    assert!(ok.load(Ordering::Relaxed) > 0, "soak produced no successes");
+    if !faults_on {
+        assert_eq!(panicked.load(Ordering::Relaxed), 0);
+        assert_eq!(engine.stats().worker_panics.get(), 0);
+    }
+
+    // Pool intact, gauge drained, high-water mark respected the cap (plus
+    // at most the admission race overshoot: one per concurrently-admitting
+    // client thread).
+    let stats = engine.stats();
+    assert_eq!(stats.workers_alive.current(), 3, "supervision lost a worker");
+    assert_eq!(stats.inflight.current(), 0, "in-flight gauge leaked");
+    assert!(
+        stats.inflight.high_water() <= (4 + clients) as u64,
+        "in-flight high-water {} far above cap",
+        stats.inflight.high_water()
+    );
+    eprintln!(
+        "soak: {} ok, {} shed, {} deadline, {} circuit-open, {} panicked \
+         (faults {}), worker_panics={}, inflight hwm={}",
+        ok.load(Ordering::Relaxed),
+        shed.load(Ordering::Relaxed),
+        expired.load(Ordering::Relaxed),
+        open.load(Ordering::Relaxed),
+        panicked.load(Ordering::Relaxed),
+        if faults_on { "on" } else { "off" },
+        stats.worker_panics.get(),
+        stats.inflight.high_water()
+    );
+    engine.shutdown();
+}
