@@ -12,6 +12,7 @@ use fastkrr::kernel::KernelKind;
 use fastkrr::metrics::bench::{bench_scale, section};
 
 fn main() {
+    println!("simd: {}", fastkrr::linalg::simd::mode_name());
     let scale = bench_scale(1.0);
     let trials = 5;
     let mut all_ok = true;

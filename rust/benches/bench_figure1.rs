@@ -9,6 +9,7 @@ use fastkrr::experiments::{run_figure1_left, run_figure1_right};
 use fastkrr::metrics::bench::{bench_scale, section};
 
 fn main() {
+    println!("simd: {}", fastkrr::linalg::simd::mode_name());
     let scale = bench_scale(1.0); // n=500 is cheap; default to paper size
     let n = ((500.0 * scale) as usize).max(50);
     let lambda = 1e-6;

@@ -9,7 +9,7 @@
 use fastkrr::kernel::{Kernel, KernelFn, KernelKind};
 use fastkrr::leverage::{approx_ridge_leverage, exact_ridge_leverage};
 use fastkrr::linalg::Mat;
-use fastkrr::metrics::bench::{bench, bench_scale, section};
+use fastkrr::metrics::bench::{bench, bench_scale, emit_json, section, ScopedEnv};
 use fastkrr::rng::Pcg64;
 
 fn data(n: usize, d: usize, seed: u64) -> Mat {
@@ -22,6 +22,7 @@ fn main() {
     let lambda = 1e-3;
     let kernel = KernelFn::new(KernelKind::Rbf { bandwidth: 2.0 });
     let mut ok = true;
+    println!("simd: {}", fastkrr::linalg::simd::mode_name());
 
     section("runtime scaling in n (p=128 fixed) — expect ~linear for approx, ~cubic for exact");
     let n_grid: Vec<usize> = [256, 512, 1024, 2048]
@@ -38,6 +39,7 @@ fn main() {
             let _ = approx_ridge_leverage(&kernel, &x, lambda, p, &mut rng).unwrap();
         });
         println!("{}", s.render());
+        emit_json(&s, "approx_leverage", &format!("n{n}_p{p}"), None);
         approx_times.push(s.mean_secs());
         let km = kernel.matrix(&x);
         let s = bench(&format!("exact  n={n}"), 0, 2, || {
@@ -178,6 +180,46 @@ fn main() {
         ok &= drift < 1e-12;
     }
 
+    section("simd end-to-end: approx leverage with FASTKRR_SIMD on vs off");
+    {
+        let n = ((4096.0 * scale) as usize).max(512);
+        let x = data(n, 8, 29);
+        let p = 256.min(n / 2).max(16);
+        let s_off = {
+            let _g = ScopedEnv::set("FASTKRR_SIMD", "off");
+            let s = bench(&format!("approx scalar n={n} p={p}"), 1, 3, || {
+                let mut rng = Pcg64::new(3);
+                let _ = approx_ridge_leverage(&kernel, &x, lambda, p, &mut rng).unwrap();
+            });
+            emit_json(&s, "approx_leverage_scalar", &format!("n{n}_p{p}"), None);
+            s
+        };
+        println!("{}", s_off.render());
+        let s_on = {
+            let _g = ScopedEnv::set("FASTKRR_SIMD", "on");
+            let s = bench(&format!("approx simd   n={n} p={p}"), 1, 3, || {
+                let mut rng = Pcg64::new(3);
+                let _ = approx_ridge_leverage(&kernel, &x, lambda, p, &mut rng).unwrap();
+            });
+            emit_json(&s, "approx_leverage_simd", &format!("n{n}_p{p}"), None);
+            s
+        };
+        println!("{}", s_on.render());
+        let speedup = s_off.p50_ms() / s_on.p50_ms();
+        let threads = fastkrr::util::parallel::num_threads();
+        println!("  simd end-to-end speedup: {speedup:.2}× on {threads} threads");
+        // Acceptance gate: the SIMD path improves end-to-end approx-leverage
+        // time at n ≥ 4096 (nightly scale); smoke runs print but don't gate.
+        if threads >= 4 && n >= 4096 {
+            if speedup <= 1.0 {
+                println!("  FAIL: simd path no faster than scalar end-to-end");
+            }
+            ok &= speedup > 1.0;
+        } else {
+            println!("  (simd speedup gate skipped: needs n ≥ 4096 and ≥ 4 threads)");
+        }
+    }
+
     section("Theorem 4 error bounds vs p (n=512)");
     let n = 512;
     let x = data(n, 6, 9);
@@ -220,8 +262,8 @@ fn main() {
         prev_err = under;
     }
     println!(
-        "\nall gates (sharded-build speedup, cache hits + identity, Theorem 4 \
-         one-sided bound l̃ ≤ l with non-exploding error): {}",
+        "\nall gates (sharded-build speedup, simd end-to-end speedup, cache hits \
+         + identity, Theorem 4 one-sided bound l̃ ≤ l with non-exploding error): {}",
         if ok { "PASS" } else { "FAIL" }
     );
     std::process::exit(if ok { 0 } else { 1 });

@@ -1,13 +1,22 @@
-//! Microbenchmarks of the linalg substrate — the L3 perf-pass instrument
-//! (EXPERIMENTS.md §Perf). Reports GFLOP/s for the hot kernels so
-//! before/after optimization deltas are visible.
+//! Microbenchmarks of the linalg substrate — the L3 perf-pass instrument.
+//! Reports GFLOP/s for the hot kernels so before/after optimization deltas
+//! are visible, and (with `FASTKRR_BENCH_JSON=<path>`) appends
+//! machine-readable `{bench, shape, threads, simd, p50_ms, gflops}` records
+//! for the CI perf-baseline artifact.
 //!
 //! Run: `cargo bench --bench bench_linalg`
+//!
+//! Modes:
+//! - `FASTKRR_BENCH_QUICK=1` — small shapes, ablation/eigh sections skipped
+//!   (the CI perf-smoke step).
+//! - `FASTKRR_BENCH_GATE=1` — exit non-zero unless the SIMD GEMM beats the
+//!   `FASTKRR_SIMD=off` scalar path by ≥ 1.5× (single-thread always;
+//!   multi-thread when ≥ 4 threads are available). The nightly perf gate.
 
 use fastkrr::linalg::{
-    eigh, matmul, matmul_a_bt, matmul_serial, syrk_at_a, syrk_at_a_serial, Cholesky, Mat,
+    eigh, matmul, matmul_serial, simd, syrk_at_a, syrk_at_a_serial, Cholesky, Mat,
 };
-use fastkrr::metrics::bench::{bench, bench_scale, section};
+use fastkrr::metrics::bench::{bench, bench_quick, bench_scale, emit_json, section, ScopedEnv};
 use fastkrr::rng::Pcg64;
 use fastkrr::util::parallel::num_threads;
 
@@ -20,9 +29,8 @@ fn gflops(flops: f64, secs: f64) -> f64 {
     flops / secs / 1e9
 }
 
-/// The pre-optimization single-row AXPY matmul (EXPERIMENTS.md §Perf
-/// item 3's "before") kept here as an in-process ablation baseline so the
-/// comparison is contention-free.
+/// The pre-SIMD single-row AXPY matmul kept here as an in-process ablation
+/// baseline so the comparison is contention-free.
 fn matmul_axpy_baseline(a: &Mat, b: &Mat) -> Mat {
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
     let mut out = Mat::zeros(m, n);
@@ -50,6 +58,9 @@ fn matmul_axpy_baseline(a: &Mat, b: &Mat) -> Mat {
 
 fn main() {
     let scale = bench_scale(1.0);
+    let quick = bench_quick();
+    let gate = std::env::var("FASTKRR_BENCH_GATE").map(|v| v == "1").unwrap_or(false);
+    let mut ok = true;
     // Thread count is configurable per run: FASTKRR_THREADS=<n> bounds the
     // chunk count of every parallel region (1 = fully serial).
     println!(
@@ -57,118 +68,162 @@ fn main() {
          hardware parallelism)",
         num_threads()
     );
-
-    section("parallel scaling (pool-scheduled vs serial reference)");
-    {
-        let m = ((768.0 * scale) as usize).max(128);
-        let a = randmat(m, m, 20);
-        let b = randmat(m, m, 21);
-        let flops = 2.0 * (m as f64).powi(3);
-        let s_ser = bench(&format!("matmul_serial {m}^3"), 1, 3, || {
-            std::hint::black_box(matmul_serial(&a, &b));
-        });
-        println!("{}  [{:.2} GFLOP/s]", s_ser.render(), gflops(flops, s_ser.mean_secs()));
-        let s_par = bench(&format!("matmul (pool, {} threads) {m}^3", num_threads()), 1, 3, || {
-            std::hint::black_box(matmul(&a, &b));
-        });
-        println!("{}  [{:.2} GFLOP/s]", s_par.render(), gflops(flops, s_par.mean_secs()));
-        println!("  parallel speedup: {:.2}×", s_ser.mean_secs() / s_par.mean_secs());
-
-        let n = ((4096.0 * scale) as usize).max(256);
-        let g = randmat(n, 128, 22);
-        let sflops = n as f64 * 128.0 * 128.0;
-        let s_ser = bench(&format!("syrk_at_a_serial {n}x128"), 1, 3, || {
-            std::hint::black_box(syrk_at_a_serial(&g));
-        });
-        println!("{}  [{:.2} GFLOP/s]", s_ser.render(), gflops(sflops, s_ser.mean_secs()));
-        let s_par = bench(&format!("syrk_at_a (pool) {n}x128"), 1, 3, || {
-            std::hint::black_box(syrk_at_a(&g));
-        });
-        println!("{}  [{:.2} GFLOP/s]", s_par.render(), gflops(sflops, s_par.mean_secs()));
-        println!("  parallel speedup: {:.2}×", s_ser.mean_secs() / s_par.mean_secs());
+    println!("simd: {} (override with FASTKRR_SIMD=off|on|fastexp)", simd::mode_name());
+    if quick {
+        println!("quick mode: small shapes, ablation/eigh sections skipped");
     }
 
-    section("matmul micro-kernel ablation (old AXPY vs 4-row panel reuse)");
+    section("SIMD packed GEMM vs scalar (FASTKRR_SIMD on vs off)");
     {
-        let m = ((1024.0 * scale) as usize).max(128);
-        let a = randmat(m, m, 10);
-        let b = randmat(m, m, 11);
-        let flops = 2.0 * (m as f64).powi(3);
-        let s_old = bench("matmul_axpy_baseline 1024^3", 1, 5, || {
-            std::hint::black_box(matmul_axpy_baseline(&a, &b));
-        });
-        println!("{}  [{:.2} GFLOP/s]", s_old.render(), gflops(flops, s_old.mean_secs()));
-        let s_new = bench("matmul (current) 1024^3", 1, 5, || {
-            std::hint::black_box(matmul(&a, &b));
-        });
-        println!("{}  [{:.2} GFLOP/s]", s_new.render(), gflops(flops, s_new.mean_secs()));
-        println!(
-            "  speedup: {:.2}×",
-            s_old.mean_secs() / s_new.mean_secs()
-        );
+        // The headline gate shape from the perf acceptance criteria; quick
+        // mode shrinks it so the smoke run stays fast.
+        let (m, k, n) = if quick { (512usize, 256usize, 256usize) } else { (2048, 512, 512) };
+        let a = randmat(m, k, 30);
+        let b = randmat(k, n, 31);
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
+        let shape = format!("{m}x{k}x{n}");
+        // One single-thread leg and one at the current thread count.
+        for threads in [Some(1usize), None] {
+            let _tguard = threads.map(|t| ScopedEnv::set("FASTKRR_THREADS", &t.to_string()));
+            let nt = num_threads();
+            let label = match threads {
+                Some(_) => "1 thread".to_string(),
+                None => format!("{nt} threads"),
+            };
+            let s_off = {
+                let _g = ScopedEnv::set("FASTKRR_SIMD", "off");
+                let s = bench(&format!("gemm scalar ({label}) {shape}"), 1, 5, || {
+                    std::hint::black_box(matmul(&a, &b));
+                });
+                emit_json(&s, "gemm_scalar", &shape, Some(gflops(flops, s.p50_ms() / 1e3)));
+                s
+            };
+            println!("{}  [{:.2} GFLOP/s]", s_off.render(), gflops(flops, s_off.mean_secs()));
+            let s_on = {
+                let _g = ScopedEnv::set("FASTKRR_SIMD", "on");
+                let s = bench(&format!("gemm simd ({label}) {shape}"), 1, 5, || {
+                    std::hint::black_box(matmul(&a, &b));
+                });
+                emit_json(&s, "gemm", &shape, Some(gflops(flops, s.p50_ms() / 1e3)));
+                s
+            };
+            println!("{}  [{:.2} GFLOP/s]", s_on.render(), gflops(flops, s_on.mean_secs()));
+            let speedup = s_off.p50_ms() / s_on.p50_ms();
+            println!("  simd speedup ({label}): {speedup:.2}×");
+            if gate && !quick {
+                // Single-thread leg gates unconditionally; the multi-thread
+                // leg gates only where ≥ 4 threads back the measurement.
+                let applies = threads.is_some() || nt >= 4;
+                if applies && speedup < 1.5 {
+                    println!("  GATE FAIL: simd speedup {speedup:.2}× < 1.5× ({label})");
+                    ok = false;
+                }
+            }
+        }
+    }
+
+    if !quick {
+        section("parallel scaling (pool-scheduled vs serial reference)");
+        {
+            let m = ((768.0 * scale) as usize).max(128);
+            let a = randmat(m, m, 20);
+            let b = randmat(m, m, 21);
+            let flops = 2.0 * (m as f64).powi(3);
+            let s_ser = bench(&format!("matmul_serial {m}^3"), 1, 3, || {
+                std::hint::black_box(matmul_serial(&a, &b));
+            });
+            println!("{}  [{:.2} GFLOP/s]", s_ser.render(), gflops(flops, s_ser.mean_secs()));
+            let s_par = bench(&format!("matmul (pool, {} threads) {m}^3", num_threads()), 1, 3, || {
+                std::hint::black_box(matmul(&a, &b));
+            });
+            println!("{}  [{:.2} GFLOP/s]", s_par.render(), gflops(flops, s_par.mean_secs()));
+            println!("  parallel speedup: {:.2}×", s_ser.mean_secs() / s_par.mean_secs());
+
+            let n = ((4096.0 * scale) as usize).max(256);
+            let g = randmat(n, 128, 22);
+            let sflops = n as f64 * 128.0 * 128.0;
+            let s_ser = bench(&format!("syrk_at_a_serial {n}x128"), 1, 3, || {
+                std::hint::black_box(syrk_at_a_serial(&g));
+            });
+            println!("{}  [{:.2} GFLOP/s]", s_ser.render(), gflops(sflops, s_ser.mean_secs()));
+            let s_par = bench(&format!("syrk_at_a (pool) {n}x128"), 1, 3, || {
+                std::hint::black_box(syrk_at_a(&g));
+            });
+            println!("{}  [{:.2} GFLOP/s]", s_par.render(), gflops(sflops, s_par.mean_secs()));
+            println!("  parallel speedup: {:.2}×", s_ser.mean_secs() / s_par.mean_secs());
+        }
+
+        section("matmul micro-kernel ablation (old AXPY vs packed-panel SIMD)");
+        {
+            let m = ((1024.0 * scale) as usize).max(128);
+            let a = randmat(m, m, 10);
+            let b = randmat(m, m, 11);
+            let flops = 2.0 * (m as f64).powi(3);
+            let s_old = bench(&format!("matmul_axpy_baseline {m}^3"), 1, 5, || {
+                std::hint::black_box(matmul_axpy_baseline(&a, &b));
+            });
+            println!("{}  [{:.2} GFLOP/s]", s_old.render(), gflops(flops, s_old.mean_secs()));
+            let s_new = bench(&format!("matmul (current) {m}^3"), 1, 5, || {
+                std::hint::black_box(matmul(&a, &b));
+            });
+            println!("{}  [{:.2} GFLOP/s]", s_new.render(), gflops(flops, s_new.mean_secs()));
+            println!("  speedup: {:.2}×", s_old.mean_secs() / s_new.mean_secs());
+        }
     }
 
     section("matmul (the B = C·W^{+1/2} shape: tall-skinny)");
     for &(m, k, n) in &[(2048usize, 256usize, 256usize), (4096, 128, 128), (1024, 1024, 1024)] {
-        let m = ((m as f64 * scale) as usize).max(64);
+        let m = ((m as f64 * scale * if quick { 0.25 } else { 1.0 }) as usize).max(64);
         let a = randmat(m, k, 1);
         let b = randmat(k, n, 2);
+        let flops = 2.0 * m as f64 * k as f64 * n as f64;
         let s = bench(&format!("matmul {m}x{k}x{n}"), 1, 5, || {
             std::hint::black_box(matmul(&a, &b));
         });
-        println!(
-            "{}  [{:.2} GFLOP/s]",
-            s.render(),
-            gflops(2.0 * m as f64 * k as f64 * n as f64, s.mean_secs())
-        );
+        println!("{}  [{:.2} GFLOP/s]", s.render(), gflops(flops, s.mean_secs()));
+        let gf = Some(gflops(flops, s.p50_ms() / 1e3));
+        emit_json(&s, "matmul_tall_skinny", &format!("{m}x{k}x{n}"), gf);
     }
 
     section("syrk BᵀB (p×p from n×p)");
     for &(n, p) in &[(4096usize, 128usize), (2048, 256), (1024, 512)] {
-        let n = ((n as f64 * scale) as usize).max(128);
+        let n = ((n as f64 * scale * if quick { 0.25 } else { 1.0 }) as usize).max(128);
         let a = randmat(n, p, 3);
+        let flops = n as f64 * p as f64 * p as f64;
         let s = bench(&format!("syrk {n}x{p}"), 1, 5, || {
             std::hint::black_box(syrk_at_a(&a));
         });
-        println!(
-            "{}  [{:.2} GFLOP/s]",
-            s.render(),
-            gflops(n as f64 * p as f64 * p as f64, s.mean_secs())
-        );
+        println!("{}  [{:.2} GFLOP/s]", s.render(), gflops(flops, s.mean_secs()));
+        emit_json(&s, "syrk", &format!("{n}x{p}"), Some(gflops(flops, s.p50_ms() / 1e3)));
     }
 
-    section("kernel block (RBF fast path = matmul_a_bt + epilogue)");
+    section("kernel block (RBF fused tile path)");
     for &(m, p, d) in &[(2048usize, 256usize, 32usize), (1024, 128, 128)] {
-        let m = ((m as f64 * scale) as usize).max(128);
+        let m = ((m as f64 * scale * if quick { 0.25 } else { 1.0 }) as usize).max(128);
         let x = randmat(m, d, 4);
         let z = randmat(p, d, 5);
         let kernel =
             fastkrr::kernel::KernelFn::new(fastkrr::kernel::KernelKind::Rbf { bandwidth: 1.0 });
+        let flops = 2.0 * m as f64 * p as f64 * d as f64;
         let s = bench(&format!("rbf_block {m}x{p} d={d}"), 1, 5, || {
             std::hint::black_box(fastkrr::kernel::Kernel::cross(&kernel, &x, &z));
         });
-        println!(
-            "{}  [{:.2} GFLOP/s matmul-part]",
-            s.render(),
-            gflops(2.0 * m as f64 * p as f64 * d as f64, s.mean_secs())
-        );
-        let _ = matmul_a_bt(&x, &z); // keep the symbol hot/linked
+        println!("{}  [{:.2} GFLOP/s matmul-part]", s.render(), gflops(flops, s.mean_secs()));
+        emit_json(&s, "rbf_block", &format!("{m}x{p}x{d}"), Some(gflops(flops, s.p50_ms() / 1e3)));
     }
 
     section("cholesky + solves (the (K+nλI)⁻¹ machinery)");
     for &n in &[256usize, 512, 1024] {
-        let n = ((n as f64 * scale) as usize).max(128);
+        let n = ((n as f64 * scale * if quick { 0.5 } else { 1.0 }) as usize).max(128);
         let g = randmat(n + 8, n, 6);
         let mut a = syrk_at_a(&g);
         a.add_scaled_identity(1.0);
+        let flops = n as f64 * n as f64 * n as f64 / 3.0;
         let s = bench(&format!("cholesky {n}"), 1, 3, || {
             std::hint::black_box(Cholesky::new(&a).unwrap());
         });
-        println!(
-            "{}  [{:.2} GFLOP/s]",
-            s.render(),
-            gflops(n as f64 * n as f64 * n as f64 / 3.0, s.mean_secs())
-        );
+        println!("{}  [{:.2} GFLOP/s]", s.render(), gflops(flops, s.mean_secs()));
+        emit_json(&s, "cholesky", &format!("{n}"), Some(gflops(flops, s.p50_ms() / 1e3)));
         let ch = Cholesky::new(&a).unwrap();
         let s = bench(&format!("inverse_diagonal {n}"), 1, 3, || {
             std::hint::black_box(ch.inverse_diagonal());
@@ -176,14 +231,21 @@ fn main() {
         println!("{}", s.render());
     }
 
-    section("eigh (the W⁺ machinery, p×p)");
-    for &p in &[128usize, 256, 512] {
-        let p = ((p as f64 * scale) as usize).max(64);
-        let g = randmat(p + 4, p, 7);
-        let a = syrk_at_a(&g);
-        let s = bench(&format!("eigh {p}"), 1, 3, || {
-            std::hint::black_box(eigh(&a).unwrap());
-        });
-        println!("{}", s.render());
+    if !quick {
+        section("eigh (the W⁺ machinery, p×p)");
+        for &p in &[128usize, 256, 512] {
+            let p = ((p as f64 * scale) as usize).max(64);
+            let g = randmat(p + 4, p, 7);
+            let a = syrk_at_a(&g);
+            let s = bench(&format!("eigh {p}"), 1, 3, || {
+                std::hint::black_box(eigh(&a).unwrap());
+            });
+            println!("{}", s.render());
+        }
     }
+
+    if gate && !quick {
+        println!("\nperf gate: {}", if ok { "PASS" } else { "FAIL" });
+    }
+    std::process::exit(if ok { 0 } else { 1 });
 }

@@ -93,6 +93,7 @@ fn run_load_named(
 }
 
 fn main() {
+    println!("simd: {}", fastkrr::linalg::simd::mode_name());
     let (x, sm) = model_at_artifact_shapes();
     let artifact_dir = fastkrr::runtime::default_artifact_dir();
     let have_artifacts = artifact_dir.join("manifest.json").exists();

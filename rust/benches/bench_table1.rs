@@ -26,6 +26,7 @@ const PAPER: &[(&str, &str, f64, f64, f64)] = &[
 ];
 
 fn main() {
+    println!("simd: {}", fastkrr::linalg::simd::mode_name());
     let scale = bench_scale(0.25);
     let trials = std::env::var("FASTKRR_BENCH_TRIALS")
         .ok()

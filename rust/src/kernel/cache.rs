@@ -134,10 +134,11 @@ impl KernelBlockCache {
             // Direct path: assemble in request order, scale in parallel.
             let mut c_w = kernel.columns(x, indices);
             par_chunks_mut(c_w.as_mut_slice(), n, p, |_ci, _r0, chunk| {
-                let rows_here = chunk.len() / p;
-                for r in 0..rows_here {
-                    for (j, v) in chunk[r * p..(r + 1) * p].iter_mut().enumerate() {
-                        *v *= weights[j];
+                // Zipped rows: bounds-check-free unit-stride scaling the
+                // autovectorizer handles.
+                for row in chunk.chunks_exact_mut(p) {
+                    for (v, &wj) in row.iter_mut().zip(weights.iter()) {
+                        *v *= wj;
                     }
                 }
             });
@@ -206,11 +207,12 @@ impl KernelBlockCache {
         let mut out = Mat::zeros(n, p);
         let block = &*block;
         par_chunks_mut(out.as_mut_slice(), n, p, |_ci, r0, chunk| {
-            let rows_here = chunk.len() / p;
-            for r in 0..rows_here {
+            for (r, row) in chunk.chunks_exact_mut(p).enumerate() {
                 let brow = block.row(r0 + r);
-                for (j, v) in chunk[r * p..(r + 1) * p].iter_mut().enumerate() {
-                    *v = brow[perm[j]] * weights[j];
+                // perm/weights zipped with the output row: only the gather
+                // `brow[pj]` needs a bounds check.
+                for ((v, &pj), &wj) in row.iter_mut().zip(perm.iter()).zip(weights.iter()) {
+                    *v = brow[pj] * wj;
                 }
             }
         });

@@ -37,6 +37,18 @@
 //!   another scope's work. `FASTKRR_THREADS` bounds the per-region chunk count
 //!   (1 = serial); results are chunk-count-invariant (per-row op order is
 //!   fixed), which `tests/property_parallel.rs` soaks.
+//! - **SIMD microkernels** ([`linalg::simd`]) — the dense ops dispatch to a
+//!   packed-panel GEMM with 8-lane autovectorized accumulators, and the
+//!   RBF/Laplacian `cross` fuses distance² + `exp` into one pass per output
+//!   tile. `FASTKRR_SIMD` selects the path: unset/`on` (default) the
+//!   microkernels, `off` the scalar loops (bisection escape hatch), and
+//!   `fastexp` additionally swaps `f64::exp` for a ~1-ulp polynomial —
+//!   opt-in because it leaves the 1e-12 oracle guarantee that
+//!   `tests/property_simd.rs` enforces for the other modes. `matmul`,
+//!   `matmul_at_b` and `syrk_at_a` stay *bitwise* identical across modes
+//!   and thread counts. `FASTKRR_BENCH_JSON=<path>` makes the bench
+//!   binaries append machine-readable `{bench, shape, threads, simd,
+//!   p50_ms, gflops}` records for the CI perf baseline (BENCH_9.json).
 //! - **Serving** ([`coordinator::engine`]) — an executor pool of
 //!   `serve.workers` engine threads (CLI `--workers`), each owning its own
 //!   non-`Send` PJRT runtime (or a native-model clone) and its own bounded

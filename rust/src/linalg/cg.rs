@@ -55,14 +55,18 @@ pub fn cg_solve(
             )));
         }
         let alpha = rs_old / pap;
-        for i in 0..n {
-            x[i] += alpha * p[i];
-            r[i] -= alpha * ap[i];
+        // Zipped unit-stride AXPY updates — autovectorize, same per-element
+        // arithmetic as the index loops they replaced.
+        for (xi, &pi) in x.iter_mut().zip(p.iter()) {
+            *xi += alpha * pi;
+        }
+        for (ri, &api) in r.iter_mut().zip(ap.iter()) {
+            *ri -= alpha * api;
         }
         let rs_new = super::dot(&r, &r);
         let beta = rs_new / rs_old;
-        for i in 0..n {
-            p[i] = r[i] + beta * p[i];
+        for (pi, &ri) in p.iter_mut().zip(r.iter()) {
+            *pi = ri + beta * *pi;
         }
         rs_old = rs_new;
     }

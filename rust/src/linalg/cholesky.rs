@@ -98,9 +98,10 @@ impl Cholesky {
 
     /// Solve `A x = b` (one RHS).
     pub fn solve_vec(&self, b: &[f64]) -> Vec<f64> {
+        let simd = crate::linalg::simd::simd_enabled();
         let mut y = b.to_vec();
         solve_lower_inplace(&self.l, &mut y);
-        solve_lower_transpose_inplace(&self.l, &mut y);
+        solve_lower_transpose_inplace(&self.l, &mut y, simd);
         y
     }
 
@@ -108,6 +109,7 @@ impl Cholesky {
     pub fn solve_mat(&self, b: &Mat) -> Mat {
         assert_eq!(b.rows(), self.dim(), "solve_mat shape");
         // Work on Bᵀ so each RHS is a contiguous row, solve, transpose back.
+        let simd = crate::linalg::simd::simd_enabled();
         let bt = b.transpose();
         let n = self.dim();
         let k = b.cols();
@@ -116,7 +118,7 @@ impl Cholesky {
         par_chunks_mut(xt.as_mut_slice(), k, n, |_ci, _r0, chunk| {
             for row in chunk.chunks_mut(n) {
                 solve_lower_inplace(l, row);
-                solve_lower_transpose_inplace(l, row);
+                solve_lower_transpose_inplace(l, row, simd);
             }
         });
         xt.transpose()
@@ -184,15 +186,34 @@ fn solve_lower_inplace(l: &Mat, b: &mut [f64]) {
 }
 
 /// Solve `Lᵀ x = y` in place.
-fn solve_lower_transpose_inplace(l: &Mat, b: &mut [f64]) {
+///
+/// `simd = true` selects a column-oriented order: once `x_i` is final, the
+/// update `b[j] -= L[i][j]·x_i` for `j < i` runs over the contiguous row
+/// `L.row(i)` — a unit-stride AXPY the autovectorizer handles, instead of
+/// the stride-n column gather of the row-oriented form. The two orders sum
+/// the same terms differently, so the flag is computed **once per public
+/// solve entry** (`FASTKRR_SIMD`): every RHS in one call, parallel or
+/// serial, uses the same order, keeping the serial twins exact oracles.
+fn solve_lower_transpose_inplace(l: &Mat, b: &mut [f64], simd: bool) {
     let n = l.rows();
     debug_assert_eq!(b.len(), n);
-    for i in (0..n).rev() {
-        let mut s = b[i];
-        for k in (i + 1)..n {
-            s -= l[(k, i)] * b[k];
+    if simd {
+        for i in (0..n).rev() {
+            let li = l.row(i);
+            let xi = b[i] / li[i];
+            b[i] = xi;
+            for (bj, &lij) in b[..i].iter_mut().zip(li.iter()) {
+                *bj -= lij * xi;
+            }
         }
-        b[i] = s / l[(i, i)];
+    } else {
+        for i in (0..n).rev() {
+            let mut s = b[i];
+            for k in (i + 1)..n {
+                s -= l[(k, i)] * b[k];
+            }
+            b[i] = s / l[(i, i)];
+        }
     }
 }
 
@@ -211,10 +232,11 @@ pub fn solve_lower_serial(l: &Mat, b: &Mat) -> Mat {
 /// Serial reference for [`solve_lower_transpose`].
 pub fn solve_lower_transpose_serial(l: &Mat, b: &Mat) -> Mat {
     assert_eq!(l.rows(), b.rows());
+    let simd = crate::linalg::simd::simd_enabled();
     let mut xt = b.transpose();
     let n = l.rows();
     for row in xt.as_mut_slice().chunks_mut(n.max(1)) {
-        solve_lower_transpose_inplace(l, row);
+        solve_lower_transpose_inplace(l, row, simd);
     }
     xt.transpose()
 }
@@ -237,13 +259,14 @@ pub fn solve_lower(l: &Mat, b: &Mat) -> Mat {
 /// Solve `Lᵀ Y = B`.
 pub fn solve_lower_transpose(l: &Mat, b: &Mat) -> Mat {
     assert_eq!(l.rows(), b.rows());
+    let simd = crate::linalg::simd::simd_enabled();
     let bt = b.transpose();
     let n = l.rows();
     let k = b.cols();
     let mut xt = bt;
     par_chunks_mut(xt.as_mut_slice(), k, n, |_ci, _r0, chunk| {
         for row in chunk.chunks_mut(n) {
-            solve_lower_transpose_inplace(l, row);
+            solve_lower_transpose_inplace(l, row, simd);
         }
     });
     xt.transpose()

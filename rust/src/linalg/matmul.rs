@@ -1,32 +1,78 @@
 //! Blocked, multithreaded matrix multiplication.
 //!
 //! The hot products in this crate are tall-skinny: `C (n×p) · W^{+1/2} (p×p)`,
-//! `Bᵀ B (p×p from n×p)`, and kernel-block assembly feeding them. We use a
-//! cache-blocked i-k-j loop order (unit-stride inner loop over the output
-//! row) and split the row range over threads with `par_chunks_mut`. This is
-//! not a full BLAS, but it reaches a decent fraction of scalar-FMA roofline
-//! and — more importantly for the paper's claims — has the right asymptotics
-//! and parallel scaling for the O(np²) vs O(n³) comparisons.
+//! `Bᵀ B (p×p from n×p)`, and kernel-block assembly feeding them. The default
+//! path is the packed-panel SIMD GEMM from [`super::simd`]: B is packed once
+//! into `NR`-column k-major panels shared read-only across the pool, each
+//! thread packs its A rows into `MR`-row interleaved micropanels, and an
+//! `MR×NR` register-tiled microkernel does the arithmetic with 8-lane
+//! accumulators the compiler autovectorizes. Per output element the
+//! accumulation is strictly k-ascending in one register lane — the same order
+//! as the scalar/serial loops accumulate in memory — and the multiply-add is
+//! never contracted to an FMA, so on finite inputs `matmul`, `matmul_at_b`
+//! and `syrk_at_a` are **bitwise identical** across `FASTKRR_SIMD` modes and
+//! thread counts (`matmul_a_bt`'s serial twin reduces through `dot`'s
+//! pairwise tree, so it agrees to 1e-12 rather than bitwise).
+//!
+//! `FASTKRR_SIMD=off` forces the pre-SIMD cache-blocked scalar loops for
+//! bisection; the serial twins (`matmul_serial`, …) remain the oracles for
+//! `tests/property_parallel.rs` and `tests/property_simd.rs`.
 
+use super::simd::{
+    self, gemm_chunk, pack_b_rowmajor, pack_b_transposed, syrk_chunk, AOperand, MR,
+};
 use super::Mat;
-use crate::util::parallel::par_chunks_mut;
+use crate::util::parallel::{par_chunks_mut, par_chunks_mut_aligned};
 
-/// Panel size along the shared (k) dimension — sized so a `MC×KC` slice of A
-/// and a `KC×width` slice of B fit in L2.
+/// Panel size along the shared (k) dimension for the scalar fallback —
+/// sized so a `MC×KC` slice of A and a `KC×width` slice of B fit in L2.
+/// The SIMD microkernel keeps full-k accumulation in registers instead
+/// (k-blocking would reorder sums and break bitwise agreement with the
+/// serial twins).
 const KC: usize = 256;
 
 /// `A (m×k) · B (k×n)`.
 ///
-/// i-k-j loop order with KC panels along k and a 4-row micro-kernel: each
-/// B row loaded from memory is reused across 4 output rows (4× arithmetic
-/// intensity vs the naive AXPY form — §Perf item 3 in EXPERIMENTS.md).
+/// Packed-panel SIMD GEMM by default; `FASTKRR_SIMD=off` selects the scalar
+/// i-k-j loop with KC panels along k. Both orders accumulate k-ascending per
+/// element, so the two paths (and [`matmul_serial`]) agree bitwise on finite
+/// inputs.
 pub fn matmul(a: &Mat, b: &Mat) -> Mat {
-    assert_eq!(a.cols(), b.rows(), "matmul inner dims {}x{} · {}x{}", a.rows(), a.cols(), b.rows(), b.cols());
+    assert_eq!(
+        a.cols(),
+        b.rows(),
+        "matmul inner dims {}x{} · {}x{}",
+        a.rows(),
+        a.cols(),
+        b.rows(),
+        b.cols()
+    );
     let (m, k, n) = (a.rows(), a.cols(), b.cols());
     let mut out = Mat::zeros(m, n);
     if m == 0 || n == 0 || k == 0 {
         return out;
     }
+    if simd::simd_enabled() {
+        matmul_simd(a, b, &mut out);
+    } else {
+        matmul_scalar(a, b, &mut out);
+    }
+    out
+}
+
+fn matmul_simd(a: &Mat, b: &Mat, out: &mut Mat) {
+    let (k, n) = (a.cols(), b.cols());
+    let m = a.rows();
+    let a_data = a.as_slice();
+    let packed_b = pack_b_rowmajor(b.as_slice(), k, n);
+    par_chunks_mut_aligned(out.as_mut_slice(), m, n, MR, |_ci, row0, chunk| {
+        gemm_chunk(chunk, n, k, &AOperand::Rows { data: a_data, row0 }, &packed_b);
+    });
+}
+
+fn matmul_scalar(a: &Mat, b: &Mat, out: &mut Mat) {
+    let (k, n) = (a.cols(), b.cols());
+    let m = a.rows();
     let a_data = a.as_slice();
     let b_data = b.as_slice();
     par_chunks_mut(out.as_mut_slice(), m, n, |_ci, row0, chunk| {
@@ -34,7 +80,8 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
         for kb in (0..k).step_by(KC) {
             let kend = (kb + KC).min(k);
             let mut r = 0usize;
-            // 4-row micro-kernel.
+            // 4-row micro-kernel: each B row loaded from memory is reused
+            // across 4 output rows.
             while r + 4 <= rows_here {
                 let (c01, c23) = chunk[r * n..(r + 4) * n].split_at_mut(2 * n);
                 let (c0, c1) = c01.split_at_mut(n);
@@ -56,15 +103,14 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
                 }
                 r += 4;
             }
-            // Remainder rows.
+            // Remainder rows. No zero-skip here: skipping `a[i][k] == 0.0`
+            // terms would give remainder rows different NaN/−0.0 propagation
+            // than microkernel rows within one product.
             while r < rows_here {
                 let arow = &a_data[(row0 + r) * k..(row0 + r + 1) * k];
                 let crow = &mut chunk[r * n..(r + 1) * n];
                 for kk in kb..kend {
                     let aik = arow[kk];
-                    if aik == 0.0 {
-                        continue;
-                    }
                     let brow = &b_data[kk * n..(kk + 1) * n];
                     for (c, &bv) in crow.iter_mut().zip(brow.iter()) {
                         *c += aik * bv;
@@ -74,7 +120,6 @@ pub fn matmul(a: &Mat, b: &Mat) -> Mat {
             }
         }
     });
-    out
 }
 
 /// `Aᵀ (k×m)ᵀ · B (k×n)` i.e. `AᵀB` where A is k×m — avoids materializing Aᵀ.
@@ -85,11 +130,19 @@ pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
     if m == 0 || n == 0 || k == 0 {
         return out;
     }
-    // out[i][j] = Σ_t a[t][i] b[t][j]: accumulate rank-1 updates per t.
-    // Parallelize over output rows i by giving each thread a band of i and
-    // streaming over t.
     let a_data = a.as_slice();
     let b_data = b.as_slice();
+    if simd::simd_enabled() {
+        // Logical row i of the product is column i of A; the packer reads
+        // those columns directly, so Aᵀ is never materialized here either.
+        let packed_b = pack_b_rowmajor(b_data, k, n);
+        par_chunks_mut_aligned(out.as_mut_slice(), m, n, MR, |_ci, row0, chunk| {
+            gemm_chunk(chunk, n, k, &AOperand::Cols { data: a_data, m, row0 }, &packed_b);
+        });
+        return out;
+    }
+    // Scalar path: out[i][j] = Σ_t a[t][i] b[t][j], accumulated as rank-1
+    // updates per t — each thread owns a band of i and streams over t.
     par_chunks_mut(out.as_mut_slice(), m, n, |_ci, i0, chunk| {
         let rows_here = chunk.len() / n;
         for t in 0..k {
@@ -97,9 +150,6 @@ pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
             let brow = &b_data[t * n..(t + 1) * n];
             for r in 0..rows_here {
                 let ati = arow[i0 + r];
-                if ati == 0.0 {
-                    continue;
-                }
                 let crow = &mut chunk[r * n..(r + 1) * n];
                 for (c, &bv) in crow.iter_mut().zip(brow.iter()) {
                     *c += ati * bv;
@@ -110,7 +160,9 @@ pub fn matmul_at_b(a: &Mat, b: &Mat) -> Mat {
     out
 }
 
-/// `A (m×k) · Bᵀ (n×k)ᵀ` — output m×n via row-dot-row (both unit stride).
+/// `A (m×k) · Bᵀ (n×k)ᵀ` — output m×n. The SIMD path packs B's rows into
+/// transposed panels and reuses the GEMM microkernel; the scalar path is
+/// row-dot-row (both unit stride).
 pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols(), b.cols(), "matmul_a_bt shared dim");
     let (m, k, n) = (a.rows(), a.cols(), b.rows());
@@ -120,6 +172,13 @@ pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
     }
     let a_data = a.as_slice();
     let b_data = b.as_slice();
+    if simd::simd_enabled() {
+        let packed_b = pack_b_transposed(b_data, n, k);
+        par_chunks_mut_aligned(out.as_mut_slice(), m, n, MR, |_ci, row0, chunk| {
+            gemm_chunk(chunk, n, k, &AOperand::Rows { data: a_data, row0 }, &packed_b);
+        });
+        return out;
+    }
     par_chunks_mut(out.as_mut_slice(), m, n, |_ci, row0, chunk| {
         let rows_here = chunk.len() / n;
         for r in 0..rows_here {
@@ -139,7 +198,8 @@ pub fn matmul_a_bt(a: &Mat, b: &Mat) -> Mat {
 // Single-threaded twins of the parallel kernels above, using the same
 // per-element accumulation order, so the property suite can assert that the
 // pool-scheduled versions are (bitwise-or-1e-12) identical across chunk
-// counts. They are also the ablation baselines in `bench_linalg`.
+// counts and FASTKRR_SIMD modes. They are also the ablation baselines in
+// `bench_linalg`.
 
 /// Serial `A (m×k) · B (k×n)` — same k-ascending accumulation order as
 /// [`matmul`], no threading.
@@ -170,7 +230,7 @@ pub fn matmul_serial(a: &Mat, b: &Mat) -> Mat {
     out
 }
 
-/// Serial `A · Bᵀ` — same row-dot-row kernel as [`matmul_a_bt`].
+/// Serial `A · Bᵀ` — same row-dot-row kernel as the scalar [`matmul_a_bt`].
 pub fn matmul_a_bt_serial(a: &Mat, b: &Mat) -> Mat {
     assert_eq!(a.cols(), b.cols(), "matmul_a_bt_serial shared dim");
     let (m, k, n) = (a.rows(), a.cols(), b.rows());
@@ -190,7 +250,8 @@ pub fn matmul_a_bt_serial(a: &Mat, b: &Mat) -> Mat {
     out
 }
 
-/// Serial `AᵀA` — same t-major accumulation order as [`syrk_at_a`].
+/// Serial `AᵀA` — same t-major accumulation order as the scalar
+/// [`syrk_at_a`].
 pub fn syrk_at_a_serial(a: &Mat) -> Mat {
     let (n, p) = (a.rows(), a.cols());
     let mut out = Mat::zeros(p, p);
@@ -203,9 +264,6 @@ pub fn syrk_at_a_serial(a: &Mat) -> Mat {
         let arow = &a_data[t * p..(t + 1) * p];
         for i in 0..p {
             let ati = arow[i];
-            if ati == 0.0 {
-                continue;
-            }
             let crow = &mut chunk[i * p..(i + 1) * p];
             for j in i..p {
                 crow[j] += ati * arow[j];
@@ -229,24 +287,31 @@ pub fn syrk_at_a(a: &Mat) -> Mat {
         return out;
     }
     let a_data = a.as_slice();
-    // Parallelize over rows i of the output; each computes entries j >= i.
-    par_chunks_mut(out.as_mut_slice(), p, p, |_ci, i0, chunk| {
-        let rows_here = chunk.len() / p;
-        for t in 0..n {
-            let arow = &a_data[t * p..(t + 1) * p];
-            for r in 0..rows_here {
-                let i = i0 + r;
-                let ati = arow[i];
-                if ati == 0.0 {
-                    continue;
-                }
-                let crow = &mut chunk[r * p..(r + 1) * p];
-                for j in i..p {
-                    crow[j] += ati * arow[j];
+    if simd::simd_enabled() {
+        // A's columns are the logical left-operand rows AND the packed
+        // right-operand panels; panels fully left of a row group's diagonal
+        // are skipped inside syrk_chunk.
+        let packed = pack_b_rowmajor(a_data, n, p);
+        par_chunks_mut_aligned(out.as_mut_slice(), p, p, MR, |_ci, row0, chunk| {
+            syrk_chunk(chunk, p, n, &AOperand::Cols { data: a_data, m: p, row0 }, &packed, row0);
+        });
+    } else {
+        // Parallelize over rows i of the output; each computes entries j >= i.
+        par_chunks_mut(out.as_mut_slice(), p, p, |_ci, i0, chunk| {
+            let rows_here = chunk.len() / p;
+            for t in 0..n {
+                let arow = &a_data[t * p..(t + 1) * p];
+                for r in 0..rows_here {
+                    let i = i0 + r;
+                    let ati = arow[i];
+                    let crow = &mut chunk[r * p..(r + 1) * p];
+                    for j in i..p {
+                        crow[j] += ati * arow[j];
+                    }
                 }
             }
-        }
-    });
+        });
+    }
     // Mirror the strict upper triangle.
     for i in 0..p {
         for j in (i + 1)..p {
@@ -329,6 +394,94 @@ mod tests {
                 < 1e-12
         );
         assert!(syrk_at_a(&a).sub(&syrk_at_a_serial(&a)).unwrap().max_abs() < 1e-12);
+    }
+
+    #[test]
+    fn simd_paths_bitwise_match_scalar_and_serial() {
+        // The SIMD microkernel accumulates each output element in the same
+        // strict k-ascending order as the scalar/serial loops, with no FMA
+        // contraction — so these products are bitwise identical, not merely
+        // 1e-12-close. (matmul_a_bt is excluded: its serial twin reduces
+        // through dot's pairwise tree.)
+        let a = randmat(37, 29, 31);
+        let b = randmat(29, 23, 32);
+        let serial = matmul_serial(&a, &b);
+        let mut via_simd = Mat::zeros(37, 23);
+        let mut via_scalar = Mat::zeros(37, 23);
+        matmul_simd(&a, &b, &mut via_simd);
+        matmul_scalar(&a, &b, &mut via_scalar);
+        for i in 0..37 {
+            for j in 0..23 {
+                let (s, sc, se) = (via_simd[(i, j)], via_scalar[(i, j)], serial[(i, j)]);
+                assert_eq!(s.to_bits(), se.to_bits(), "simd vs serial at ({i},{j})");
+                assert_eq!(sc.to_bits(), se.to_bits(), "scalar vs serial at ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn nan_and_negative_zero_propagate_uniformly() {
+        // Regression for the old remainder-row `if aik == 0.0 { continue; }`
+        // skip: −0.0 == 0.0 is true, so rows handled by the remainder loop
+        // used to drop 0·NaN/0·inf terms that microkernel rows kept —
+        // NaN/−0.0 propagation differed by row index within one product.
+        // With identical A rows, every output row must now be bit-identical,
+        // and col 0 must be NaN (0 · NaN), on both dispatch paths.
+        let m = 6; // > MR, so remainder rows exist in every path
+        let mut a = Mat::zeros(m, 3);
+        for r in 0..m {
+            a[(r, 0)] = 0.0;
+            a[(r, 1)] = 1.0;
+            a[(r, 2)] = -0.0;
+        }
+        let mut b = Mat::zeros(3, 4);
+        b[(0, 0)] = f64::NAN;
+        b[(0, 1)] = f64::INFINITY;
+        b[(0, 2)] = -0.0;
+        b[(0, 3)] = 1.0;
+        for j in 0..4 {
+            b[(1, j)] = j as f64 + 1.0;
+            b[(2, j)] = -(j as f64) - 1.0;
+        }
+        for scalar in [false, true] {
+            let mut c = Mat::zeros(m, 4);
+            if scalar {
+                matmul_scalar(&a, &b, &mut c);
+            } else {
+                matmul_simd(&a, &b, &mut c);
+            }
+            assert!(c[(0, 0)].is_nan(), "0·NaN must stay NaN (scalar={scalar})");
+            let row0: Vec<u64> = (0..4).map(|j| c[(0, j)].to_bits()).collect();
+            for r in 1..m {
+                for j in 0..4 {
+                    assert_eq!(
+                        c[(r, j)].to_bits(),
+                        row0[j],
+                        "row {r} differs from row 0 at col {j} (scalar={scalar})"
+                    );
+                }
+            }
+        }
+        // syrk's serial twin also dropped zero terms; with a NaN payload in
+        // A, parallel and serial must now agree bit-for-bit.
+        let mut a2 = Mat::zeros(5, 3);
+        for r in 0..5 {
+            a2[(r, 0)] = 0.0;
+            a2[(r, 1)] = 1.0;
+            a2[(r, 2)] = 2.0;
+        }
+        a2[(0, 1)] = f64::NAN;
+        let par = syrk_at_a(&a2);
+        let ser = syrk_at_a_serial(&a2);
+        for i in 0..3 {
+            for j in 0..3 {
+                let (p, s) = (par[(i, j)], ser[(i, j)]);
+                assert!(
+                    p.to_bits() == s.to_bits() || (p.is_nan() && s.is_nan()),
+                    "syrk NaN propagation differs at ({i},{j})"
+                );
+            }
+        }
     }
 
     #[test]

@@ -14,6 +14,7 @@ mod cg;
 mod cholesky;
 mod eigh;
 mod matmul;
+pub mod simd;
 
 pub use cg::{cg_solve, cg_solve_dense, CgResult};
 pub use cholesky::{
@@ -249,15 +250,16 @@ impl Mat {
         y
     }
 
-    /// `selfᵀ * x`.
+    /// `selfᵀ * x` — row-major AXPY accumulation. The zipped unit-stride
+    /// update autovectorizes cleanly and is elementwise-identical to the
+    /// index loop it replaced (same per-element op order).
     pub fn matvec_t(&self, x: &[f64]) -> Vec<f64> {
         assert_eq!(x.len(), self.rows, "matvec_t shape");
         let mut y = vec![0.0; self.cols];
-        for r in 0..self.rows {
-            let xr = x[r];
+        for (r, &xr) in x.iter().enumerate() {
             let row = self.row(r);
-            for c in 0..self.cols {
-                y[c] += xr * row[c];
+            for (yc, &rc) in y.iter_mut().zip(row.iter()) {
+                *yc += xr * rc;
             }
         }
         y
@@ -332,25 +334,49 @@ impl std::ops::IndexMut<(usize, usize)> for Mat {
     }
 }
 
-/// Dot product with 4-way unrolling (the compiler autovectorizes this form).
+/// Dot product with two 8-lane accumulators ([`simd::F64x8`]) and a fixed
+/// pairwise-tree horizontal sum, scalar tail. The reduction order depends
+/// only on the slice length, so results are deterministic across thread
+/// counts and `FASTKRR_SIMD` modes (the mode gate doesn't apply here: this
+/// form is the single implementation and autovectorizes on its own).
 #[inline]
 pub fn dot(a: &[f64], b: &[f64]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
-    let n = a.len();
-    let chunks = n / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
-    for i in 0..chunks {
-        let j = i * 4;
-        s0 += a[j] * b[j];
-        s1 += a[j + 1] * b[j + 1];
-        s2 += a[j + 2] * b[j + 2];
-        s3 += a[j + 3] * b[j + 3];
+    const W: usize = 2 * simd::LANES;
+    let mut acc0 = simd::F64x8::zero();
+    let mut acc1 = simd::F64x8::zero();
+    let mut ca = a.chunks_exact(W);
+    let mut cb = b.chunks_exact(W);
+    const L: usize = simd::LANES;
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        acc0 = acc0.madd(simd::F64x8::load(&xa[..L]), simd::F64x8::load(&xb[..L]));
+        acc1 = acc1.madd(simd::F64x8::load(&xa[L..]), simd::F64x8::load(&xb[L..]));
     }
-    let mut s = s0 + s1 + s2 + s3;
-    for i in chunks * 4..n {
-        s += a[i] * b[i];
+    let mut s = acc0.add(acc1).hsum();
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        s += x * y;
     }
     s
+}
+
+/// Squared Euclidean norm of every row — the `‖x_i‖²` vector the RBF cross
+/// path and the Linear/Polynomial `diag` share. Row-parallel above the same
+/// work threshold `matvec` uses; per-row results equal `dot(row, row)`
+/// exactly either way.
+pub fn row_sq_norms(x: &Mat) -> Vec<f64> {
+    const PAR_THRESHOLD: usize = 32 * 1024;
+    if x.rows() * x.cols() >= PAR_THRESHOLD && x.rows() >= 8 {
+        return crate::util::parallel::par_fill(x.rows(), 32, |r| {
+            let row = x.row(r);
+            dot(row, row)
+        });
+    }
+    (0..x.rows())
+        .map(|r| {
+            let row = x.row(r);
+            dot(row, row)
+        })
+        .collect()
 }
 
 /// `‖a - b‖₂` for vectors.
@@ -453,10 +479,28 @@ mod tests {
 
     #[test]
     fn dot_matches_naive() {
-        let a: Vec<f64> = (0..17).map(|i| i as f64 * 0.3).collect();
-        let b: Vec<f64> = (0..17).map(|i| (i as f64).sin()).collect();
-        let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
-        assert!((dot(&a, &b) - naive).abs() < 1e-12);
+        // Cover every residue class of the 16-wide main loop plus the
+        // 8-lane boundary shapes.
+        for n in [0usize, 1, 7, 8, 9, 15, 16, 17, 23, 31, 32, 33, 40] {
+            let a: Vec<f64> = (0..n).map(|i| i as f64 * 0.3).collect();
+            let b: Vec<f64> = (0..n).map(|i| (i as f64).sin()).collect();
+            let naive: f64 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+            assert!((dot(&a, &b) - naive).abs() < 1e-12, "n={n}");
+        }
+    }
+
+    #[test]
+    fn row_sq_norms_matches_per_row_dot() {
+        // Small (serial) and large (parallel) shapes; both must equal
+        // dot(row, row) exactly.
+        for (r, c) in [(5usize, 7usize), (300, 128)] {
+            let m = Mat::from_fn(r, c, |i, j| ((i * 13 + j * 5) % 11) as f64 - 5.0);
+            let got = row_sq_norms(&m);
+            assert_eq!(got.len(), r);
+            for i in 0..r {
+                assert_eq!(got[i], dot(m.row(i), m.row(i)), "row {i} of {r}x{c}");
+            }
+        }
     }
 
     #[test]

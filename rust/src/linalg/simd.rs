@@ -1,0 +1,568 @@
+//! Explicit-width SIMD microkernel layer for the dense-math substrate.
+//!
+//! Everything here is portable Rust: [`F64x8`] is a plain 8-lane `f64`
+//! accumulator struct whose lane-wise loops the compiler autovectorizes to
+//! AVX-512 / AVX2 / NEON as available — no `std::arch` intrinsics, so the
+//! same source is correct (and bit-identical) on every target. The layer
+//! provides:
+//!
+//! - **Packed-panel GEMM building blocks** — B is packed once into
+//!   [`NR`]-column panels ([`pack_b_rowmajor`] / [`pack_b_transposed`]),
+//!   A into [`MR`]-row interleaved micropanels ([`pack_a_group`]), and
+//!   [`microkernel`] computes an `MR×NR` register tile with an unrolled
+//!   multiply-add chain. `matmul`, `matmul_a_bt`, `matmul_at_b` and
+//!   `syrk_at_a` all drive these through [`gemm_chunk`] / [`syrk_chunk`]
+//!   from their pool-sharded row panels.
+//! - **Determinism by construction** — each output element accumulates its
+//!   k-terms in strictly ascending order inside one register lane, exactly
+//!   the order the serial twins use in memory, and [`F64x8::madd`] is a
+//!   separate multiply + add (Rust never contracts to a fused FMA without
+//!   an explicit `mul_add`), so the SIMD paths are bitwise identical to
+//!   the scalar/serial references on finite inputs and chunk-count
+//!   invariant like everything else on the pool.
+//! - **`FASTKRR_SIMD` gating** — read per top-level op call (the same
+//!   pattern `num_threads()` uses for `FASTKRR_THREADS`): `off` forces the
+//!   pre-existing scalar loop structures for bisection, `fastexp`
+//!   additionally enables the vectorized exponential ([`fast_exp`]) in the
+//!   kernel epilogues, anything else (including unset) is the default SIMD
+//!   path with bit-compatible `f64::exp`.
+//!
+//! The reduction order of [`dot`](super::dot)-style horizontal sums is a
+//! fixed pairwise tree ([`F64x8::hsum`]), so those results are identical
+//! across thread counts too, just not bitwise-equal to a sequential sum.
+
+/// Lanes per accumulator vector. 8×f64 = one AVX-512 register or two AVX2 /
+/// four NEON registers — wide enough to keep any of them busy.
+pub const LANES: usize = 8;
+
+/// Microkernel tile height (rows of A per register tile). 4 rows × one
+/// [`F64x8`] each = 8 ymm registers on AVX2, leaving room for the B load
+/// and the A broadcast without spilling.
+pub const MR: usize = 4;
+
+/// Microkernel tile width (columns of B per register tile) — one [`F64x8`].
+pub const NR: usize = LANES;
+
+// ---- lane type -----------------------------------------------------------
+
+/// 8-lane `f64` vector. A plain array wrapper: all ops are lane-wise loops
+/// the autovectorizer turns into vector instructions.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct F64x8(pub [f64; LANES]);
+
+impl F64x8 {
+    /// All-zero vector.
+    #[inline(always)]
+    pub fn zero() -> Self {
+        Self([0.0; LANES])
+    }
+
+    /// Broadcast one scalar to all lanes.
+    #[inline(always)]
+    pub fn splat(v: f64) -> Self {
+        Self([v; LANES])
+    }
+
+    /// Load 8 contiguous values. Panics if `s` has fewer than 8 elements.
+    #[inline(always)]
+    pub fn load(s: &[f64]) -> Self {
+        let a: &[f64; LANES] = s[..LANES].try_into().expect("F64x8::load needs 8 lanes");
+        Self(*a)
+    }
+
+    /// `self + a * b`, lane-wise, as a separate multiply then add (two
+    /// roundings). Never a contracted FMA: results stay bit-stable across
+    /// ISAs and match the scalar reference loops exactly.
+    #[inline(always)]
+    pub fn madd(self, a: Self, b: Self) -> Self {
+        let mut out = self.0;
+        for ((o, &x), &y) in out.iter_mut().zip(a.0.iter()).zip(b.0.iter()) {
+            *o += x * y;
+        }
+        Self(out)
+    }
+
+    /// Lane-wise sum.
+    #[inline(always)]
+    pub fn add(self, rhs: Self) -> Self {
+        let mut out = self.0;
+        for (o, &x) in out.iter_mut().zip(rhs.0.iter()) {
+            *o += x;
+        }
+        Self(out)
+    }
+
+    /// Lane-wise difference.
+    #[inline(always)]
+    pub fn sub(self, rhs: Self) -> Self {
+        let mut out = self.0;
+        for (o, &x) in out.iter_mut().zip(rhs.0.iter()) {
+            *o -= x;
+        }
+        Self(out)
+    }
+
+    /// Lane-wise absolute value.
+    #[inline(always)]
+    pub fn abs(self) -> Self {
+        let mut out = self.0;
+        for o in out.iter_mut() {
+            *o = o.abs();
+        }
+        Self(out)
+    }
+
+    /// Horizontal sum with a *fixed* pairwise tree —
+    /// `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))` — so reductions built on it
+    /// are deterministic regardless of how the caller chunked its data.
+    #[inline(always)]
+    pub fn hsum(self) -> f64 {
+        let a = self.0;
+        ((a[0] + a[1]) + (a[2] + a[3])) + ((a[4] + a[5]) + (a[6] + a[7]))
+    }
+}
+
+// ---- mode gating ---------------------------------------------------------
+
+/// Which dense-math path to take, from `FASTKRR_SIMD`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SimdMode {
+    /// Scalar escape hatch for bisection: the pre-SIMD loop structures.
+    Off,
+    /// Packed-panel SIMD kernels, bit-compatible `f64::exp` epilogues.
+    On,
+    /// SIMD kernels plus the vectorized polynomial [`fast_exp`] in the
+    /// RBF/Laplacian epilogues (~1 ulp, flushes to 0 below e⁻⁷⁰⁸).
+    FastExp,
+}
+
+/// Parse a `FASTKRR_SIMD` value. Unset/unknown default to [`SimdMode::On`].
+pub(crate) fn parse_mode(v: Option<&str>) -> SimdMode {
+    match v {
+        Some(s) if s.eq_ignore_ascii_case("off") || s == "0" => SimdMode::Off,
+        Some(s) if s.eq_ignore_ascii_case("fastexp") => SimdMode::FastExp,
+        _ => SimdMode::On,
+    }
+}
+
+/// Current mode from the `FASTKRR_SIMD` env var, read per call (same
+/// convention as `num_threads()` reading `FASTKRR_THREADS`).
+pub fn simd_mode() -> SimdMode {
+    parse_mode(std::env::var("FASTKRR_SIMD").ok().as_deref())
+}
+
+/// Whether the SIMD paths are active (i.e. mode is not [`SimdMode::Off`]).
+pub fn simd_enabled() -> bool {
+    simd_mode() != SimdMode::Off
+}
+
+/// Stable name for reports and the machine-readable bench records.
+pub fn mode_name() -> &'static str {
+    match simd_mode() {
+        SimdMode::Off => "off",
+        SimdMode::On => "on",
+        SimdMode::FastExp => "fastexp",
+    }
+}
+
+// ---- operand packing -----------------------------------------------------
+
+/// Where the logical left operand's rows live. `pack_a_group` reads either
+/// a row-major matrix directly or the columns of a row-major matrix (for
+/// the `AᵀB` / `AᵀA` products, which never materialize the transpose).
+pub(crate) enum AOperand<'a> {
+    /// Row-major `m×k` storage; logical row `i` is `data[(row0+i)*k ..]`.
+    Rows { data: &'a [f64], row0: usize },
+    /// Transposed source: logical row `i` is column `row0+i` of a
+    /// row-major `k×m` matrix (`m` = row stride).
+    Cols { data: &'a [f64], m: usize, row0: usize },
+}
+
+/// Pack `mr ≤ MR` logical rows (starting at `first` within the chunk) into
+/// an interleaved `k×MR` micropanel: slot `(kk, r)` at `dst[kk*MR + r]`.
+/// Rows `mr..MR` are zero-filled so the full-width microkernel can run on
+/// remainder groups (the padded lanes' results are simply not stored).
+pub(crate) fn pack_a_group(src: &AOperand<'_>, k: usize, first: usize, mr: usize, dst: &mut [f64]) {
+    debug_assert!(dst.len() >= k * MR);
+    if mr < MR {
+        dst[..k * MR].fill(0.0);
+    }
+    match *src {
+        AOperand::Rows { data, row0 } => {
+            for r in 0..mr {
+                let base = (row0 + first + r) * k;
+                let row = &data[base..base + k];
+                for (slot, &v) in dst.iter_mut().skip(r).step_by(MR).zip(row.iter()) {
+                    *slot = v;
+                }
+            }
+        }
+        AOperand::Cols { data, m, row0 } => {
+            let c0 = row0 + first;
+            for (dstk, srow) in dst.chunks_exact_mut(MR).zip(data.chunks_exact(m)) {
+                for (slot, &v) in dstk.iter_mut().zip(srow[c0..c0 + mr].iter()) {
+                    *slot = v;
+                }
+            }
+        }
+    }
+}
+
+/// Pack a row-major `k×n` B into `⌈n/NR⌉` column panels, each `k×NR`
+/// k-major (`panel[kk*NR + l]` = `B[kk][j0+l]`), zero-padded past column
+/// `n`. Packed once per product and shared read-only by every chunk.
+pub(crate) fn pack_b_rowmajor(b: &[f64], k: usize, n: usize) -> Vec<f64> {
+    let npan = n.div_ceil(NR);
+    let mut packed = vec![0.0f64; npan * k * NR];
+    if n == 0 || k == 0 {
+        return packed;
+    }
+    for (jb, panel) in packed.chunks_exact_mut(k * NR).enumerate() {
+        let j0 = jb * NR;
+        let w = NR.min(n - j0);
+        for (dstk, brow) in panel.chunks_exact_mut(NR).zip(b.chunks_exact(n)) {
+            dstk[..w].copy_from_slice(&brow[j0..j0 + w]);
+        }
+    }
+    packed
+}
+
+/// Pack `Bᵀ` panels from a row-major `n×k` source (so the product sees a
+/// `k×n` B without materializing the transpose): `panel[kk*NR + l]` =
+/// `b[(j0+l)*k + kk]`.
+pub(crate) fn pack_b_transposed(b: &[f64], n: usize, k: usize) -> Vec<f64> {
+    let npan = n.div_ceil(NR);
+    let mut packed = vec![0.0f64; npan * k * NR];
+    if n == 0 || k == 0 {
+        return packed;
+    }
+    for (jb, panel) in packed.chunks_exact_mut(k * NR).enumerate() {
+        let j0 = jb * NR;
+        let w = NR.min(n - j0);
+        for (l, brow) in b[j0 * k..(j0 + w) * k].chunks_exact(k).enumerate() {
+            for (slot, &v) in panel.iter_mut().skip(l).step_by(NR).zip(brow.iter()) {
+                *slot = v;
+            }
+        }
+    }
+    packed
+}
+
+// ---- microkernel + drivers -----------------------------------------------
+
+/// The `MR×NR` register tile: `acc[r] += Σ_kk apack[kk][r] · bp[kk][..]`
+/// with all four row accumulators live across the whole k loop. Per output
+/// element the accumulation is strictly kk-ascending in one register —
+/// the same order as the serial references' memory accumulation.
+#[inline(always)]
+pub(crate) fn microkernel(apack: &[f64], bp: &[f64], k: usize) -> [F64x8; MR] {
+    let mut acc = [F64x8::zero(); MR];
+    for (a4, b8) in apack.chunks_exact(MR).take(k).zip(bp.chunks_exact(NR)) {
+        let bv = F64x8::load(b8);
+        acc[0] = acc[0].madd(F64x8::splat(a4[0]), bv);
+        acc[1] = acc[1].madd(F64x8::splat(a4[1]), bv);
+        acc[2] = acc[2].madd(F64x8::splat(a4[2]), bv);
+        acc[3] = acc[3].madd(F64x8::splat(a4[3]), bv);
+    }
+    acc
+}
+
+/// Accumulate one pool chunk (`rows_here×n`, rows starting at the logical
+/// row the caller packed `a` against) of `C += A·B` from a fully packed B.
+/// `chunk` must be zero-initialized (or hold a partial sum to extend).
+pub(crate) fn gemm_chunk(
+    chunk: &mut [f64],
+    n: usize,
+    k: usize,
+    a: &AOperand<'_>,
+    packed_b: &[f64],
+) {
+    if n == 0 || k == 0 || chunk.is_empty() {
+        return;
+    }
+    let rows_here = chunk.len() / n;
+    let npan = n.div_ceil(NR);
+    debug_assert_eq!(packed_b.len(), npan * k * NR);
+    let mut apack = vec![0.0f64; k * MR];
+    let mut first = 0usize;
+    while first < rows_here {
+        let mr = MR.min(rows_here - first);
+        pack_a_group(a, k, first, mr, &mut apack);
+        for jb in 0..npan {
+            let bp = &packed_b[jb * k * NR..(jb + 1) * k * NR];
+            let acc = microkernel(&apack, bp, k);
+            let j0 = jb * NR;
+            let w = NR.min(n - j0);
+            for (r, accr) in acc.iter().enumerate().take(mr) {
+                let off = (first + r) * n + j0;
+                for (slot, &v) in chunk[off..off + w].iter_mut().zip(accr.0.iter()) {
+                    *slot += v;
+                }
+            }
+        }
+        first += MR;
+    }
+}
+
+/// Like [`gemm_chunk`] but for the symmetric product `AᵀA`: only entries
+/// `j ≥ i` (global row index `i = row0 + chunk row`) are stored; panels
+/// entirely left of the group's diagonal are skipped. The caller mirrors
+/// the strict upper triangle afterwards.
+pub(crate) fn syrk_chunk(
+    chunk: &mut [f64],
+    p: usize,
+    k: usize,
+    a: &AOperand<'_>,
+    packed_b: &[f64],
+    row0: usize,
+) {
+    if p == 0 || k == 0 || chunk.is_empty() {
+        return;
+    }
+    let rows_here = chunk.len() / p;
+    let npan = p.div_ceil(NR);
+    let mut apack = vec![0.0f64; k * MR];
+    let mut first = 0usize;
+    while first < rows_here {
+        let mr = MR.min(rows_here - first);
+        pack_a_group(a, k, first, mr, &mut apack);
+        for jb in (row0 + first) / NR..npan {
+            let bp = &packed_b[jb * k * NR..(jb + 1) * k * NR];
+            let acc = microkernel(&apack, bp, k);
+            let j0 = jb * NR;
+            let w = NR.min(p - j0);
+            for (r, accr) in acc.iter().enumerate().take(mr) {
+                let i = row0 + first + r;
+                let lo = i.max(j0);
+                if lo >= j0 + w {
+                    continue;
+                }
+                let off = (first + r) * p;
+                for (slot, &v) in chunk[off + lo..off + j0 + w]
+                    .iter_mut()
+                    .zip(accr.0[lo - j0..w].iter())
+                {
+                    *slot += v;
+                }
+            }
+        }
+        first += MR;
+    }
+}
+
+// ---- vectorized distance + exp helpers -----------------------------------
+
+/// `Σ|a_i − b_i|` with 8-lane accumulation, fixed-tree horizontal sum,
+/// scalar tail — the Laplacian kernel's distance primitive.
+#[inline]
+pub fn l1_dist(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut acc = F64x8::zero();
+    let mut ca = a.chunks_exact(LANES);
+    let mut cb = b.chunks_exact(LANES);
+    for (xa, xb) in (&mut ca).zip(&mut cb) {
+        acc = acc.add(F64x8::load(xa).sub(F64x8::load(xb)).abs());
+    }
+    let mut s = acc.hsum();
+    for (x, y) in ca.remainder().iter().zip(cb.remainder()) {
+        s += (x - y).abs();
+    }
+    s
+}
+
+// fdlibm's two-part Cody–Waite split of ln 2: k·LN2_HI is exact for the
+// |k| ≤ 1021 range reduction produces, LN2_LO carries the low bits.
+const LN2_HI: f64 = 6.931_471_803_691_238_16e-1;
+const LN2_LO: f64 = 1.908_214_929_270_587_7e-10;
+
+/// `exp(r)` for `|r| ≤ ½ln2` — degree-13 Taylor via Horner. Truncation
+/// ≈ 4e-18 relative, well under rounding noise.
+#[inline(always)]
+fn exp_poly(r: f64) -> f64 {
+    const C: [f64; 14] = [
+        1.0,
+        1.0,
+        1.0 / 2.0,
+        1.0 / 6.0,
+        1.0 / 24.0,
+        1.0 / 120.0,
+        1.0 / 720.0,
+        1.0 / 5040.0,
+        1.0 / 40320.0,
+        1.0 / 362880.0,
+        1.0 / 3628800.0,
+        1.0 / 39916800.0,
+        1.0 / 479001600.0,
+        1.0 / 6227020800.0,
+    ];
+    let mut p = C[13];
+    for &c in C[..13].iter().rev() {
+        p = p * r + c;
+    }
+    p
+}
+
+/// Fast `exp(x)`: round-to-nearest power-of-two reduction `x = k·ln2 + r`,
+/// polynomial on `r`, scale by `2^k` built directly in the exponent field.
+/// Accuracy ~1 ulp over the kernel-epilogue range; deviations from
+/// `f64::exp`: flushes to exactly 0 below −708 (where `exp` returns
+/// subnormals ≤ 3e-308) and saturates to `∞` above +708. NaN propagates.
+/// Opt-in via `FASTKRR_SIMD=fastexp`; excluded from the 1e-12 oracle soaks.
+#[inline]
+pub fn fast_exp(x: f64) -> f64 {
+    if x.is_nan() {
+        return x;
+    }
+    if x < -708.0 {
+        return 0.0;
+    }
+    if x > 708.0 {
+        return f64::INFINITY;
+    }
+    let k = (x * std::f64::consts::LOG2_E).round();
+    let r = (x - k * LN2_HI) - k * LN2_LO;
+    // |k| ≤ 1021 here, so the biased exponent 1023+k stays in (0, 2047);
+    // subnormal results arise only from the final multiply's gradual
+    // underflow, which rounds correctly.
+    let scale = f64::from_bits(((1023 + k as i64) as u64) << 52);
+    exp_poly(r) * scale
+}
+
+/// Lane-wise [`fast_exp`].
+#[inline]
+pub fn fast_exp8(v: F64x8) -> F64x8 {
+    let mut out = v.0;
+    for o in out.iter_mut() {
+        *o = fast_exp(*o);
+    }
+    F64x8(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_ops_basic() {
+        let a = F64x8([1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        let b = F64x8::splat(2.0);
+        assert_eq!(a.add(b).0[0], 3.0);
+        assert_eq!(a.sub(b).0[7], 6.0);
+        assert_eq!(F64x8::zero().madd(a, b).0[3], 8.0);
+        assert_eq!(a.hsum(), 36.0);
+        assert_eq!(F64x8([-1.0; LANES]).abs().0[5], 1.0);
+        let s: Vec<f64> = (0..10).map(|i| i as f64).collect();
+        assert_eq!(F64x8::load(&s).0[7], 7.0);
+    }
+
+    #[test]
+    fn mode_parse() {
+        assert_eq!(parse_mode(None), SimdMode::On);
+        assert_eq!(parse_mode(Some("")), SimdMode::On);
+        assert_eq!(parse_mode(Some("on")), SimdMode::On);
+        assert_eq!(parse_mode(Some("off")), SimdMode::Off);
+        assert_eq!(parse_mode(Some("OFF")), SimdMode::Off);
+        assert_eq!(parse_mode(Some("0")), SimdMode::Off);
+        assert_eq!(parse_mode(Some("fastexp")), SimdMode::FastExp);
+        assert_eq!(parse_mode(Some("FastExp")), SimdMode::FastExp);
+        assert_eq!(parse_mode(Some("banana")), SimdMode::On);
+    }
+
+    #[test]
+    fn pack_b_rowmajor_layout_and_padding() {
+        // 2×3 B, one panel of width NR: columns 3..8 zero-padded.
+        let b = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let packed = pack_b_rowmajor(&b, 2, 3);
+        assert_eq!(packed.len(), 2 * NR);
+        assert_eq!(&packed[..4], &[1.0, 2.0, 3.0, 0.0]);
+        assert_eq!(&packed[NR..NR + 4], &[4.0, 5.0, 6.0, 0.0]);
+        // n spanning two panels.
+        let n = NR + 3;
+        let b: Vec<f64> = (0..n).map(|j| j as f64).collect();
+        let packed = pack_b_rowmajor(&b, 1, n);
+        assert_eq!(packed.len(), 2 * NR);
+        assert_eq!(packed[NR + 2], (NR + 2) as f64);
+        assert_eq!(packed[NR + 5], 0.0);
+    }
+
+    #[test]
+    fn pack_b_transposed_matches_rowmajor_of_transpose() {
+        // b is n×k row-major; its packed transpose must equal packing the
+        // explicit k×n row-major transpose.
+        let (n, k) = (11usize, 5usize);
+        let b: Vec<f64> = (0..n * k).map(|i| (i as f64).sin()).collect();
+        let mut bt = vec![0.0f64; k * n];
+        for r in 0..n {
+            for c in 0..k {
+                bt[c * n + r] = b[r * k + c];
+            }
+        }
+        assert_eq!(pack_b_transposed(&b, n, k), pack_b_rowmajor(&bt, k, n));
+    }
+
+    #[test]
+    fn gemm_chunk_matches_naive_with_remainders() {
+        for &(m, k, n) in &[(1usize, 1usize, 1usize), (4, 3, 8), (5, 7, 9), (13, 2, 17), (8, 16, 7)]
+        {
+            let a: Vec<f64> = (0..m * k).map(|i| (i as f64 * 0.7).cos()).collect();
+            let b: Vec<f64> = (0..k * n).map(|i| (i as f64 * 0.3).sin()).collect();
+            let packed = pack_b_rowmajor(&b, k, n);
+            let mut c = vec![0.0f64; m * n];
+            gemm_chunk(&mut c, n, k, &AOperand::Rows { data: &a, row0: 0 }, &packed);
+            for i in 0..m {
+                for j in 0..n {
+                    let want: f64 = (0..k).map(|t| a[i * k + t] * b[t * n + j]).sum();
+                    assert!(
+                        (c[i * n + j] - want).abs() < 1e-12,
+                        "({m},{k},{n}) at ({i},{j})"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fast_exp_accuracy_on_kernel_range() {
+        // Relative error vs f64::exp over the RBF/Laplacian argument range.
+        let mut worst = 0.0f64;
+        let mut x = -60.0;
+        while x <= 0.0 {
+            let got = fast_exp(x);
+            let want = x.exp();
+            let rel = ((got - want) / want).abs();
+            worst = worst.max(rel);
+            x += 0.0137;
+        }
+        assert!(worst < 5e-15, "worst rel error {worst:e}");
+        // Deep-underflow range: still accurate where results are normal.
+        for &x in &[-200.0, -400.0, -690.0] {
+            let rel = ((fast_exp(x) - x.exp()) / x.exp()).abs();
+            assert!(rel < 5e-14, "x={x} rel {rel:e}");
+        }
+    }
+
+    #[test]
+    fn fast_exp_edge_cases() {
+        assert_eq!(fast_exp(0.0), 1.0);
+        assert!(fast_exp(f64::NAN).is_nan());
+        assert_eq!(fast_exp(-1000.0), 0.0);
+        assert_eq!(fast_exp(f64::NEG_INFINITY), 0.0);
+        assert_eq!(fast_exp(1000.0), f64::INFINITY);
+        // fast_exp8 is lane-wise fast_exp.
+        let v = F64x8([-1.0, -2.0, 0.0, -0.5, -10.0, -100.0, -3.0, -7.0]);
+        let e = fast_exp8(v);
+        for (lane, &x) in v.0.iter().enumerate() {
+            assert_eq!(e.0[lane], fast_exp(x));
+        }
+    }
+
+    #[test]
+    fn l1_dist_matches_naive() {
+        for n in [0usize, 1, 7, 8, 9, 16, 23] {
+            let a: Vec<f64> = (0..n).map(|i| (i as f64 * 0.9).sin()).collect();
+            let b: Vec<f64> = (0..n).map(|i| (i as f64 * 0.4).cos()).collect();
+            let want: f64 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+            assert!((l1_dist(&a, &b) - want).abs() < 1e-13, "n={n}");
+        }
+    }
+}

@@ -1,9 +1,15 @@
 //! Criterion-style bench reporting for the `harness = false` bench targets
-//! (criterion itself is unavailable offline — DESIGN.md §2).
+//! (criterion itself is unavailable in this offline build, so the harness
+//! is hand-rolled here).
 //!
 //! Prints `name  time: [min median max]  mean ± stddev` lines compatible
-//! with eyeball-diffing across runs, plus helpers for throughput numbers.
+//! with eyeball-diffing across runs, plus helpers for throughput numbers
+//! and a machine-readable mode: `FASTKRR_BENCH_JSON=<path>` makes
+//! [`emit_json`] append one `{bench, shape, threads, simd, p50_ms, gflops}`
+//! record per measurement, giving CI a perf trajectory to compare across
+//! PRs (`BENCH_9.json` artifacts).
 
+use std::io::Write;
 use std::time::{Duration, Instant};
 
 /// Measured statistics for one benchmark.
@@ -29,6 +35,12 @@ impl BenchStats {
     /// Mean time per iteration in seconds.
     pub fn mean_secs(&self) -> f64 {
         self.mean.as_secs_f64()
+    }
+
+    /// Median (p50) time per iteration in milliseconds — the number the
+    /// JSON baseline records (robust to one-off scheduler hiccups).
+    pub fn p50_ms(&self) -> f64 {
+        self.median.as_secs_f64() * 1e3
     }
 }
 
@@ -97,6 +109,75 @@ pub fn section(title: &str) {
     println!("\n=== {title} ===");
 }
 
+/// Whether benches should run in quick mode (`FASTKRR_BENCH_QUICK=1|true`):
+/// smaller shapes, heavy ablation sections skipped. The CI perf-smoke step
+/// uses this so every PR still exercises the bench binaries end-to-end.
+pub fn bench_quick() -> bool {
+    std::env::var("FASTKRR_BENCH_QUICK")
+        .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+        .unwrap_or(false)
+}
+
+/// Append one machine-readable record for `stats` to the file named by
+/// `FASTKRR_BENCH_JSON` (JSON Lines; no-op when the var is unset). Threads
+/// and SIMD mode are recorded from the live environment so a record is
+/// self-describing; `gflops` is `null` for benches without a flop count.
+pub fn emit_json(stats: &BenchStats, bench: &str, shape: &str, gflops: Option<f64>) {
+    let Ok(path) = std::env::var("FASTKRR_BENCH_JSON") else {
+        return;
+    };
+    if path.is_empty() {
+        return;
+    }
+    let gf = match gflops {
+        Some(g) => format!("{g:.3}"),
+        None => "null".to_string(),
+    };
+    let line = format!(
+        "{{\"bench\":\"{}\",\"shape\":\"{}\",\"threads\":{},\"simd\":\"{}\",\"p50_ms\":{:.4},\"gflops\":{}}}\n",
+        bench,
+        shape,
+        crate::util::parallel::num_threads(),
+        crate::linalg::simd::mode_name(),
+        stats.p50_ms(),
+        gf
+    );
+    let res = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(&path)
+        .and_then(|mut f| f.write_all(line.as_bytes()));
+    if let Err(e) = res {
+        eprintln!("warning: FASTKRR_BENCH_JSON write to {path} failed: {e}");
+    }
+}
+
+/// RAII env-var guard for bench binaries: sets `key=value` on construction
+/// and restores the previous value (or removes the var) on drop. Bench
+/// targets are single-threaded at the top level, so this is race-free
+/// there; library tests must NOT use it (they share one process).
+pub struct ScopedEnv {
+    key: String,
+    prev: Option<String>,
+}
+
+impl ScopedEnv {
+    pub fn set(key: &str, value: &str) -> Self {
+        let prev = std::env::var(key).ok();
+        std::env::set_var(key, value);
+        Self { key: key.to_string(), prev }
+    }
+}
+
+impl Drop for ScopedEnv {
+    fn drop(&mut self) {
+        match &self.prev {
+            Some(v) => std::env::set_var(&self.key, v),
+            None => std::env::remove_var(&self.key),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -122,5 +203,47 @@ mod tests {
     #[test]
     fn scale_default() {
         assert_eq!(bench_scale(0.5), 0.5);
+    }
+
+    #[test]
+    fn emit_json_appends_records() {
+        // Only emit_json reads FASTKRR_BENCH_JSON, so setting it here cannot
+        // race another lib test.
+        let path = std::env::temp_dir().join(format!(
+            "fastkrr_bench_json_test_{}.jsonl",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&path);
+        let s = bench("jsonable", 0, 3, || {
+            std::hint::black_box(1 + 1);
+        });
+        // Unset: no-op, no file created.
+        std::env::remove_var("FASTKRR_BENCH_JSON");
+        emit_json(&s, "gemm", "8x8x8", Some(1.25));
+        assert!(!path.exists());
+        std::env::set_var("FASTKRR_BENCH_JSON", &path);
+        emit_json(&s, "gemm", "8x8x8", Some(1.25));
+        emit_json(&s, "rbf_block", "64x16", None);
+        std::env::remove_var("FASTKRR_BENCH_JSON");
+        let text = std::fs::read_to_string(&path).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        assert!(lines[0].contains("\"bench\":\"gemm\""));
+        assert!(lines[0].contains("\"shape\":\"8x8x8\""));
+        assert!(lines[0].contains("\"gflops\":1.250"));
+        assert!(lines[1].contains("\"gflops\":null"));
+        for l in &lines {
+            assert!(l.contains("\"threads\":") && l.contains("\"simd\":\""));
+            assert!(l.contains("\"p50_ms\":"));
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn quick_mode_parses() {
+        // Uses the parsing logic only via a saved/restored var that no other
+        // lib test reads.
+        std::env::remove_var("FASTKRR_BENCH_QUICK");
+        assert!(!bench_quick());
     }
 }

@@ -75,8 +75,8 @@ impl NystromFactor {
     /// Fast-path factor for the §3.5 leverage algorithm: `W⁺` is replaced
     /// by `(W + δI)^{-1}` with the smallest jitter δ that makes the
     /// Cholesky succeed (≥ ~1e-12·mean-diag). O(p³/3) instead of the
-    /// eigensolver's much larger O(p³) constant — §Perf item 2 in
-    /// EXPERIMENTS.md.
+    /// eigensolver's much larger O(p³) constant — the factor-path ablation
+    /// in `bench_leverage_approx` measures the gap.
     ///
     /// Statistically safe for leverage scoring: `L_δ ⪯ L ⪯ K`, so the
     /// one-sided Theorem 4 bound `l̃ ≤ l` is preserved (the δ-perturbation

@@ -235,13 +235,30 @@ pub fn par_chunks_mut<T: Send, F>(out: &mut [T], rows: usize, width: usize, f: F
 where
     F: Fn(usize, usize, &mut [T]) + Sync,
 {
+    par_chunks_mut_aligned(out, rows, width, 1, f);
+}
+
+/// [`par_chunks_mut`] with chunk row counts rounded up to a multiple of
+/// `align` (except the final chunk, which takes whatever remains). The SIMD
+/// GEMM paths pass `align = MR` so only the last chunk can carry a partial
+/// microkernel row group; per-row work is still chunking-independent.
+pub fn par_chunks_mut_aligned<T: Send, F>(
+    out: &mut [T],
+    rows: usize,
+    width: usize,
+    align: usize,
+    f: F,
+) where
+    F: Fn(usize, usize, &mut [T]) + Sync,
+{
     assert_eq!(out.len(), rows * width, "output length must be rows*width");
+    let align = align.max(1);
     let nt = num_threads().min(rows.max(1));
     if nt <= 1 || rows == 0 {
         f(0, 0, out);
         return;
     }
-    let rows_per = rows.div_ceil(nt);
+    let rows_per = rows.div_ceil(nt).div_ceil(align) * align;
     let fr = &f;
     let mut tasks: Vec<Box<dyn FnOnce() + Send + '_>> = Vec::with_capacity(nt);
     let mut rest = out;

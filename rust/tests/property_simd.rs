@@ -1,0 +1,382 @@
+//! Property soak for the SIMD microkernel layer: every op rewritten onto
+//! the packed-panel/8-lane path (`matmul`, `matmul_at_b`, `matmul_a_bt`,
+//! `syrk_at_a`, `dot`, `matvec`/`matvec_t`, the Cholesky solves, and the
+//! fused kernel `cross` paths) must match its serial scalar oracle across
+//! every `m % MR` and `n % NR` residue, empty/1-row/1-col shapes, thread
+//! counts {1, 2, 8}, and `FASTKRR_SIMD` ∈ {on, off}.
+//!
+//! `matmul`, `matmul_at_b` and `syrk_at_a` accumulate each element in the
+//! same strict k-ascending order on every path, so those are asserted
+//! **bitwise** equal to the serial twins; ops whose serial twin reduces
+//! through `dot`'s pairwise tree (`matmul_a_bt`, the kernel crosses) are
+//! held to 1e-12. `FASTKRR_SIMD=fastexp` replaces `f64::exp` with a ~1-ulp
+//! polynomial and is therefore *excluded* from the 1e-12 oracle runs — it
+//! gets its own looser 1e-10 property at the bottom.
+//!
+//! Both `FASTKRR_THREADS` and `FASTKRR_SIMD` are process-global, so every
+//! env-touching test serializes on one mutex (same discipline as
+//! `tests/property_parallel.rs`). Replay with `FASTKRR_PROP_SEED=<seed>`;
+//! deepen with `FASTKRR_PROP_CASES=64` (the CI soak job does).
+
+use fastkrr::kernel::{Kernel, KernelFn, KernelKind};
+use fastkrr::linalg::{
+    dot, matmul, matmul_a_bt, matmul_a_bt_serial, matmul_at_b, matmul_serial,
+    solve_lower_transpose, solve_lower_transpose_serial, syrk_at_a, syrk_at_a_serial,
+    Cholesky, Mat,
+};
+use fastkrr::rng::Pcg64;
+use fastkrr::testing::{forall, gen_data, gen_dim, gen_spd};
+use std::sync::{Mutex, MutexGuard};
+
+const THREAD_COUNTS: [usize; 3] = [1, 2, 8];
+const SIMD_MODES: [&str; 2] = ["on", "off"];
+const TOL: f64 = 1e-12;
+
+fn cases() -> usize {
+    fastkrr::testing::default_cases()
+}
+
+static ENV_LOCK: Mutex<()> = Mutex::new(());
+
+/// Pin `FASTKRR_THREADS` and `FASTKRR_SIMD` for the guard's lifetime;
+/// restores both on drop. Holds the binary-wide env lock so concurrent
+/// tests never observe a half-pinned environment.
+struct EnvGuard {
+    prev_threads: Option<String>,
+    prev_simd: Option<String>,
+    _lock: MutexGuard<'static, ()>,
+}
+
+impl Drop for EnvGuard {
+    fn drop(&mut self) {
+        restore("FASTKRR_THREADS", &self.prev_threads);
+        restore("FASTKRR_SIMD", &self.prev_simd);
+    }
+}
+
+fn restore(key: &str, prev: &Option<String>) {
+    match prev {
+        Some(v) => std::env::set_var(key, v),
+        None => std::env::remove_var(key),
+    }
+}
+
+fn with_env(threads: usize, simd: &str) -> EnvGuard {
+    let lock = match ENV_LOCK.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
+    };
+    let guard = EnvGuard {
+        prev_threads: std::env::var("FASTKRR_THREADS").ok(),
+        prev_simd: std::env::var("FASTKRR_SIMD").ok(),
+        _lock: lock,
+    };
+    std::env::set_var("FASTKRR_THREADS", threads.to_string());
+    std::env::set_var("FASTKRR_SIMD", simd);
+    guard
+}
+
+fn assert_bitwise(got: &Mat, want: &Mat, what: &str) {
+    assert_eq!((got.rows(), got.cols()), (want.rows(), want.cols()), "{what} shape");
+    for (i, (g, w)) in got.as_slice().iter().zip(want.as_slice()).enumerate() {
+        assert_eq!(g.to_bits(), w.to_bits(), "{what} flat index {i}: {g:e} vs {w:e}");
+    }
+}
+
+fn assert_close(got: &Mat, want: &Mat, what: &str) {
+    let scale = 1.0 + want.max_abs();
+    let drift = got.sub(want).unwrap().max_abs();
+    assert!(drift < TOL * scale, "{what} drift {drift:e}");
+}
+
+#[test]
+fn gemm_family_matches_serial_across_all_residues() {
+    // m covers every residue mod MR (=4) plus multi-group sizes, n covers
+    // every residue mod NR (=8) plus multi-panel sizes, k exercises both a
+    // short and a long packing loop. 0-sized dims ride along in the grid.
+    let ms = [0usize, 1, 2, 3, 4, 5, 6, 7, 8, 9, 13];
+    let ns = [0usize, 1, 2, 3, 4, 5, 6, 7, 8, 9, 15, 16, 17];
+    let ks = [1usize, 23];
+    let mut rng = Pcg64::new(0x51_3D);
+    // Shapes + env-independent serial baselines, computed once up front
+    // (the serial twins never read FASTKRR_SIMD / FASTKRR_THREADS).
+    let mut shaped = Vec::new();
+    for &m in &ms {
+        for &n in &ns {
+            for &k in &ks {
+                let a = gen_data(&mut rng, m, k, 1.0);
+                let b = gen_data(&mut rng, k, n, 1.0);
+                let bt = b.transpose(); // n×k: right operand for a_bt
+                let want_ab = matmul_serial(&a, &b);
+                let want_abt = matmul_a_bt_serial(&a, &bt);
+                let want_syrk = syrk_at_a_serial(&a);
+                shaped.push((m, n, k, a, b, bt, want_ab, want_abt, want_syrk));
+            }
+        }
+    }
+    for &simd in &SIMD_MODES {
+        for &nt in &THREAD_COUNTS {
+            let _g = with_env(nt, simd);
+            for (m, n, k, a, b, bt, want_ab, want_abt, want_syrk) in &shaped {
+                let tag = format!("{m}x{k}x{n} nt={nt} simd={simd}");
+                assert_bitwise(&matmul(a, b), want_ab, &format!("matmul {tag}"));
+                // matmul_at_b(aᵀ, b) computes a·b without materializing the
+                // transpose, with the same t-ascending per-element order —
+                // so it shares matmul's serial baseline, bitwise.
+                let at = a.transpose();
+                assert_bitwise(&matmul_at_b(&at, b), want_ab, &format!("at_b {tag}"));
+                // a_bt's serial twin reduces through dot's pairwise tree, so
+                // 1e-12 rather than bitwise.
+                assert_close(&matmul_a_bt(a, bt), want_abt, &format!("a_bt {tag}"));
+                let syrk = syrk_at_a(a);
+                assert_bitwise(&syrk, want_syrk, &format!("syrk {tag}"));
+                assert_eq!(syrk.asymmetry(), 0.0, "syrk asymmetry {tag}");
+            }
+        }
+    }
+}
+
+#[test]
+fn gemm_zero_k_and_degenerate_shapes() {
+    for &simd in &SIMD_MODES {
+        let _g = with_env(8, simd);
+        // k = 0: the packers must not touch chunks_exact(0); output is 0.
+        let a = Mat::zeros(5, 0);
+        let b = Mat::zeros(0, 7);
+        let c = matmul(&a, &b);
+        assert_eq!((c.rows(), c.cols()), (5, 7), "simd={simd}");
+        assert_eq!(c.max_abs(), 0.0, "simd={simd}");
+        let c = matmul_a_bt(&Mat::zeros(4, 0), &Mat::zeros(3, 0));
+        assert_eq!((c.rows(), c.cols()), (4, 3), "simd={simd}");
+        let s = syrk_at_a(&Mat::zeros(0, 6));
+        assert_eq!((s.rows(), s.cols()), (6, 6), "simd={simd}");
+        assert_eq!(s.max_abs(), 0.0, "simd={simd}");
+        // 1×1 through every entry point.
+        let a1 = Mat::from_fn(1, 1, |_, _| 3.0);
+        let b1 = Mat::from_fn(1, 1, |_, _| -2.0);
+        assert_eq!(matmul(&a1, &b1)[(0, 0)], -6.0, "simd={simd}");
+        assert_eq!(matmul_a_bt(&a1, &b1)[(0, 0)], -6.0, "simd={simd}");
+        assert_eq!(matmul_at_b(&a1, &b1)[(0, 0)], -6.0, "simd={simd}");
+        assert_eq!(syrk_at_a(&a1)[(0, 0)], 9.0, "simd={simd}");
+    }
+}
+
+#[test]
+fn vector_ops_match_naive_across_lengths() {
+    // dot / matvec / matvec_t across every chunk residue of the 16-wide
+    // two-accumulator dot loop and the 8-lane sweep.
+    let mut rng = Pcg64::new(0xD0_7);
+    for n in (0..=40).chain([63, 64, 65]) {
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let y: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let naive: f64 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        let scale = 1.0 + naive.abs();
+        let d = dot(&x, &y);
+        assert!((d - naive).abs() < TOL * scale, "dot n={n} drift {:e}", (d - naive).abs());
+    }
+    for &(m, n) in &[(0usize, 5usize), (1, 1), (3, 7), (8, 8), (13, 17), (40, 33)] {
+        let a = gen_data(&mut rng, m, n, 1.0);
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let xt: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+        for &simd in &SIMD_MODES {
+            for &nt in &THREAD_COUNTS {
+                let _g = with_env(nt, simd);
+                let got = a.matvec(&x);
+                for (r, g) in got.iter().enumerate() {
+                    let want = dot(a.row(r), &x);
+                    let ok = g.to_bits() == want.to_bits();
+                    assert!(ok, "matvec {m}x{n} row {r} nt={nt} simd={simd}");
+                }
+                let got_t = a.matvec_t(&xt);
+                let mut want_t = vec![0.0f64; n];
+                for (r, &xr) in xt.iter().enumerate() {
+                    for (w, &v) in want_t.iter_mut().zip(a.row(r)) {
+                        *w += xr * v;
+                    }
+                }
+                for (c, (g, w)) in got_t.iter().zip(&want_t).enumerate() {
+                    assert!(
+                        (g - w).abs() < TOL * (1.0 + w.abs()),
+                        "matvec_t {m}x{n} col {c} nt={nt} simd={simd}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_cholesky_solves_agree_across_modes_and_threads() {
+    // The triangular-transpose solve has a column-oriented SIMD-friendly
+    // order and a strided scalar order — different summation orders, so the
+    // cross-mode agreement bar is 1e-12, verified on random SPD systems.
+    forall("simd-cholesky-solves", cases(), |rng, _case| {
+        let n = gen_dim(rng, 2, 36);
+        let k = gen_dim(rng, 1, 10);
+        let a = gen_spd(rng, n, 0.4);
+        let b = gen_data(rng, n, k, 1.0);
+        let v: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let (ch, base_vec, base_mat, base_tr) = {
+            let _g = with_env(1, "off");
+            let ch = Cholesky::new(&a).unwrap();
+            let base_vec = ch.solve_vec(&v);
+            let base_mat = ch.solve_mat(&b);
+            let base_tr = solve_lower_transpose_serial(ch.factor_l(), &b);
+            (ch, base_vec, base_mat, base_tr)
+        };
+        let sv = 1.0 + base_vec.iter().fold(0.0f64, |m, x| m.max(x.abs()));
+        for &simd in &SIMD_MODES {
+            for &nt in &THREAD_COUNTS {
+                let _g = with_env(nt, simd);
+                let xv = ch.solve_vec(&v);
+                for (i, (g, w)) in xv.iter().zip(&base_vec).enumerate() {
+                    assert!(
+                        (g - w).abs() < TOL * sv,
+                        "solve_vec[{i}] n={n} nt={nt} simd={simd}"
+                    );
+                }
+                assert_close(
+                    &ch.solve_mat(&b),
+                    &base_mat,
+                    &format!("solve_mat n={n} k={k} nt={nt} simd={simd}"),
+                );
+                assert_close(
+                    &solve_lower_transpose(ch.factor_l(), &b),
+                    &base_tr,
+                    &format!("solve_lower_transpose n={n} k={k} nt={nt} simd={simd}"),
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_kernel_cross_matches_serial_oracle() {
+    // The fused RBF tile path, the SIMD Laplacian sweep, and the
+    // matmul-backed Linear cross against the fully scalar `cross_serial`
+    // oracle (which never reads FASTKRR_SIMD), across residues of the
+    // MR×NR tiling and both dispatch modes.
+    let kernels = [
+        KernelKind::Rbf { bandwidth: 1.3 },
+        KernelKind::Laplacian { bandwidth: 0.9 },
+        KernelKind::Linear,
+        KernelKind::Polynomial { degree: 3, offset: 0.7 },
+    ];
+    let shapes = [
+        (13usize, 11usize, 5usize),
+        (4, 8, 3),
+        (1, 9, 2),
+        (6, 1, 4),
+        (9, 16, 8),
+        (3, 3, 0), // zero feature dim: d² = 0, k ≡ exp(0) or dot ≡ 0
+    ];
+    let mut rng = Pcg64::new(0xC0_55);
+    for kind in kernels {
+        let kernel = KernelFn::new(kind);
+        for &(m, p, d) in &shapes {
+            let x = gen_data(&mut rng, m, d, 1.0);
+            let z = gen_data(&mut rng, p, d, 1.0);
+            let want = kernel.cross_serial(&x, &z);
+            // Pointwise oracle: the tile path must agree with plain eval.
+            for i in 0..m {
+                for j in 0..p {
+                    let e = kernel.eval(x.row(i), z.row(j));
+                    assert!(
+                        (want[(i, j)] - e).abs() < TOL * (1.0 + e.abs()),
+                        "cross_serial vs eval ({i},{j}) {kind:?}"
+                    );
+                }
+            }
+            for &simd in &SIMD_MODES {
+                for &nt in &THREAD_COUNTS {
+                    let _g = with_env(nt, simd);
+                    assert_close(
+                        &kernel.cross(&x, &z),
+                        &want,
+                        &format!("cross {kind:?} {m}x{p} d={d} nt={nt} simd={simd}"),
+                    );
+                    let km = kernel.matrix(&x);
+                    assert_close(
+                        &km,
+                        &kernel.cross_serial(&x, &x),
+                        &format!("matrix {kind:?} n={m} d={d} nt={nt} simd={simd}"),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_fastexp_mode_close_but_not_exact_oracle() {
+    // FASTKRR_SIMD=fastexp swaps f64::exp for the ~1-ulp polynomial — by
+    // design *outside* the 1e-12 oracle guarantee, so its own bar is 1e-10
+    // against the exact-exp result on kernel-typical arguments.
+    forall("simd-fastexp-cross", cases(), |rng, _case| {
+        let m = gen_dim(rng, 1, 24);
+        let p = gen_dim(rng, 1, 20);
+        let d = gen_dim(rng, 1, 6);
+        let x = gen_data(rng, m, d, 1.0);
+        let z = gen_data(rng, p, d, 1.0);
+        for kind in [
+            KernelKind::Rbf { bandwidth: 0.8 },
+            KernelKind::Laplacian { bandwidth: 1.1 },
+        ] {
+            let kernel = KernelFn::new(kind);
+            let exact = {
+                let _g = with_env(2, "off");
+                kernel.cross(&x, &z)
+            };
+            let fast = {
+                let _g = with_env(2, "fastexp");
+                kernel.cross(&x, &z)
+            };
+            let drift = fast.sub(&exact).unwrap().max_abs();
+            assert!(
+                drift < 1e-10 * (1.0 + exact.max_abs()),
+                "fastexp {kind:?} {m}x{p} d={d} drift {drift:e}"
+            );
+        }
+    });
+}
+
+#[test]
+fn nan_and_negative_zero_uniform_across_modes() {
+    // End-to-end regression for the removed `aik == 0.0` skips, through the
+    // public dispatchers under every mode/thread combination: identical A
+    // rows with a NaN/inf/−0.0 payload column in B must produce bitwise
+    // identical output rows, and 0·NaN must stay NaN.
+    let m = 9; // covers microkernel rows AND a partial remainder group
+    let mut a = Mat::zeros(m, 3);
+    for r in 0..m {
+        a[(r, 0)] = 0.0;
+        a[(r, 1)] = 1.0;
+        a[(r, 2)] = -0.0;
+    }
+    let mut b = Mat::zeros(3, 4);
+    b[(0, 0)] = f64::NAN;
+    b[(0, 1)] = f64::INFINITY;
+    b[(0, 2)] = -0.0;
+    b[(0, 3)] = 1.0;
+    for j in 0..4 {
+        b[(1, j)] = j as f64 + 1.0;
+        b[(2, j)] = -(j as f64) - 1.0;
+    }
+    for &simd in &SIMD_MODES {
+        for &nt in &[1usize, 8] {
+            let _g = with_env(nt, simd);
+            let c = matmul(&a, &b);
+            assert!(c[(0, 0)].is_nan(), "0·NaN lost (nt={nt} simd={simd})");
+            let row0: Vec<u64> = (0..4).map(|j| c[(0, j)].to_bits()).collect();
+            for r in 1..m {
+                for (j, &bits) in row0.iter().enumerate() {
+                    assert_eq!(
+                        c[(r, j)].to_bits(),
+                        bits,
+                        "row {r} col {j} differs from row 0 (nt={nt} simd={simd})"
+                    );
+                }
+            }
+        }
+    }
+}
