@@ -13,10 +13,7 @@ fn main() {
     let scale = bench_scale(1.0); // n=500 is cheap; default to paper size
     let n = ((500.0 * scale) as usize).max(50);
     let lambda = 1e-6;
-    let trials = std::env::var("FASTKRR_BENCH_TRIALS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(10);
+    let trials = fastkrr::util::env::bench_trials(10);
 
     section(&format!("Figure 1 (left): leverage profile, n={n}, λ={lambda:.0e}"));
     let left = run_figure1_left(n, lambda, 42).expect("figure1 left");

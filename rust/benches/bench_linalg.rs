@@ -59,7 +59,7 @@ fn matmul_axpy_baseline(a: &Mat, b: &Mat) -> Mat {
 fn main() {
     let scale = bench_scale(1.0);
     let quick = bench_quick();
-    let gate = std::env::var("FASTKRR_BENCH_GATE").map(|v| v == "1").unwrap_or(false);
+    let gate = fastkrr::util::env::bench_gate();
     let mut ok = true;
     // Thread count is configurable per run: FASTKRR_THREADS=<n> bounds the
     // chunk count of every parallel region (1 = fully serial).

@@ -100,10 +100,7 @@ fn main() {
     // Worker count is configurable per run: FASTKRR_BENCH_WORKERS=<n>
     // (default 1) sizes the engine's executor pool for the fixed-worker
     // sections; a sweep section below varies it explicitly.
-    let bench_workers: usize = std::env::var("FASTKRR_BENCH_WORKERS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(1);
+    let bench_workers: usize = fastkrr::util::env::bench_workers(1);
 
     section(&format!(
         "engine throughput (8 clients × 400 reqs, {bench_workers} worker(s))"
@@ -121,15 +118,15 @@ fn main() {
         };
         let engine = Engine::start(
             sm.clone(),
-            EngineConfig {
-                backend,
-                batcher: BatcherConfig {
+            EngineConfig::builder()
+                .backend(backend)
+                .batcher(BatcherConfig {
                     max_wait: Duration::from_millis(1),
                     ..Default::default()
-                },
-                workers: bench_workers,
-                ..EngineConfig::default()
-            },
+                })
+                .workers(bench_workers)
+                .build()
+                .unwrap(),
         )
         .unwrap();
         let (thr, p50, p99) = run_load(&engine, &x, 8, 400);
@@ -144,15 +141,15 @@ fn main() {
     for workers in [1usize, 2, 4, 8] {
         let engine = Engine::start(
             sm.clone(),
-            EngineConfig {
-                backend: Backend::Native,
-                batcher: BatcherConfig {
+            EngineConfig::builder()
+                .backend(Backend::Native)
+                .batcher(BatcherConfig {
                     max_wait: Duration::from_millis(1),
                     ..Default::default()
-                },
-                workers,
-                ..EngineConfig::default()
-            },
+                })
+                .workers(workers)
+                .build()
+                .unwrap(),
         )
         .unwrap();
         let (thr, p50, p99) = run_load(&engine, &x, 16, 200);
@@ -167,15 +164,15 @@ fn main() {
     for clients in [1usize, 2, 4, 8, 16] {
         let engine = Engine::start(
             sm.clone(),
-            EngineConfig {
-                backend: Backend::Native,
-                batcher: BatcherConfig {
+            EngineConfig::builder()
+                .backend(Backend::Native)
+                .batcher(BatcherConfig {
                     max_wait: Duration::from_millis(1),
                     ..Default::default()
-                },
-                workers: bench_workers,
-                ..EngineConfig::default()
-            },
+                })
+                .workers(bench_workers)
+                .build()
+                .unwrap(),
         )
         .unwrap();
         let (thr, p50, p99) = run_load(&engine, &x, clients, 200);
@@ -205,15 +202,15 @@ fn main() {
         }
         let engine = Engine::start_with_registry(
             registry,
-            EngineConfig {
-                backend: Backend::Native,
-                batcher: BatcherConfig {
+            EngineConfig::builder()
+                .backend(Backend::Native)
+                .batcher(BatcherConfig {
                     max_wait: Duration::from_millis(1),
                     ..Default::default()
-                },
-                workers: bench_workers,
-                ..EngineConfig::default()
-            },
+                })
+                .workers(bench_workers)
+                .build()
+                .unwrap(),
         )
         .unwrap();
         let sel = if named { names } else { Vec::new() };
@@ -232,6 +229,57 @@ fn main() {
             );
         }
         engine.shutdown();
+    }
+
+    // Observability overhead: identical load with request tracing (stage
+    // histograms + trace ids) off vs on. The registry counters themselves
+    // always run — this isolates the cost the tentpole added. Acceptance
+    // bar: traced p50 < 3% over the untraced baseline; enforced when
+    // FASTKRR_BENCH_GATE=1 (the CI perf-gate leg).
+    section("observability overhead (native backend, 8 clients × 400 reqs)");
+    let mut overhead_pct = 0.0;
+    {
+        let mut untraced_p50 = Duration::ZERO;
+        for (label, tracing) in [("tracing off (baseline)", false), ("tracing on", true)] {
+            let engine = Engine::start(
+                sm.clone(),
+                EngineConfig::builder()
+                    .backend(Backend::Native)
+                    .batcher(BatcherConfig {
+                        max_wait: Duration::from_millis(1),
+                        ..Default::default()
+                    })
+                    .workers(bench_workers)
+                    .tracing(tracing)
+                    .build()
+                    .unwrap(),
+            )
+            .unwrap();
+            let (thr, p50, p99) = run_load(&engine, &x, 8, 400);
+            if !tracing {
+                untraced_p50 = p50;
+                println!("  {label:<24} {thr:>9.0} req/s   p50 {p50:?}  p99 {p99:?}");
+            } else {
+                overhead_pct = if untraced_p50 > Duration::ZERO {
+                    (p50.as_secs_f64() / untraced_p50.as_secs_f64() - 1.0) * 100.0
+                } else {
+                    0.0
+                };
+                let stages = engine.metrics_snapshot().family("fastkrr_stage_seconds").len();
+                println!(
+                    "  {label:<24} {thr:>9.0} req/s   p50 {p50:?}  p99 {p99:?}  \
+                     (p50 {overhead_pct:+.1}% vs baseline, {stages} stage series)"
+                );
+            }
+            engine.shutdown();
+        }
+    }
+    if fastkrr::util::env::bench_gate() && overhead_pct >= 3.0 {
+        eprintln!(
+            "PERF GATE FAILED: tracing overhead {overhead_pct:+.1}% p50 \
+             exceeds the 3% budget"
+        );
+        std::process::exit(1);
     }
 
     section("batcher policy (pure, no I/O)");

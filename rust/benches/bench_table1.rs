@@ -28,10 +28,7 @@ const PAPER: &[(&str, &str, f64, f64, f64)] = &[
 fn main() {
     println!("simd: {}", fastkrr::linalg::simd::mode_name());
     let scale = bench_scale(0.25);
-    let trials = std::env::var("FASTKRR_BENCH_TRIALS")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(3);
+    let trials = fastkrr::util::env::bench_trials(3);
     section(&format!("Table 1 reproduction (scale={scale}, trials={trials})"));
     let t0 = std::time::Instant::now();
     let rows = run_table1(scale, trials, 42).expect("table1");

@@ -60,15 +60,15 @@ fn main() {
     let workers = 2;
     let engine = Engine::start(
         sm,
-        EngineConfig {
-            backend,
-            batcher: BatcherConfig {
+        EngineConfig::builder()
+            .backend(backend)
+            .batcher(BatcherConfig {
                 max_wait: std::time::Duration::from_millis(1),
                 ..Default::default()
-            },
-            workers,
-            ..EngineConfig::default()
-        },
+            })
+            .workers(workers)
+            .build()
+            .unwrap(),
     )
     .unwrap();
     let server = Server::start("127.0.0.1:0", engine).unwrap();
@@ -115,6 +115,24 @@ fn main() {
         total as f64 / wall.as_secs_f64()
     );
     println!("server stats: {}", stats.dump());
+
+    // ---- 5. Metrics exposition ------------------------------------------
+    // Fetch the Prometheus rendering over the wire; print a short excerpt
+    // and, when FASTKRR_METRICS_OUT names a path, write the full body
+    // there (the CI examples step uploads it as a scrape artifact).
+    let body = probe.metrics().unwrap();
+    assert!(
+        body.contains(&format!("fastkrr_requests_total {}", total + n_check)),
+        "metrics op must agree with the load we offered:\n{body}"
+    );
+    println!("\n== metrics == ({} bytes of exposition text)", body.len());
+    for line in body.lines().filter(|l| !l.starts_with('#')).take(8) {
+        println!("  {line}");
+    }
+    if let Some(path) = fastkrr::util::env::metrics_out() {
+        std::fs::write(&path, &body).unwrap();
+        println!("wrote metrics exposition to {}", path.display());
+    }
     server.shutdown();
     println!("\nserve_e2e OK");
 }

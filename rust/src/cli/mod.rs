@@ -148,6 +148,8 @@ COMMANDS:
                 [--request-timeout-ms T]  (per-request deadline, default 2000)
                 [--max-inflight N]  (admission cap; 0 = auto from queue depth)
                 [--max-conns N]  (concurrent client connections, default 256)
+                [--log off|text|json]  (structured slow-path log events;
+                precedence: --log > serve.log > FASTKRR_LOG)
                 [--synth <name>] [--p P]
                 Running servers hot-swap via the load_model / set_default /
                 unload_model wire ops — no restart needed.

@@ -76,6 +76,10 @@ pub struct ServeConfig {
     /// How long a tripped breaker stays open before admitting a half-open
     /// probe request.
     pub breaker_cooldown_ms: u64,
+    /// Structured-log mode for serving slow-path events: `off`, `text`,
+    /// or `json` (`log = "json"`). `None` defers to the CLI `--log` flag
+    /// and then the `FASTKRR_LOG` environment variable.
+    pub log: Option<String>,
 }
 
 impl Default for ServeConfig {
@@ -94,6 +98,7 @@ impl Default for ServeConfig {
             max_conns: 256,
             breaker_failures: 5,
             breaker_cooldown_ms: 1000,
+            log: None,
         }
     }
 }
@@ -189,6 +194,9 @@ impl AppConfig {
             if let Some(v) = s.get("breaker_cooldown_ms") {
                 cfg.serve.breaker_cooldown_ms = v.as_usize()? as u64;
             }
+            if let Some(v) = s.get("log") {
+                cfg.serve.log = Some(v.as_str()?.to_string());
+            }
         }
         cfg.validate()?;
         Ok(cfg)
@@ -224,6 +232,13 @@ impl AppConfig {
                 "serve.breaker_cooldown_ms must be >= 1 when circuit breaking \
                  is enabled (serve.breaker_failures > 0)",
             ));
+        }
+        if let Some(l) = &self.serve.log {
+            if crate::obs::log::LogMode::parse(l).is_none() {
+                return Err(Error::invalid(format!(
+                    "serve.log must be one of off/text/json, got '{l}'"
+                )));
+            }
         }
         let mut names = std::collections::BTreeSet::new();
         for (name, _) in &self.serve.models {
@@ -379,6 +394,17 @@ workers = 4
         )
         .unwrap();
         assert_eq!(cfg.serve.breaker_failures, 0);
+    }
+
+    #[test]
+    fn parses_log_mode() {
+        assert_eq!(AppConfig::parse("").unwrap().serve.log, None);
+        for mode in ["off", "text", "json"] {
+            let cfg =
+                AppConfig::parse(&format!("[serve]\nlog = \"{mode}\"\n")).unwrap();
+            assert_eq!(cfg.serve.log.as_deref(), Some(mode));
+        }
+        assert!(AppConfig::parse("[serve]\nlog = \"verbose\"\n").is_err());
     }
 
     #[test]

@@ -56,13 +56,26 @@
 //!   registry's shared `ModelStats`; after `EngineConfig::breaker_failures`
 //!   consecutive failures the model's requests are rejected up front with
 //!   a retryable `circuit_open` error until a half-open probe succeeds.
+//!
+//! Observability ([`obs`](crate::obs)): every [`EngineStats`] handle is
+//! registered in the engine's [`MetricsRegistry`] under a stable
+//! `fastkrr_*` series name, each request carries a u64 trace id, and its
+//! admission → queue → batch-compute → reply path is timed into per-stage
+//! histograms (engine-wide and per-model) unless `EngineConfig::tracing`
+//! is off. [`Engine::metrics_snapshot`] rebuilds the dynamic points
+//! (per-model stats, kernel-cache counters, structural gauges) and returns
+//! one consistent snapshot for the `stats`/`health`/`metrics` wire ops.
+//! Slow-path events (sheds, worker panics, breaker transitions) go through
+//! [`obs::log`](crate::obs::log) when `FASTKRR_LOG` enables it.
 
 use super::batcher::{Batcher, BatcherConfig};
 use super::ServingModel;
 use crate::linalg::Mat;
 use crate::metrics::{Counter, Gauge, LatencyHistogram};
-use crate::registry::{ModelRegistry, ModelVersion};
+use crate::obs::{self, HistSnap, MetricPoint, MetricValue, MetricsRegistry, MetricsSnapshot};
+use crate::registry::{BreakerState, ModelRegistry, ModelVersion};
 use crate::runtime::Runtime;
+use crate::util::json::Json;
 use crate::util::{Error, Result};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::path::PathBuf;
@@ -100,6 +113,11 @@ pub struct EngineConfig {
     pub breaker_failures: u64,
     /// Breaker open→half-open cooldown (`serve.breaker_cooldown_ms`).
     pub breaker_cooldown: Duration,
+    /// Record per-stage span histograms (`queue_wait` / `batch_compute` /
+    /// `reply`) for every request. On by default; turn off to measure the
+    /// tracing overhead itself (the `bench_serving` overhead gate runs
+    /// with this off as its baseline).
+    pub tracing: bool,
 }
 
 impl Default for EngineConfig {
@@ -114,34 +132,150 @@ impl Default for EngineConfig {
             max_inflight: 0,
             breaker_failures: 5,
             breaker_cooldown: Duration::from_millis(1000),
+            tracing: true,
         }
     }
 }
 
+impl EngineConfig {
+    /// Chained-setter builder; the preferred way to construct a
+    /// non-default config (validation happens once in
+    /// [`EngineConfigBuilder::build`], before any worker is spawned).
+    pub fn builder() -> EngineConfigBuilder {
+        EngineConfigBuilder::default()
+    }
+}
+
+/// Builder for [`EngineConfig`]: start from the defaults, override with
+/// chained setters, and let [`build`](Self::build) validate the result.
+///
+/// ```no_run
+/// use fastkrr::coordinator::{Backend, EngineConfig};
+/// let _cfg = EngineConfig::builder()
+///     .backend(Backend::Native)
+///     .workers(4)
+///     .request_timeout(std::time::Duration::from_millis(500))
+///     .build()
+///     .unwrap();
+/// ```
+#[derive(Debug, Clone, Default)]
+pub struct EngineConfigBuilder {
+    cfg: EngineConfig,
+}
+
+impl EngineConfigBuilder {
+    pub fn backend(mut self, backend: Backend) -> Self {
+        self.cfg.backend = backend;
+        self
+    }
+    pub fn batcher(mut self, batcher: BatcherConfig) -> Self {
+        self.cfg.batcher = batcher;
+        self
+    }
+    pub fn workers(mut self, workers: usize) -> Self {
+        self.cfg.workers = workers;
+        self
+    }
+    pub fn request_timeout(mut self, timeout: Duration) -> Self {
+        self.cfg.request_timeout = timeout;
+        self
+    }
+    pub fn max_inflight(mut self, cap: usize) -> Self {
+        self.cfg.max_inflight = cap;
+        self
+    }
+    pub fn breaker_failures(mut self, failures: u64) -> Self {
+        self.cfg.breaker_failures = failures;
+        self
+    }
+    pub fn breaker_cooldown(mut self, cooldown: Duration) -> Self {
+        self.cfg.breaker_cooldown = cooldown;
+        self
+    }
+    pub fn tracing(mut self, on: bool) -> Self {
+        self.cfg.tracing = on;
+        self
+    }
+
+    /// Validate and produce the config. Rejects worker counts over the
+    /// 256 sanity cap, sub-millisecond request timeouts, and invalid
+    /// batcher settings — the same checks `Engine::start*` would hit, but
+    /// surfaced at configuration time.
+    pub fn build(self) -> Result<EngineConfig> {
+        self.cfg.batcher.validate()?;
+        if self.cfg.workers > 256 {
+            return Err(Error::invalid(format!(
+                "workers {} exceeds the sanity cap of 256",
+                self.cfg.workers
+            )));
+        }
+        if self.cfg.request_timeout < Duration::from_millis(1) {
+            return Err(Error::invalid("request_timeout must be at least 1ms"));
+        }
+        Ok(self.cfg)
+    }
+}
+
 /// Live counters exposed by the engine (shared across all workers).
+///
+/// Every field is an `Arc` handle registered in the engine's
+/// [`MetricsRegistry`] (see [`EngineStats::registered`]) under a stable
+/// `fastkrr_*` series name, so `stats()` field reads and metrics-registry
+/// snapshots observe the *same* atomics — the legacy accessors
+/// (`stats.requests.get()` etc.) keep working unchanged through
+/// auto-deref.
 #[derive(Debug, Default)]
 pub struct EngineStats {
-    pub requests: Counter,
-    pub batches: Counter,
-    pub padded_slots: Counter,
-    pub errors: Counter,
-    pub latency: LatencyHistogram,
+    pub requests: Arc<Counter>,
+    pub batches: Arc<Counter>,
+    pub padded_slots: Arc<Counter>,
+    pub errors: Arc<Counter>,
+    pub latency: Arc<LatencyHistogram>,
     /// Batches that panicked under the worker's `catch_unwind` guard.
-    pub worker_panics: Counter,
+    pub worker_panics: Arc<Counter>,
     /// Jobs dropped at dequeue because their deadline had already expired.
-    pub deadline_expired: Counter,
+    pub deadline_expired: Arc<Counter>,
     /// Requests rejected up front by admission control (in-flight cap or
     /// all queues full).
-    pub shed: Counter,
+    pub shed: Arc<Counter>,
     /// Concurrent in-flight requests (admission → reply); the high-water
     /// mark is the observed peak.
-    pub inflight: Gauge,
+    pub inflight: Arc<Gauge>,
     /// Executor workers currently in service; supervision keeps this at
     /// the configured pool size.
-    pub workers_alive: Gauge,
+    pub workers_alive: Arc<Gauge>,
+    /// Stage span: admission → the batch containing the request starts
+    /// computing (recorded only when `EngineConfig::tracing` is on).
+    pub queue_wait: Arc<LatencyHistogram>,
+    /// Stage span: the batch compute itself (per request in the batch).
+    pub batch_compute: Arc<LatencyHistogram>,
+    /// Stage span: worker handing the result back → caller receiving it.
+    pub reply: Arc<LatencyHistogram>,
 }
 
 impl EngineStats {
+    /// Build the stats block with every handle registered in `obs` under
+    /// its `fastkrr_*` series name. On a clean tracing-enabled run the
+    /// three stage histograms each count exactly `requests`.
+    pub fn registered(obs: &MetricsRegistry) -> Self {
+        Self {
+            requests: obs.counter("fastkrr_requests_total", &[]),
+            batches: obs.counter("fastkrr_batches_total", &[]),
+            padded_slots: obs.counter("fastkrr_padded_slots_total", &[]),
+            errors: obs.counter("fastkrr_errors_total", &[]),
+            latency: obs.histogram("fastkrr_request_latency_seconds", &[]),
+            worker_panics: obs.counter("fastkrr_worker_panics_total", &[]),
+            deadline_expired: obs.counter("fastkrr_deadline_expired_total", &[]),
+            shed: obs.counter("fastkrr_shed_total", &[]),
+            inflight: obs.gauge("fastkrr_inflight", &[]),
+            workers_alive: obs.gauge("fastkrr_workers_alive", &[]),
+            queue_wait: obs.histogram("fastkrr_stage_seconds", &[("stage", "queue_wait")]),
+            batch_compute: obs
+                .histogram("fastkrr_stage_seconds", &[("stage", "batch_compute")]),
+            reply: obs.histogram("fastkrr_stage_seconds", &[("stage", "reply")]),
+        }
+    }
+
     /// Mean real-requests-per-executed-batch.
     pub fn mean_batch_size(&self) -> f64 {
         let b = self.batches.get();
@@ -177,12 +311,22 @@ struct Job {
     /// prediction uses exactly these coefficients — a registry swap
     /// mid-flight cannot mix versions.
     mv: Arc<ModelVersion>,
+    /// Trace id carried from admission through every span and log event.
+    trace: u64,
     enqueued: Instant,
     /// Workers drop the job unserved once this passes (`DeadlineExceeded`).
     deadline: Instant,
-    reply: SyncSender<Result<f64>>,
+    reply: SyncSender<JobReply>,
     /// Holds the in-flight slot for the job's whole life.
     _inflight: InflightToken,
+}
+
+/// What comes back over a job's reply channel: the result plus the instant
+/// the worker finished with the job, so the caller can time the `reply`
+/// span (worker hand-off → caller receive) without another channel.
+struct JobReply {
+    result: Result<f64>,
+    finished: Instant,
 }
 
 /// Extra time the caller waits past the request deadline for the worker's
@@ -200,9 +344,15 @@ pub struct Engine {
     workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
     next: AtomicUsize,
     stats: Arc<EngineStats>,
-    /// Requests served per worker — dispatch-balance observability.
-    worker_requests: Arc<Vec<Counter>>,
+    /// Requests served per worker — dispatch-balance observability
+    /// (registered as `fastkrr_worker_requests_total{worker="i"}`).
+    worker_requests: Arc<Vec<Arc<Counter>>>,
     registry: Arc<ModelRegistry>,
+    /// The engine's metrics registry; every `EngineStats` handle lives in
+    /// it, and `metrics_snapshot` adds the dynamic points.
+    obs: Arc<MetricsRegistry>,
+    /// Stage-span recording on the request path (`EngineConfig::tracing`).
+    tracing: bool,
     ready: Arc<AtomicBool>,
     n_workers: usize,
     /// Largest compiled batch size — sizes the `predict_many` submitter pool.
@@ -249,7 +399,8 @@ impl Engine {
         // Per-model circuit breaking is engine policy applied to the shared
         // registry: every current and future model gets it.
         registry.set_breaker_policy(cfg.breaker_failures, cfg.breaker_cooldown);
-        let stats = Arc::new(EngineStats::default());
+        let obs = Arc::new(MetricsRegistry::new());
+        let stats = Arc::new(EngineStats::registered(&obs));
         let ready = Arc::new(AtomicBool::new(false));
         let per_cap = cfg.batcher.queue_cap_per_worker(n_workers);
         let max_inflight = if cfg.max_inflight == 0 {
@@ -259,8 +410,14 @@ impl Engine {
         } else {
             cfg.max_inflight
         };
-        let worker_requests: Arc<Vec<Counter>> =
-            Arc::new((0..n_workers).map(|_| Counter::new()).collect());
+        let worker_requests: Arc<Vec<Arc<Counter>>> = Arc::new(
+            (0..n_workers)
+                .map(|w| {
+                    let idx = w.to_string();
+                    obs.counter("fastkrr_worker_requests_total", &[("worker", idx.as_str())])
+                })
+                .collect(),
+        );
         let (init_tx, init_rx) = sync_channel::<Result<()>>(n_workers);
         let mut senders = Vec::with_capacity(n_workers);
         let mut workers = Vec::with_capacity(n_workers);
@@ -313,6 +470,8 @@ impl Engine {
             stats,
             worker_requests,
             registry,
+            obs,
+            tracing: cfg.tracing,
             ready,
             n_workers,
             max_batch,
@@ -330,8 +489,7 @@ impl Engine {
 
     /// Predict a single point against the default model.
     pub fn predict(&self, x: &[f64]) -> Result<f64> {
-        let mv = self.registry.resolve(None, None)?;
-        self.predict_resolved(&mv, x)
+        self.predict_model_traced(None, None, x, obs::next_trace_id())
     }
 
     /// Predict a single point against `(name, version)`; `None` name means
@@ -342,14 +500,29 @@ impl Engine {
         version: Option<u64>,
         x: &[f64],
     ) -> Result<f64> {
+        self.predict_model_traced(name, version, x, obs::next_trace_id())
+    }
+
+    /// [`Engine::predict_model`] with a caller-supplied trace id (the
+    /// server mints one per wire request and echoes it as `trace_id` on
+    /// the reply, so server-side spans and log events correlate with the
+    /// client's view). Ids from [`obs::next_trace_id`] are process-unique;
+    /// 0 conventionally means "untraced".
+    pub fn predict_model_traced(
+        &self,
+        name: Option<&str>,
+        version: Option<u64>,
+        x: &[f64],
+        trace: u64,
+    ) -> Result<f64> {
         let mv = self.registry.resolve(name, version)?;
-        self.predict_resolved(&mv, x)
+        self.predict_resolved(&mv, x, trace)
     }
 
     /// Predict against an already-resolved version snapshot (blocks until
     /// the batch containing the request runs, bounded by the request
     /// deadline plus a small grace).
-    fn predict_resolved(&self, mv: &Arc<ModelVersion>, x: &[f64]) -> Result<f64> {
+    fn predict_resolved(&self, mv: &Arc<ModelVersion>, x: &[f64], trace: u64) -> Result<f64> {
         if x.len() != mv.model.d() {
             return Err(Error::invalid(format!(
                 "query dimension {} != model dimension {}",
@@ -365,6 +538,16 @@ impl Engine {
         // overshoot by the number of concurrently-admitting threads.
         if self.stats.inflight.current() >= self.max_inflight as u64 {
             self.stats.shed.inc();
+            if obs::log::enabled() {
+                obs::log::event(
+                    "shed",
+                    &[
+                        ("reason", Json::str("inflight_cap")),
+                        ("model", Json::str(mv.name())),
+                        ("trace_id", Json::num(trace as f64)),
+                    ],
+                );
+            }
             return Err(Error::overloaded(format!(
                 "engine overloaded: {} requests in flight (cap {})",
                 self.stats.inflight.current(),
@@ -377,6 +560,7 @@ impl Engine {
         let job = Job {
             x: x.to_vec(),
             mv: mv.clone(),
+            trace,
             enqueued,
             deadline: enqueued + self.request_timeout,
             reply: reply_tx,
@@ -388,7 +572,15 @@ impl Engine {
         // structured paths (result / deadline drop / panic / drain) in the
         // common case; this timeout is the backstop.
         match reply_rx.recv_timeout(self.request_timeout + REPLY_GRACE) {
-            Ok(res) => res,
+            Ok(jr) => {
+                if self.tracing {
+                    // Reply span: worker hand-off → this thread resuming.
+                    let span = jr.finished.elapsed();
+                    self.stats.reply.record(span);
+                    mv.stats.reply.record(span);
+                }
+                jr.result
+            }
             Err(RecvTimeoutError::Timeout) => Err(Error::deadline_exceeded(format!(
                 "no reply within deadline + grace ({:?})",
                 self.request_timeout + REPLY_GRACE
@@ -425,6 +617,16 @@ impl Engine {
             Err(Error::runtime("engine stopped"))
         } else {
             self.stats.shed.inc();
+            if obs::log::enabled() {
+                obs::log::event(
+                    "shed",
+                    &[
+                        ("reason", Json::str("queue_full")),
+                        ("model", Json::str(job.mv.name())),
+                        ("trace_id", Json::num(job.trace as f64)),
+                    ],
+                );
+            }
             Err(Error::overloaded("queue full (backpressure)"))
         }
     }
@@ -476,7 +678,10 @@ impl Engine {
                             if i >= n {
                                 break;
                             }
-                            local.push((i, self.predict_resolved(mv, xs.row(i))));
+                            local.push((
+                                i,
+                                self.predict_resolved(mv, xs.row(i), obs::next_trace_id()),
+                            ));
                         }
                         local
                     })
@@ -496,6 +701,117 @@ impl Engine {
     /// Live stats (aggregated over all workers).
     pub fn stats(&self) -> &EngineStats {
         &self.stats
+    }
+
+    /// The engine's metrics registry. Registered handles (the
+    /// [`EngineStats`] block, per-worker counters) live here; prefer
+    /// [`Engine::metrics_snapshot`] for reads so the dynamic points are
+    /// fresh.
+    pub fn obs(&self) -> &Arc<MetricsRegistry> {
+        &self.obs
+    }
+
+    /// One consistent snapshot of every metric the engine knows about:
+    /// the registered handles plus dynamic points rebuilt on the spot —
+    /// per-model serving stats (requests / errors / latency / stage spans /
+    /// active version / circuit state / breaker trips), the process-wide
+    /// kernel-block cache counters, and structural gauges (worker count,
+    /// readiness). The `stats`, `health`, and `metrics` wire ops are all
+    /// views over this.
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        fn circuit_code(state: BreakerState) -> u64 {
+            match state {
+                BreakerState::Closed => 0,
+                BreakerState::Open => 1,
+                BreakerState::HalfOpen => 2,
+            }
+        }
+        let mut dynamic: Vec<MetricPoint> = Vec::new();
+        let workers = self.n_workers as u64;
+        dynamic.push(MetricPoint::new(
+            "fastkrr_workers",
+            &[],
+            MetricValue::Gauge { current: workers, high_water: workers },
+        ));
+        let ready = self.ready() as u64;
+        dynamic.push(MetricPoint::new(
+            "fastkrr_ready",
+            &[],
+            MetricValue::Gauge { current: ready, high_water: ready },
+        ));
+        let cache = crate::kernel::cache::global().stats();
+        dynamic.push(MetricPoint::new(
+            "fastkrr_kernel_cache_hits_total",
+            &[],
+            MetricValue::Counter(cache.hits.get()),
+        ));
+        dynamic.push(MetricPoint::new(
+            "fastkrr_kernel_cache_misses_total",
+            &[],
+            MetricValue::Counter(cache.misses.get()),
+        ));
+        dynamic.push(MetricPoint::new(
+            "fastkrr_kernel_cache_evictions_total",
+            &[],
+            MetricValue::Counter(cache.evictions.get()),
+        ));
+        for info in self.registry.list() {
+            // A model unloaded between list() and resolve() just drops out
+            // of this snapshot — same as if the snapshot ran a beat later.
+            let Ok(mv) = self.registry.resolve(Some(&info.name), None) else {
+                continue;
+            };
+            let st = &mv.stats;
+            let model = info.name.as_str();
+            dynamic.push(MetricPoint::new(
+                "fastkrr_model_requests_total",
+                &[("model", model)],
+                MetricValue::Counter(st.requests.get()),
+            ));
+            dynamic.push(MetricPoint::new(
+                "fastkrr_model_errors_total",
+                &[("model", model)],
+                MetricValue::Counter(st.errors.get()),
+            ));
+            dynamic.push(MetricPoint::new(
+                "fastkrr_model_latency_seconds",
+                &[("model", model)],
+                MetricValue::Histogram(HistSnap::of(&st.latency)),
+            ));
+            for (stage, h) in [
+                ("queue_wait", &st.queue_wait),
+                ("batch_compute", &st.batch_compute),
+                ("reply", &st.reply),
+            ] {
+                dynamic.push(MetricPoint::new(
+                    "fastkrr_model_stage_seconds",
+                    &[("model", model), ("stage", stage)],
+                    MetricValue::Histogram(HistSnap::of(h)),
+                ));
+            }
+            dynamic.push(MetricPoint::new(
+                "fastkrr_model_active_version",
+                &[("model", model)],
+                MetricValue::Gauge {
+                    current: info.active_version,
+                    high_water: info.active_version,
+                },
+            ));
+            let state = st.breaker.state();
+            let code = circuit_code(state);
+            dynamic.push(MetricPoint::new(
+                "fastkrr_model_circuit_state",
+                &[("model", model), ("state", state.name())],
+                MetricValue::Gauge { current: code, high_water: code },
+            ));
+            dynamic.push(MetricPoint::new(
+                "fastkrr_model_breaker_trips_total",
+                &[("model", model)],
+                MetricValue::Counter(st.breaker.trips()),
+            ));
+        }
+        self.obs.set_dynamic(dynamic);
+        self.obs.snapshot()
     }
 
     /// Number of executor workers in the pool.
@@ -566,7 +882,7 @@ fn executor_main(
     cfg: EngineConfig,
     rx: Receiver<Job>,
     stats: Arc<EngineStats>,
-    worker_requests: Arc<Vec<Counter>>,
+    worker_requests: Arc<Vec<Arc<Counter>>>,
     widx: usize,
     init_tx: SyncSender<Result<()>>,
 ) {
@@ -611,7 +927,7 @@ fn executor_loop(
     batcher: &Batcher,
     backend: &mut ExecBackend,
     stats: &EngineStats,
-    worker_requests: &[Counter],
+    worker_requests: &[Arc<Counter>],
     widx: usize,
 ) {
     loop {
@@ -645,9 +961,12 @@ fn executor_loop(
                 let elapsed = job.enqueued.elapsed();
                 stats.latency.record(elapsed);
                 job.mv.stats.latency.record(elapsed);
-                let _ = job.reply.send(Err(Error::deadline_exceeded(format!(
-                    "deadline exceeded after {elapsed:?} in queue"
-                ))));
+                let _ = job.reply.send(JobReply {
+                    result: Err(Error::deadline_exceeded(format!(
+                        "deadline exceeded after {elapsed:?} in queue"
+                    ))),
+                    finished: Instant::now(),
+                });
             } else {
                 live.push(job);
             }
@@ -667,7 +986,7 @@ fn executor_loop(
             }
         }
         for (mv, group) in groups {
-            run_group(backend, batcher, &mv, group, stats, worker_requests, widx);
+            run_group(backend, batcher, &mv, group, stats, worker_requests, widx, cfg.tracing);
         }
     }
 }
@@ -688,28 +1007,48 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
 /// compute runs under `catch_unwind` while the jobs stay owned out here, so
 /// a panicking batch (bug or injected fault) still answers every caller
 /// with a structured error instead of dropping their reply channels.
+#[allow(clippy::too_many_arguments)]
 fn run_group(
     backend: &mut ExecBackend,
     batcher: &Batcher,
     mv: &Arc<ModelVersion>,
     jobs: Vec<Job>,
     stats: &EngineStats,
-    worker_requests: &[Counter],
+    worker_requests: &[Arc<Counter>],
     widx: usize,
+    tracing: bool,
 ) {
     let dim = mv.model.d();
     let plan = batcher.plan(jobs.len()).expect("non-empty");
     debug_assert_eq!(plan.real, jobs.len());
+    if tracing {
+        // Queue-wait span: admission → this batch starting to compute.
+        for j in &jobs {
+            let waited = j.enqueued.elapsed();
+            stats.queue_wait.record(waited);
+            mv.stats.queue_wait.record(waited);
+        }
+    }
     // Flatten to f32 row-major.
     let mut flat = Vec::with_capacity(jobs.len() * dim);
     for j in &jobs {
         flat.extend(j.x.iter().map(|&v| v as f32));
     }
+    let compute_start = Instant::now();
     let result = catch_unwind(AssertUnwindSafe(|| {
         crate::testing::faults::worker_site();
         let padded = Batcher::pad_batch(&flat, plan.real, plan.compiled, dim);
         run_batch(backend, mv, plan.compiled, &padded, dim)
     }));
+    if tracing {
+        // Batch-compute span, recorded once per request in the batch (so
+        // the stage count matches the request count), success or failure.
+        let compute = compute_start.elapsed();
+        for _ in 0..plan.real {
+            stats.batch_compute.record(compute);
+            mv.stats.batch_compute.record(compute);
+        }
+    }
     stats.batches.inc();
     stats.requests.add(plan.real as u64);
     stats.padded_slots.add((plan.compiled - plan.real) as u64);
@@ -717,9 +1056,24 @@ fn run_group(
     mv.stats.requests.add(plan.real as u64);
     // Batch outcome feeds the model's circuit breaker: one success closes
     // it / resets the streak, one failure or panic extends the streak.
+    // State is sampled around the update so transitions can be logged.
+    let before = mv.stats.breaker.state();
     match &result {
         Ok(Ok(_)) => mv.stats.breaker.record_success(),
         _ => mv.stats.breaker.record_failure(),
+    }
+    let after = mv.stats.breaker.state();
+    if after != before && obs::log::enabled() {
+        let kind = if after == BreakerState::Open { "breaker_open" } else { "breaker_close" };
+        obs::log::event(
+            kind,
+            &[
+                ("model", Json::str(mv.name())),
+                ("from", Json::str(before.name())),
+                ("to", Json::str(after.name())),
+                ("trips", Json::num(mv.stats.breaker.trips() as f64)),
+            ],
+        );
     }
     match result {
         Ok(Ok(ys)) => {
@@ -727,7 +1081,9 @@ fn run_group(
                 let elapsed = job.enqueued.elapsed();
                 stats.latency.record(elapsed);
                 mv.stats.latency.record(elapsed);
-                let _ = job.reply.send(Ok(ys[i] as f64));
+                let _ = job
+                    .reply
+                    .send(JobReply { result: Ok(ys[i] as f64), finished: Instant::now() });
             }
         }
         Ok(Err(e)) => {
@@ -735,14 +1091,22 @@ fn run_group(
         }
         Err(payload) => {
             stats.worker_panics.inc();
+            let msg = panic_message(payload.as_ref());
+            if obs::log::enabled() {
+                obs::log::event(
+                    "worker_panic",
+                    &[
+                        ("model", Json::str(mv.name())),
+                        ("worker", Json::num(widx as f64)),
+                        ("message", Json::str(msg.as_str())),
+                    ],
+                );
+            }
             fail_group(
                 jobs,
                 stats,
                 mv,
-                Error::runtime(format!(
-                    "worker panicked mid-batch: {}",
-                    panic_message(payload.as_ref())
-                )),
+                Error::runtime(format!("worker panicked mid-batch: {msg}")),
             );
         }
     }
@@ -758,9 +1122,10 @@ fn fail_group(jobs: Vec<Job>, stats: &EngineStats, mv: &Arc<ModelVersion>, err: 
         let elapsed = job.enqueued.elapsed();
         stats.latency.record(elapsed);
         mv.stats.latency.record(elapsed);
-        let _ = job
-            .reply
-            .send(Err(Error::new(err.kind(), err.message().to_string())));
+        let _ = job.reply.send(JobReply {
+            result: Err(Error::new(err.kind(), err.message().to_string())),
+            finished: Instant::now(),
+        });
     }
 }
 
@@ -1283,6 +1648,138 @@ mod tests {
         assert!(engine.stats().shed.get() >= 1);
         assert_eq!(engine.stats().inflight.high_water(), 1);
         assert_eq!(engine.stats().inflight.current(), 0);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn builder_validates_and_builds() {
+        let cfg = EngineConfig::builder()
+            .backend(Backend::Native)
+            .workers(2)
+            .max_inflight(7)
+            .breaker_failures(3)
+            .breaker_cooldown(Duration::from_millis(50))
+            .request_timeout(Duration::from_millis(750))
+            .tracing(false)
+            .build()
+            .unwrap();
+        assert!(matches!(cfg.backend, Backend::Native));
+        assert_eq!(cfg.workers, 2);
+        assert_eq!(cfg.max_inflight, 7);
+        assert_eq!(cfg.breaker_failures, 3);
+        assert_eq!(cfg.breaker_cooldown, Duration::from_millis(50));
+        assert_eq!(cfg.request_timeout, Duration::from_millis(750));
+        assert!(!cfg.tracing);
+        // Defaults flow through untouched fields.
+        let dflt = EngineConfig::builder().build().unwrap();
+        assert!(dflt.tracing);
+        assert_eq!(dflt.workers, 1);
+        // Validation failures surface at build time.
+        assert!(EngineConfig::builder().workers(1000).build().is_err());
+        assert!(EngineConfig::builder()
+            .request_timeout(Duration::from_micros(10))
+            .build()
+            .is_err());
+    }
+
+    #[test]
+    fn stage_histograms_count_every_traced_request() {
+        let (x, sm) = serving_model(40, 8, 16);
+        let engine = Engine::start(sm, native_cfg(2)).unwrap();
+        for i in 0..x.rows() {
+            engine.predict(x.row(i)).unwrap();
+        }
+        let st = engine.stats();
+        assert_eq!(st.requests.get(), 40);
+        // Clean tracing-enabled run: every stage saw every request.
+        assert_eq!(st.queue_wait.count(), 40);
+        assert_eq!(st.batch_compute.count(), 40);
+        assert_eq!(st.reply.count(), 40);
+        // Per-model stage histograms match the engine-wide ones.
+        let mv = engine.registry().resolve(None, None).unwrap();
+        assert_eq!(mv.stats.queue_wait.count(), 40);
+        assert_eq!(mv.stats.batch_compute.count(), 40);
+        assert_eq!(mv.stats.reply.count(), 40);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn tracing_off_leaves_stage_histograms_empty() {
+        let (x, sm) = serving_model(20, 8, 16);
+        let cfg = EngineConfig::builder()
+            .backend(Backend::Native)
+            .workers(1)
+            .tracing(false)
+            .build()
+            .unwrap();
+        let engine = Engine::start(sm, cfg).unwrap();
+        for i in 0..x.rows() {
+            engine.predict(x.row(i)).unwrap();
+        }
+        let st = engine.stats();
+        assert_eq!(st.requests.get(), 20, "serving itself is unaffected");
+        assert_eq!(st.latency.count(), 20, "request latency still recorded");
+        assert_eq!(st.queue_wait.count(), 0);
+        assert_eq!(st.batch_compute.count(), 0);
+        assert_eq!(st.reply.count(), 0);
+        engine.shutdown();
+    }
+
+    #[test]
+    fn metrics_snapshot_covers_engine_models_and_structure() {
+        let (x, sm) = serving_model(30, 8, 16);
+        let engine = Engine::start(sm, native_cfg(1)).unwrap();
+        for i in 0..x.rows() {
+            engine.predict(x.row(i)).unwrap();
+        }
+        let snap = engine.metrics_snapshot();
+        assert_eq!(snap.counter("fastkrr_requests_total"), 30);
+        assert_eq!(snap.histogram("fastkrr_request_latency_seconds").count, 30);
+        assert_eq!(snap.gauge("fastkrr_workers"), (1, 1));
+        assert_eq!(snap.gauge("fastkrr_ready").0, 1);
+        assert_eq!(snap.gauge("fastkrr_inflight").0, 0);
+        assert_eq!(snap.gauge("fastkrr_workers_alive"), (1, 1));
+        // Per-worker family, one series per worker.
+        assert_eq!(snap.family("fastkrr_worker_requests_total").len(), 1);
+        // Stage family: three labeled series.
+        assert_eq!(snap.family("fastkrr_stage_seconds").len(), 3);
+        let qw = snap
+            .get_labeled("fastkrr_stage_seconds", &[("stage", "queue_wait")])
+            .unwrap();
+        assert!(matches!(&qw.value, MetricValue::Histogram(h) if h.count == 30));
+        // Per-model dynamic points.
+        let req = snap
+            .get_labeled("fastkrr_model_requests_total", &[("model", "default")])
+            .unwrap();
+        assert_eq!(req.value, MetricValue::Counter(30));
+        let circuit = snap
+            .family("fastkrr_model_circuit_state")
+            .into_iter()
+            .find(|p| p.label("model") == Some("default"))
+            .unwrap();
+        assert_eq!(circuit.label("state"), Some("closed"));
+        assert_eq!(
+            snap.get_labeled("fastkrr_model_active_version", &[("model", "default")])
+                .map(|p| p.value.clone()),
+            Some(MetricValue::Gauge { current: 1, high_water: 1 })
+        );
+        // Kernel-cache counters are present (values depend on what other
+        // tests did to the process-wide cache; presence is the contract).
+        assert!(snap.get("fastkrr_kernel_cache_hits_total").is_some());
+        assert!(snap.get("fastkrr_kernel_cache_misses_total").is_some());
+        engine.shutdown();
+    }
+
+    #[test]
+    fn caller_supplied_trace_id_serves_normally() {
+        let (x, sm) = serving_model(10, 8, 8);
+        let engine = Engine::start(sm, native_cfg(1)).unwrap();
+        let trace = crate::obs::next_trace_id();
+        let y = engine
+            .predict_model_traced(None, None, x.row(0), trace)
+            .unwrap();
+        assert!(y.is_finite());
+        assert_eq!(engine.stats().requests.get(), 1);
         engine.shutdown();
     }
 }

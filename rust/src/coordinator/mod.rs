@@ -20,7 +20,7 @@ pub mod model_io;
 pub mod pipeline;
 
 pub use batcher::{BatchPlan, Batcher, BatcherConfig};
-pub use engine::{Backend, Engine, EngineConfig, EngineStats};
+pub use engine::{Backend, Engine, EngineConfig, EngineConfigBuilder, EngineStats};
 pub use pipeline::{PipelineReport, TrainPipeline, TrainPipelineConfig};
 
 use crate::kernel::KernelKind;

@@ -223,11 +223,7 @@ impl KernelBlockCache {
 /// Default byte budget: `FASTKRR_KERNEL_CACHE_MB` (MiB, default 64; 0
 /// disables), read once at first use.
 fn default_capacity() -> usize {
-    let mb = std::env::var("FASTKRR_KERNEL_CACHE_MB")
-        .ok()
-        .and_then(|v| v.parse::<usize>().ok())
-        .unwrap_or(64);
-    mb.saturating_mul(1024 * 1024)
+    crate::util::env::kernel_cache_mb().saturating_mul(1024 * 1024)
 }
 
 /// Process-wide kernel-block cache shared by the factor-build paths.

@@ -106,6 +106,40 @@
 //!   `tests/resilience.rs` soaks hot-swaps, panics, stalls, and overload
 //!   under it (nightly CI runs it with faults on).
 //!
+//! ## Observability
+//!
+//! One registry, three wire views ([`obs`]):
+//!
+//! - **Metrics registry** ([`obs::MetricsRegistry`]) — every serving
+//!   counter/gauge/latency histogram is registered once under a stable
+//!   `fastkrr_*` series name with `(key, value)` labels (per-worker,
+//!   per-model, per-stage) and read in one snapshot pass; the `stats`,
+//!   `health`, and new `metrics` ops are all views over the same
+//!   [`obs::MetricsSnapshot`], so they can never disagree. The `metrics`
+//!   op emits Prometheus-style text exposition
+//!   ([`obs::export::render_prometheus`]) or structured JSON
+//!   (`"format":"json"`).
+//! - **Request tracing** — every request gets a process-unique u64 trace
+//!   id ([`obs::next_trace_id`], echoed as `trace_id` on wire replies)
+//!   and its admission → queue → batch-compute → reply path is timed
+//!   into per-stage histograms (`queue_wait`, `batch_compute`, `reply`),
+//!   engine-wide and per-model. `EngineConfig::builder().tracing(false)`
+//!   disables stage recording for overhead baselining; `bench_serving`
+//!   gates instrumented p50 < 3% over that baseline.
+//! - **Structured log events** ([`obs::log`]) — `FASTKRR_LOG=json|text`
+//!   (or `serve.log` / `--log`) emits slow-path events to stderr: model
+//!   swaps, circuit-breaker transitions, load sheds, worker panics. Off
+//!   by default; one relaxed atomic load when off.
+//! - **Env knobs** ([`util::env`]) — all `FASTKRR_*` environment
+//!   variables are read through one typed accessor module with a single
+//!   doc table.
+//!
+//! Typed errors: the crate-wide [`Error`] (re-exported at the root with
+//! [`ErrorKind`] and [`Result`]) carries the wire taxonomy — every error
+//! has a machine [`ErrorKind`] (`invalid`, `overloaded`,
+//! `deadline_exceeded`, `circuit_open`, ...), a retryability flag, and a
+//! `std::error::Error` impl; wire serialization is unchanged from PR 8.
+//!
 //! ## Replaying property-test failures
 //!
 //! The seeded suites print `replay with FASTKRR_PROP_SEED=<seed>` on
@@ -123,6 +157,7 @@ pub mod leverage;
 pub mod linalg;
 pub mod metrics;
 pub mod nystrom;
+pub mod obs;
 pub mod registry;
 pub mod rng;
 pub mod runtime;
@@ -130,6 +165,11 @@ pub mod server;
 pub mod sketch;
 pub mod testing;
 pub mod util;
+
+// The crate-wide error surface at the root: `fastkrr::Error` /
+// `fastkrr::ErrorKind` / `fastkrr::Result` are the public spelling;
+// `util::{Error, ...}` stays valid for existing code.
+pub use util::{Error, ErrorKind, Result};
 
 /// Convenience re-exports for downstream users and examples.
 pub mod prelude {

@@ -148,7 +148,7 @@ pub(crate) fn parse_mode(v: Option<&str>) -> SimdMode {
 /// Current mode from the `FASTKRR_SIMD` env var, read per call (same
 /// convention as `num_threads()` reading `FASTKRR_THREADS`).
 pub fn simd_mode() -> SimdMode {
-    parse_mode(std::env::var("FASTKRR_SIMD").ok().as_deref())
+    parse_mode(crate::util::env::simd_raw().as_deref())
 }
 
 /// Whether the SIMD paths are active (i.e. mode is not [`SimdMode::Off`]).

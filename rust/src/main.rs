@@ -263,23 +263,36 @@ fn serve_registry(
     if max_conns == 0 {
         return Err(fastkrr::util::Error::invalid("--max-conns must be >= 1"));
     }
+    // Structured-log mode, highest precedence first: --log flag, then
+    // config `serve.log`, then the FASTKRR_LOG environment variable
+    // (which obs::log reads lazily when set_mode is never called).
+    if let Some(raw) = args.flag("log").or(cfg.serve.log.as_deref()) {
+        match fastkrr::obs::log::LogMode::parse(raw) {
+            Some(m) => fastkrr::obs::log::set_mode(m),
+            None => {
+                return Err(fastkrr::util::Error::invalid(format!(
+                    "--log must be one of off/text/json, got '{raw}'"
+                )))
+            }
+        }
+    }
     let n_models = registry.len();
-    let engine = Engine::start_with_registry(
-        registry,
-        EngineConfig {
-            backend,
-            batcher: BatcherConfig {
-                max_wait: std::time::Duration::from_millis(cfg.serve.max_wait_ms),
-                queue_cap: cfg.serve.queue_cap,
-                ..Default::default()
-            },
-            workers,
-            request_timeout: std::time::Duration::from_millis(request_timeout_ms),
-            max_inflight,
-            breaker_failures: cfg.serve.breaker_failures,
-            breaker_cooldown: std::time::Duration::from_millis(cfg.serve.breaker_cooldown_ms),
-        },
-    )?;
+    let engine_cfg = EngineConfig::builder()
+        .backend(backend)
+        .batcher(BatcherConfig {
+            max_wait: std::time::Duration::from_millis(cfg.serve.max_wait_ms),
+            queue_cap: cfg.serve.queue_cap,
+            ..Default::default()
+        })
+        .workers(workers)
+        .request_timeout(std::time::Duration::from_millis(request_timeout_ms))
+        .max_inflight(max_inflight)
+        .breaker_failures(cfg.serve.breaker_failures)
+        .breaker_cooldown(std::time::Duration::from_millis(
+            cfg.serve.breaker_cooldown_ms,
+        ))
+        .build()?;
+    let engine = Engine::start_with_registry(registry, engine_cfg)?;
     let addr = args.flag("addr").unwrap_or(&cfg.serve.addr).to_string();
     let server = Server::start_with(
         &addr,

@@ -98,10 +98,7 @@ fn stats_from(name: &str, times: &[Duration]) -> BenchStats {
 
 /// Bench-scale knob: `FASTKRR_BENCH_SCALE` env (default given per-bench).
 pub fn bench_scale(default: f64) -> f64 {
-    std::env::var("FASTKRR_BENCH_SCALE")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(default)
+    crate::util::env::bench_scale(default)
 }
 
 /// Section header for bench output.
@@ -113,9 +110,7 @@ pub fn section(title: &str) {
 /// smaller shapes, heavy ablation sections skipped. The CI perf-smoke step
 /// uses this so every PR still exercises the bench binaries end-to-end.
 pub fn bench_quick() -> bool {
-    std::env::var("FASTKRR_BENCH_QUICK")
-        .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
-        .unwrap_or(false)
+    crate::util::env::bench_quick()
 }
 
 /// Append one machine-readable record for `stats` to the file named by
@@ -123,12 +118,9 @@ pub fn bench_quick() -> bool {
 /// and SIMD mode are recorded from the live environment so a record is
 /// self-describing; `gflops` is `null` for benches without a flop count.
 pub fn emit_json(stats: &BenchStats, bench: &str, shape: &str, gflops: Option<f64>) {
-    let Ok(path) = std::env::var("FASTKRR_BENCH_JSON") else {
+    let Some(path) = crate::util::env::bench_json() else {
         return;
     };
-    if path.is_empty() {
-        return;
-    }
     let gf = match gflops {
         Some(g) => format!("{g:.3}"),
         None => "null".to_string(),

@@ -1,0 +1,232 @@
+//! Render a [`MetricsSnapshot`](super::MetricsSnapshot) for the wire.
+//!
+//! Two formats behind the server's `{"op":"metrics"}`:
+//!
+//! - [`render_prometheus`] — text exposition. Counters and gauges render
+//!   one sample per series; gauges additionally emit a
+//!   `<name>_high_water` companion series. Histograms render as
+//!   Prometheus *summaries*: `quantile="0.5"` / `quantile="0.99"` samples
+//!   in seconds plus `<name>_sum` / `<name>_count`. A `# TYPE` comment is
+//!   emitted once per metric name, on first appearance, so labeled
+//!   families (per-worker, per-model) group under a single header.
+//! - [`render_json`] — the same points as a structured JSON array
+//!   (`{name, labels, type, ...value fields}`), for consumers that want
+//!   numbers without parsing exposition text.
+
+use super::{MetricPoint, MetricValue, MetricsSnapshot};
+use crate::util::json::Json;
+use std::collections::BTreeSet;
+
+/// Escape a label value per the exposition format (backslash, quote,
+/// newline).
+fn escape_label(v: &str) -> String {
+    let mut out = String::with_capacity(v.len());
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            _ => out.push(c),
+        }
+    }
+    out
+}
+
+/// Render `{k="v",...}` from label pairs plus optional extra pairs
+/// (used for the `quantile` label); empty labels render as nothing.
+fn label_block(labels: &[(String, String)], extra: &[(&str, &str)]) -> String {
+    if labels.is_empty() && extra.is_empty() {
+        return String::new();
+    }
+    let mut parts: Vec<String> = Vec::with_capacity(labels.len() + extra.len());
+    for (k, v) in labels {
+        parts.push(format!("{k}=\"{}\"", escape_label(v)));
+    }
+    for (k, v) in extra {
+        parts.push(format!("{k}=\"{}\"", escape_label(v)));
+    }
+    format!("{{{}}}", parts.join(","))
+}
+
+fn fmt_value(x: f64) -> String {
+    if x == x.trunc() && x.abs() < 1e15 {
+        format!("{}", x as i64)
+    } else {
+        format!("{x}")
+    }
+}
+
+/// Prometheus-style text exposition of the whole snapshot.
+pub fn render_prometheus(snap: &MetricsSnapshot) -> String {
+    let mut out = String::new();
+    let mut typed: BTreeSet<&str> = BTreeSet::new();
+    for p in &snap.points {
+        match &p.value {
+            MetricValue::Counter(v) => {
+                if typed.insert(&p.name) {
+                    out.push_str(&format!("# TYPE {} counter\n", p.name));
+                }
+                out.push_str(&format!(
+                    "{}{} {}\n",
+                    p.name,
+                    label_block(&p.labels, &[]),
+                    v
+                ));
+            }
+            MetricValue::Gauge { current, high_water } => {
+                if typed.insert(&p.name) {
+                    out.push_str(&format!("# TYPE {} gauge\n", p.name));
+                }
+                let lb = label_block(&p.labels, &[]);
+                out.push_str(&format!("{}{} {}\n", p.name, lb, current));
+                out.push_str(&format!("{}_high_water{} {}\n", p.name, lb, high_water));
+            }
+            MetricValue::Histogram(h) => {
+                if typed.insert(&p.name) {
+                    out.push_str(&format!("# TYPE {} summary\n", p.name));
+                }
+                let q50 = label_block(&p.labels, &[("quantile", "0.5")]);
+                let q99 = label_block(&p.labels, &[("quantile", "0.99")]);
+                let lb = label_block(&p.labels, &[]);
+                out.push_str(&format!(
+                    "{}{} {}\n",
+                    p.name,
+                    q50,
+                    fmt_value(h.p50.as_secs_f64())
+                ));
+                out.push_str(&format!(
+                    "{}{} {}\n",
+                    p.name,
+                    q99,
+                    fmt_value(h.p99.as_secs_f64())
+                ));
+                out.push_str(&format!(
+                    "{}_sum{} {}\n",
+                    p.name,
+                    lb,
+                    fmt_value(h.mean.as_secs_f64() * h.count as f64)
+                ));
+                out.push_str(&format!("{}_count{} {}\n", p.name, lb, h.count));
+            }
+        }
+    }
+    out
+}
+
+fn point_json(p: &MetricPoint) -> Json {
+    let labels = Json::Obj(
+        p.labels
+            .iter()
+            .map(|(k, v)| (k.clone(), Json::Str(v.clone())))
+            .collect(),
+    );
+    let mut pairs: Vec<(&str, Json)> = vec![("name", Json::str(p.name.as_str())), ("labels", labels)];
+    match &p.value {
+        MetricValue::Counter(v) => {
+            pairs.push(("type", Json::str("counter")));
+            pairs.push(("value", Json::num(*v as f64)));
+        }
+        MetricValue::Gauge { current, high_water } => {
+            pairs.push(("type", Json::str("gauge")));
+            pairs.push(("value", Json::num(*current as f64)));
+            pairs.push(("high_water", Json::num(*high_water as f64)));
+        }
+        MetricValue::Histogram(h) => {
+            pairs.push(("type", Json::str("histogram")));
+            pairs.push(("count", Json::num(h.count as f64)));
+            pairs.push(("mean_us", Json::num(h.mean.as_micros() as f64)));
+            pairs.push(("p50_us", Json::num(h.p50.as_micros() as f64)));
+            pairs.push(("p99_us", Json::num(h.p99.as_micros() as f64)));
+            pairs.push(("max_us", Json::num(h.max.as_micros() as f64)));
+        }
+    }
+    Json::obj(pairs)
+}
+
+/// Structured-JSON rendering: an array of point objects.
+pub fn render_json(snap: &MetricsSnapshot) -> Json {
+    Json::Arr(snap.points.iter().map(point_json).collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{HistSnap, MetricsRegistry};
+    use std::time::Duration;
+
+    fn sample_snapshot() -> MetricsSnapshot {
+        let reg = MetricsRegistry::new();
+        reg.counter("fastkrr_requests_total", &[]).add(42);
+        let w0 = reg.counter("fastkrr_worker_requests_total", &[("worker", "0")]);
+        let w1 = reg.counter("fastkrr_worker_requests_total", &[("worker", "1")]);
+        w0.add(30);
+        w1.add(12);
+        let g = reg.gauge("fastkrr_inflight", &[]);
+        g.inc();
+        g.inc();
+        g.dec();
+        let h = reg.histogram("fastkrr_request_latency_seconds", &[]);
+        h.record(Duration::from_millis(2));
+        h.record(Duration::from_millis(4));
+        reg.snapshot()
+    }
+
+    #[test]
+    fn prometheus_exposition_shape() {
+        let text = render_prometheus(&sample_snapshot());
+        assert!(text.contains("# TYPE fastkrr_requests_total counter"));
+        assert!(text.contains("fastkrr_requests_total 42"));
+        // One TYPE line for the labeled family, two samples.
+        assert_eq!(
+            text.matches("# TYPE fastkrr_worker_requests_total counter").count(),
+            1
+        );
+        assert!(text.contains("fastkrr_worker_requests_total{worker=\"0\"} 30"));
+        assert!(text.contains("fastkrr_worker_requests_total{worker=\"1\"} 12"));
+        assert!(text.contains("# TYPE fastkrr_inflight gauge"));
+        assert!(text.contains("fastkrr_inflight 1"));
+        assert!(text.contains("fastkrr_inflight_high_water 2"));
+        assert!(text.contains("# TYPE fastkrr_request_latency_seconds summary"));
+        assert!(text.contains("fastkrr_request_latency_seconds{quantile=\"0.5\"}"));
+        assert!(text.contains("fastkrr_request_latency_seconds{quantile=\"0.99\"}"));
+        assert!(text.contains("fastkrr_request_latency_seconds_count 2"));
+        assert!(text.contains("fastkrr_request_latency_seconds_sum"));
+    }
+
+    #[test]
+    fn label_values_escape() {
+        assert_eq!(escape_label("a\"b\\c\nd"), "a\\\"b\\\\c\\nd");
+    }
+
+    #[test]
+    fn json_rendering_roundtrips() {
+        let j = render_json(&sample_snapshot());
+        let text = j.dump();
+        let back = Json::parse(&text).unwrap();
+        let arr = back.as_arr().unwrap();
+        assert_eq!(arr.len(), 5);
+        let req = arr
+            .iter()
+            .find(|p| p.get("name").and_then(Json::as_str) == Some("fastkrr_requests_total"))
+            .unwrap();
+        assert_eq!(req.get("type").and_then(Json::as_str), Some("counter"));
+        assert_eq!(req.get("value").and_then(Json::as_f64), Some(42.0));
+        let hist = arr
+            .iter()
+            .find(|p| {
+                p.get("name").and_then(Json::as_str)
+                    == Some("fastkrr_request_latency_seconds")
+            })
+            .unwrap();
+        assert_eq!(hist.get("count").and_then(Json::as_f64), Some(2.0));
+        assert!(hist.get("p50_us").and_then(Json::as_f64).unwrap() >= 2000.0);
+    }
+
+    #[test]
+    fn empty_snapshot_renders_empty() {
+        let snap = MetricsSnapshot::default();
+        assert_eq!(render_prometheus(&snap), "");
+        assert_eq!(render_json(&snap).as_arr().unwrap().len(), 0);
+        let _ = HistSnap::default();
+    }
+}

@@ -1,0 +1,397 @@
+//! Crate-wide observability: a central metrics registry, per-request trace
+//! ids, export renderers, and optional structured log events.
+//!
+//! The registry replaces the scattered per-struct counters that accreted
+//! across the serving PRs with one named, labeled surface:
+//!
+//! - **Registered handles** — [`MetricsRegistry::counter`] /
+//!   [`MetricsRegistry::gauge`] / [`MetricsRegistry::histogram`] return
+//!   `Arc` handles to the same lock-free primitives the hot path already
+//!   uses ([`metrics::Counter`](crate::metrics::Counter) etc.), registered
+//!   once under a stable series name plus `(key, value)` labels. Recording
+//!   stays exactly as cheap as before: the registry is only consulted at
+//!   registration and snapshot time, never per event.
+//! - **Dynamic points** — values owned elsewhere (per-model registry
+//!   stats, the process-wide kernel-block cache, structural gauges like
+//!   the worker count) are rebuilt as plain [`MetricPoint`]s by the owner
+//!   right before a snapshot via [`MetricsRegistry::set_dynamic`].
+//! - **Snapshots** — [`MetricsRegistry::snapshot`] walks both sections in
+//!   one pass and returns an owned [`MetricsSnapshot`]; every consumer
+//!   (the `stats`/`health`/`metrics` wire ops, tests) reads the same
+//!   frozen point list, so the three ops can never disagree about a
+//!   counter. Individual values are relaxed atomics, so a snapshot is
+//!   *per-point* consistent and monotone across snapshots, which is the
+//!   torn-read freedom the soak test asserts.
+//!
+//! Per-request tracing: [`next_trace_id`] hands out process-unique u64
+//! ids; the serving engine carries the id from admission through queue,
+//! batch compute, and reply, recording each span into stage histograms
+//! (`queue_wait`, `batch_compute`, `reply`) both engine-wide and
+//! per-model. The server returns the id as `trace_id` on wire replies so
+//! a client can correlate a reply with server-side log events.
+//!
+//! Export: [`export::render_prometheus`] renders a snapshot as
+//! Prometheus-style text exposition, [`export::render_json`] as structured
+//! JSON — both behind the server's `{"op":"metrics"}`. Structured log
+//! events for the serving slow path live in [`log`] (`FASTKRR_LOG`).
+
+pub mod export;
+pub mod log;
+
+use crate::metrics::{Counter, Gauge, LatencyHistogram};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
+use std::time::Duration;
+
+/// Process-unique trace id for one request (starts at 1; 0 means "none").
+pub fn next_trace_id() -> u64 {
+    static NEXT: AtomicU64 = AtomicU64::new(1);
+    NEXT.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Owned point-in-time view of one latency histogram (the histogram's
+/// bucket internals stay private to `metrics`; a snapshot keeps the
+/// derived figures every consumer actually reads).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct HistSnap {
+    pub count: u64,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p99: Duration,
+    pub max: Duration,
+}
+
+impl HistSnap {
+    pub fn of(h: &LatencyHistogram) -> Self {
+        Self {
+            count: h.count(),
+            mean: h.mean(),
+            p50: h.percentile(50.0),
+            p99: h.percentile(99.0),
+            max: h.max(),
+        }
+    }
+}
+
+/// One metric's value at snapshot time.
+#[derive(Debug, Clone, PartialEq)]
+pub enum MetricValue {
+    /// Monotonic event count.
+    Counter(u64),
+    /// Up/down level with its monotonic high-water mark.
+    Gauge { current: u64, high_water: u64 },
+    /// Latency distribution summary.
+    Histogram(HistSnap),
+}
+
+/// One named, labeled series at snapshot time.
+#[derive(Debug, Clone)]
+pub struct MetricPoint {
+    /// Stable series name (`fastkrr_*`, Prometheus conventions).
+    pub name: String,
+    /// `(key, value)` label pairs in a fixed order.
+    pub labels: Vec<(String, String)>,
+    pub value: MetricValue,
+}
+
+impl MetricPoint {
+    /// Build a dynamic point (labels as borrowed pairs for call-site
+    /// brevity).
+    pub fn new(name: &str, labels: &[(&str, &str)], value: MetricValue) -> Self {
+        Self {
+            name: name.to_string(),
+            labels: labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect(),
+            value,
+        }
+    }
+
+    /// The value of label `key`, if present.
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+}
+
+/// A registered live handle (the registry reads it at snapshot time).
+enum Handle {
+    Counter(Arc<Counter>),
+    Gauge(Arc<Gauge>),
+    Histogram(Arc<LatencyHistogram>),
+}
+
+struct Registered {
+    name: String,
+    labels: Vec<(String, String)>,
+    handle: Handle,
+}
+
+impl Registered {
+    fn read(&self) -> MetricPoint {
+        let value = match &self.handle {
+            Handle::Counter(c) => MetricValue::Counter(c.get()),
+            Handle::Gauge(g) => {
+                MetricValue::Gauge { current: g.current(), high_water: g.high_water() }
+            }
+            Handle::Histogram(h) => MetricValue::Histogram(HistSnap::of(h)),
+        };
+        MetricPoint { name: self.name.clone(), labels: self.labels.clone(), value }
+    }
+}
+
+/// Central metrics registry; see the module docs for the design.
+#[derive(Default)]
+pub struct MetricsRegistry {
+    registered: RwLock<Vec<Registered>>,
+    dynamic: RwLock<Vec<MetricPoint>>,
+}
+
+fn own_labels(labels: &[(&str, &str)]) -> Vec<(String, String)> {
+    labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+}
+
+impl MetricsRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn get_or_register<T>(
+        &self,
+        name: &str,
+        labels: &[(&str, &str)],
+        as_existing: impl Fn(&Handle) -> Option<Arc<T>>,
+        make: impl FnOnce() -> (Arc<T>, Handle),
+    ) -> Arc<T> {
+        let owned = own_labels(labels);
+        let mut reg = self.registered.write().expect("metrics registry poisoned");
+        if let Some(r) = reg.iter().find(|r| r.name == name && r.labels == owned) {
+            return as_existing(&r.handle).unwrap_or_else(|| {
+                panic!("metric '{name}' re-registered with a different type")
+            });
+        }
+        let (arc, handle) = make();
+        reg.push(Registered { name: name.to_string(), labels: owned, handle });
+        arc
+    }
+
+    /// Get-or-register a named counter. Registering the same
+    /// `(name, labels)` twice returns the same handle; re-registering with
+    /// a different metric type panics (a wiring bug, caught at startup).
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Counter> {
+        self.get_or_register(
+            name,
+            labels,
+            |h| match h {
+                Handle::Counter(c) => Some(c.clone()),
+                _ => None,
+            },
+            || {
+                let c = Arc::new(Counter::new());
+                (c.clone(), Handle::Counter(c))
+            },
+        )
+    }
+
+    /// Get-or-register a named gauge.
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Arc<Gauge> {
+        self.get_or_register(
+            name,
+            labels,
+            |h| match h {
+                Handle::Gauge(g) => Some(g.clone()),
+                _ => None,
+            },
+            || {
+                let g = Arc::new(Gauge::new());
+                (g.clone(), Handle::Gauge(g))
+            },
+        )
+    }
+
+    /// Get-or-register a named latency histogram.
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Arc<LatencyHistogram> {
+        self.get_or_register(
+            name,
+            labels,
+            |h| match h {
+                Handle::Histogram(hh) => Some(hh.clone()),
+                _ => None,
+            },
+            || {
+                let h = Arc::new(LatencyHistogram::new());
+                (h.clone(), Handle::Histogram(h))
+            },
+        )
+    }
+
+    /// Replace the dynamic section wholesale. The owner (the engine)
+    /// rebuilds these from sources it does not hold live handles to
+    /// (per-model registry stats, the kernel-block cache, structural
+    /// values) right before snapshotting.
+    pub fn set_dynamic(&self, points: Vec<MetricPoint>) {
+        *self.dynamic.write().expect("metrics registry poisoned") = points;
+    }
+
+    /// One-pass snapshot: registered handles read in registration order,
+    /// then the dynamic section.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut points: Vec<MetricPoint> = self
+            .registered
+            .read()
+            .expect("metrics registry poisoned")
+            .iter()
+            .map(Registered::read)
+            .collect();
+        points.extend(self.dynamic.read().expect("metrics registry poisoned").iter().cloned());
+        MetricsSnapshot { points }
+    }
+}
+
+impl std::fmt::Debug for MetricsRegistry {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let reg = self.registered.read().expect("metrics registry poisoned");
+        let dyn_n = self.dynamic.read().expect("metrics registry poisoned").len();
+        f.debug_struct("MetricsRegistry")
+            .field("registered", &reg.len())
+            .field("dynamic", &dyn_n)
+            .finish()
+    }
+}
+
+/// Frozen point list from one [`MetricsRegistry::snapshot`] pass.
+#[derive(Debug, Clone, Default)]
+pub struct MetricsSnapshot {
+    pub points: Vec<MetricPoint>,
+}
+
+impl MetricsSnapshot {
+    /// First point with this name (series without labels, or the first of
+    /// a labeled family).
+    pub fn get(&self, name: &str) -> Option<&MetricPoint> {
+        self.points.iter().find(|p| p.name == name)
+    }
+
+    /// Point with this exact name and label set.
+    pub fn get_labeled(&self, name: &str, labels: &[(&str, &str)]) -> Option<&MetricPoint> {
+        let owned = own_labels(labels);
+        self.points.iter().find(|p| p.name == name && p.labels == owned)
+    }
+
+    /// All points of one series family, in snapshot order.
+    pub fn family(&self, name: &str) -> Vec<&MetricPoint> {
+        self.points.iter().filter(|p| p.name == name).collect()
+    }
+
+    /// Counter value by name (0 when absent — counters start at 0).
+    pub fn counter(&self, name: &str) -> u64 {
+        match self.get(name).map(|p| &p.value) {
+            Some(MetricValue::Counter(v)) => *v,
+            _ => 0,
+        }
+    }
+
+    /// Gauge `(current, high_water)` by name (0s when absent).
+    pub fn gauge(&self, name: &str) -> (u64, u64) {
+        match self.get(name).map(|p| &p.value) {
+            Some(MetricValue::Gauge { current, high_water }) => (*current, *high_water),
+            _ => (0, 0),
+        }
+    }
+
+    /// Histogram summary by name (empty when absent).
+    pub fn histogram(&self, name: &str) -> HistSnap {
+        match self.get(name).map(|p| &p.value) {
+            Some(MetricValue::Histogram(h)) => h.clone(),
+            _ => HistSnap::default(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trace_ids_are_unique_and_nonzero() {
+        let a = next_trace_id();
+        let b = next_trace_id();
+        assert!(a > 0 && b > 0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn register_once_then_share_handle() {
+        let reg = MetricsRegistry::new();
+        let c1 = reg.counter("fastkrr_test_total", &[]);
+        let c2 = reg.counter("fastkrr_test_total", &[]);
+        c1.inc();
+        c2.add(2);
+        assert_eq!(reg.snapshot().counter("fastkrr_test_total"), 3);
+        assert!(Arc::ptr_eq(&c1, &c2));
+    }
+
+    #[test]
+    fn labels_distinguish_series() {
+        let reg = MetricsRegistry::new();
+        let a = reg.counter("fastkrr_worker_test_total", &[("worker", "0")]);
+        let b = reg.counter("fastkrr_worker_test_total", &[("worker", "1")]);
+        a.inc();
+        b.add(5);
+        let snap = reg.snapshot();
+        let fam = snap.family("fastkrr_worker_test_total");
+        assert_eq!(fam.len(), 2);
+        let p0 = snap
+            .get_labeled("fastkrr_worker_test_total", &[("worker", "0")])
+            .unwrap();
+        assert_eq!(p0.value, MetricValue::Counter(1));
+        assert_eq!(p0.label("worker"), Some("0"));
+        let p1 = snap
+            .get_labeled("fastkrr_worker_test_total", &[("worker", "1")])
+            .unwrap();
+        assert_eq!(p1.value, MetricValue::Counter(5));
+    }
+
+    #[test]
+    fn gauge_and_histogram_snapshot_values() {
+        let reg = MetricsRegistry::new();
+        let g = reg.gauge("fastkrr_test_inflight", &[]);
+        let h = reg.histogram("fastkrr_test_seconds", &[]);
+        g.inc();
+        g.inc();
+        g.dec();
+        h.record(Duration::from_millis(3));
+        h.record(Duration::from_millis(5));
+        let snap = reg.snapshot();
+        assert_eq!(snap.gauge("fastkrr_test_inflight"), (1, 2));
+        let hs = snap.histogram("fastkrr_test_seconds");
+        assert_eq!(hs.count, 2);
+        assert!(hs.p50 >= Duration::from_millis(3));
+        assert!(hs.max >= Duration::from_millis(5));
+    }
+
+    #[test]
+    fn dynamic_section_replaced_wholesale() {
+        let reg = MetricsRegistry::new();
+        reg.set_dynamic(vec![MetricPoint::new(
+            "fastkrr_models",
+            &[],
+            MetricValue::Counter(2),
+        )]);
+        assert_eq!(reg.snapshot().counter("fastkrr_models"), 2);
+        reg.set_dynamic(vec![MetricPoint::new(
+            "fastkrr_models",
+            &[],
+            MetricValue::Counter(3),
+        )]);
+        let snap = reg.snapshot();
+        assert_eq!(snap.counter("fastkrr_models"), 3);
+        assert_eq!(snap.family("fastkrr_models").len(), 1, "replaced, not appended");
+    }
+
+    #[test]
+    fn missing_names_read_as_zero() {
+        let snap = MetricsRegistry::new().snapshot();
+        assert_eq!(snap.counter("fastkrr_nope_total"), 0);
+        assert_eq!(snap.gauge("fastkrr_nope"), (0, 0));
+        assert_eq!(snap.histogram("fastkrr_nope_seconds").count, 0);
+        assert!(snap.get("fastkrr_nope").is_none());
+    }
+}

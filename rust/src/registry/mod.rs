@@ -63,6 +63,14 @@ pub struct ModelStats {
     pub requests: Counter,
     pub errors: Counter,
     pub latency: LatencyHistogram,
+    /// Stage span: admission → the request's batch starts computing.
+    /// Recorded by the engine only when `EngineConfig::tracing` is on;
+    /// surfaces as `fastkrr_model_stage_seconds{model,stage="queue_wait"}`.
+    pub queue_wait: LatencyHistogram,
+    /// Stage span: the batch compute serving the request.
+    pub batch_compute: LatencyHistogram,
+    /// Stage span: worker hand-off → caller receiving the reply.
+    pub reply: LatencyHistogram,
     pub breaker: CircuitBreaker,
 }
 
@@ -251,6 +259,16 @@ impl ModelRegistry {
             next.default = Some(name.to_string());
         }
         self.install(next);
+        if crate::obs::log::enabled() {
+            use crate::util::json::Json;
+            crate::obs::log::event(
+                "model_swap",
+                &[
+                    ("model", Json::str(name)),
+                    ("version", Json::num(version as f64)),
+                ],
+            );
+        }
         Ok(version)
     }
 

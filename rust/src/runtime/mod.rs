@@ -31,8 +31,8 @@ use std::path::PathBuf;
 /// Locate the artifact directory: `FASTKRR_ARTIFACTS` env override, else
 /// `<manifest dir>/artifacts` (the repo layout), else `./artifacts`.
 pub fn default_artifact_dir() -> PathBuf {
-    if let Ok(d) = std::env::var("FASTKRR_ARTIFACTS") {
-        return PathBuf::from(d);
+    if let Some(d) = crate::util::env::artifacts_dir() {
+        return d;
     }
     let repo = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if repo.join("manifest.json").exists() {

@@ -4,9 +4,9 @@
 //! environment, and the engine already owns the batching concurrency):
 //!
 //! ```text
-//! → {"op":"predict","x":[...]}                ← {"ok":true,"y":1.23}
+//! → {"op":"predict","x":[...]}                ← {"ok":true,"y":1.23,"trace_id":N}
 //!   optional: "model":"name", "version":N      (default model otherwise)
-//! → {"op":"predict_batch","xs":[[...],...]}   ← {"ok":true,"ys":[...]}
+//! → {"op":"predict_batch","xs":[[...],...]}   ← {"ok":true,"ys":[...],"trace_id":N}
 //!   optional: "model":"name", "version":N
 //! → {"op":"load_model","name":"a",
 //!    "path":"/m.fkrr"}                        ← {"ok":true,"name":"a","version":2}
@@ -21,8 +21,19 @@
 //! → {"op":"health"}                           ← {"ok":true,"ready":true,
 //!                                                "workers_alive":N,
 //!                                                "inflight":n,"circuits":{...}}
+//! → {"op":"metrics"}                          ← {"ok":true,"format":"prometheus",
+//!                                                "body":"# TYPE fastkrr_..."}
+//!   optional: "format":"json"                 ← {"ok":true,"format":"json",
+//!                                                "metrics":[{name,labels,...}]}
 //! → {"op":"ping"}                             ← {"ok":true}
 //! ```
+//!
+//! `trace_id` on predict replies is the server-minted per-request trace id
+//! (see [`obs`](crate::obs)); server-side stage spans and structured log
+//! events for that request carry the same id. The `stats`, `health`, and
+//! `metrics` ops are all views over one [`Engine::metrics_snapshot`] —
+//! they can never disagree about a counter — with `stats`/`health` keeping
+//! their original field sets for wire compatibility.
 //!
 //! `load_model` validates, warms up, and atomically publishes a new
 //! version through the [`registry`](crate::registry) — in-flight requests
@@ -61,6 +72,7 @@
 //! `serve.breaker_cooldown_ms` (see `config`).
 
 use crate::coordinator::Engine;
+use crate::obs::{self, MetricValue, MetricsSnapshot};
 use crate::util::json::Json;
 use crate::util::{Error, ErrorKind, Result};
 use std::collections::BTreeMap;
@@ -318,8 +330,16 @@ fn handle_request_inner(line: &str, engine: &Engine) -> Result<Json> {
             let xs = xs?;
             validate_finite(&xs, None)?;
             let (name, version) = model_selector(&req)?;
-            let y = engine.predict_model(name.as_deref(), version, &xs)?;
-            Ok(Json::obj(vec![("ok", Json::Bool(true)), ("y", Json::num(y))]))
+            // Mint the trace id at the wire boundary so the reply's
+            // `trace_id` matches the id on this request's stage spans and
+            // log events.
+            let trace = obs::next_trace_id();
+            let y = engine.predict_model_traced(name.as_deref(), version, &xs, trace)?;
+            Ok(Json::obj(vec![
+                ("ok", Json::Bool(true)),
+                ("y", Json::num(y)),
+                ("trace_id", Json::num(trace as f64)),
+            ]))
         }
         "predict_batch" => {
             let rows = req.get("xs")?.as_arr()?;
@@ -352,9 +372,12 @@ fn handle_request_inner(line: &str, engine: &Engine) -> Result<Json> {
             for r in results {
                 ys.push(r?);
             }
+            // One wire-level id for the whole batch (each row also gets its
+            // own engine-side trace for the stage histograms).
             Ok(Json::obj(vec![
                 ("ok", Json::Bool(true)),
                 ("ys", Json::arr_f64(&ys)),
+                ("trace_id", Json::num(obs::next_trace_id() as f64)),
             ]))
         }
         "load_model" => {
@@ -407,83 +430,181 @@ fn handle_request_inner(line: &str, engine: &Engine) -> Result<Json> {
             engine.registry().unload(name)?;
             Ok(Json::obj(vec![("ok", Json::Bool(true))]))
         }
-        "stats" => {
-            let s = engine.stats();
-            let per_worker: Vec<f64> = engine
-                .worker_request_counts()
-                .into_iter()
-                .map(|c| c as f64)
-                .collect();
-            // Per-model serving counters, keyed by model name.
-            let registry = engine.registry();
-            let mut models = BTreeMap::new();
-            for info in registry.list() {
-                let p50_us = registry
-                    .resolve(Some(info.name.as_str()), None)
-                    .map(|mv| mv.stats.latency.percentile(50.0).as_micros() as f64)
-                    .unwrap_or(0.0);
-                models.insert(
-                    info.name.clone(),
-                    Json::obj(vec![
-                        ("active_version", Json::num(info.active_version as f64)),
-                        ("requests", Json::num(info.requests as f64)),
-                        ("errors", Json::num(info.errors as f64)),
-                        ("p50_us", Json::num(p50_us)),
-                        ("circuit", Json::str(info.circuit)),
-                        ("breaker_trips", Json::num(info.breaker_trips as f64)),
-                    ]),
-                );
-            }
-            let cache = crate::kernel::cache::global().stats();
-            Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("workers", Json::num(engine.workers() as f64)),
-                ("workers_alive", Json::num(s.workers_alive.current() as f64)),
-                ("worker_requests", Json::arr_f64(&per_worker)),
-                ("requests", Json::num(s.requests.get() as f64)),
-                ("batches", Json::num(s.batches.get() as f64)),
-                ("padded_slots", Json::num(s.padded_slots.get() as f64)),
-                ("errors", Json::num(s.errors.get() as f64)),
-                ("worker_panics", Json::num(s.worker_panics.get() as f64)),
-                ("deadline_expired", Json::num(s.deadline_expired.get() as f64)),
-                ("shed", Json::num(s.shed.get() as f64)),
-                ("inflight", Json::num(s.inflight.current() as f64)),
-                ("inflight_hwm", Json::num(s.inflight.high_water() as f64)),
-                ("mean_batch", Json::num(s.mean_batch_size())),
-                (
-                    "p50_us",
-                    Json::num(s.latency.percentile(50.0).as_micros() as f64),
-                ),
-                (
-                    "p99_us",
-                    Json::num(s.latency.percentile(99.0).as_micros() as f64),
-                ),
-                ("cache_hits", Json::num(cache.hits.get() as f64)),
-                ("cache_misses", Json::num(cache.misses.get() as f64)),
-                ("cache_evictions", Json::num(cache.evictions.get() as f64)),
-                ("models", Json::Obj(models)),
-            ]))
-        }
+        "stats" => Ok(stats_view(&engine.metrics_snapshot())),
         "health" => {
-            // Liveness/readiness probe: cheap, never touches a model. A
-            // supervisor (or load balancer) can watch `workers_alive` and
-            // the per-model circuit states without paying for `stats`.
-            let s = engine.stats();
-            let mut circuits = BTreeMap::new();
-            for info in engine.registry().list() {
-                circuits.insert(info.name, Json::str(info.circuit));
+            // Liveness/readiness probe: a supervisor (or load balancer) can
+            // watch `workers_alive` and the per-model circuit states
+            // without parsing the full `stats` payload.
+            Ok(health_view(&engine.metrics_snapshot()))
+        }
+        "metrics" => {
+            let snap = engine.metrics_snapshot();
+            let format = match req.opt("format") {
+                Some(f) => f.as_str()?.to_string(),
+                None => "prometheus".to_string(),
+            };
+            match format.as_str() {
+                "prometheus" => Ok(Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("format", Json::str("prometheus")),
+                    ("body", Json::str(obs::export::render_prometheus(&snap))),
+                ])),
+                "json" => Ok(Json::obj(vec![
+                    ("ok", Json::Bool(true)),
+                    ("format", Json::str("json")),
+                    ("metrics", obs::export::render_json(&snap)),
+                ])),
+                other => Err(Error::invalid(format!(
+                    "unknown metrics format '{other}' (expected 'prometheus' or 'json')"
+                ))),
             }
-            Ok(Json::obj(vec![
-                ("ok", Json::Bool(true)),
-                ("ready", Json::Bool(engine.ready())),
-                ("workers", Json::num(engine.workers() as f64)),
-                ("workers_alive", Json::num(s.workers_alive.current() as f64)),
-                ("inflight", Json::num(s.inflight.current() as f64)),
-                ("circuits", Json::Obj(circuits)),
-            ]))
         }
         other => Err(Error::invalid(format!("unknown op '{other}'"))),
     }
+}
+
+/// Counter value of a `{model=...}` point (0.0 when absent).
+fn model_counter(snap: &MetricsSnapshot, name: &str, model: &str) -> f64 {
+    match snap.get_labeled(name, &[("model", model)]).map(|p| &p.value) {
+        Some(MetricValue::Counter(v)) => *v as f64,
+        _ => 0.0,
+    }
+}
+
+/// Gauge `current` of a `{model=...}` point (0.0 when absent).
+fn model_gauge(snap: &MetricsSnapshot, name: &str, model: &str) -> f64 {
+    match snap.get_labeled(name, &[("model", model)]).map(|p| &p.value) {
+        Some(MetricValue::Gauge { current, .. }) => *current as f64,
+        _ => 0.0,
+    }
+}
+
+/// Circuit-state string for a model, recovered from the `state` label of
+/// its `fastkrr_model_circuit_state` point ("closed" when absent).
+fn model_circuit(snap: &MetricsSnapshot, model: &str) -> String {
+    snap.family("fastkrr_model_circuit_state")
+        .into_iter()
+        .find(|p| p.label("model") == Some(model))
+        .and_then(|p| p.label("state"))
+        .unwrap_or("closed")
+        .to_string()
+}
+
+/// The legacy `stats` reply, rebuilt as a pure view over one metrics
+/// snapshot. The field set is wire-frozen (PR 8 clients depend on it) and
+/// regression-tested in `tests/observability.rs`; only the data source
+/// changed — every number now comes from the same snapshot `metrics`
+/// exports, so the two ops can never disagree.
+fn stats_view(snap: &MetricsSnapshot) -> Json {
+    let per_worker: Vec<f64> = snap
+        .family("fastkrr_worker_requests_total")
+        .iter()
+        .map(|p| match &p.value {
+            MetricValue::Counter(v) => *v as f64,
+            _ => 0.0,
+        })
+        .collect();
+    let requests = snap.counter("fastkrr_requests_total");
+    let batches = snap.counter("fastkrr_batches_total");
+    let mean_batch =
+        if batches == 0 { 0.0 } else { requests as f64 / batches as f64 };
+    let lat = snap.histogram("fastkrr_request_latency_seconds");
+    let (inflight, inflight_hwm) = snap.gauge("fastkrr_inflight");
+    let mut models = BTreeMap::new();
+    for p in snap.family("fastkrr_model_requests_total") {
+        let Some(model) = p.label("model") else { continue };
+        let model_requests = match &p.value {
+            MetricValue::Counter(v) => *v as f64,
+            _ => 0.0,
+        };
+        let p50 = match snap
+            .get_labeled("fastkrr_model_latency_seconds", &[("model", model)])
+            .map(|p| &p.value)
+        {
+            Some(MetricValue::Histogram(h)) => h.p50.as_micros() as f64,
+            _ => 0.0,
+        };
+        models.insert(
+            model.to_string(),
+            Json::obj(vec![
+                (
+                    "active_version",
+                    Json::num(model_gauge(snap, "fastkrr_model_active_version", model)),
+                ),
+                ("requests", Json::num(model_requests)),
+                (
+                    "errors",
+                    Json::num(model_counter(snap, "fastkrr_model_errors_total", model)),
+                ),
+                ("p50_us", Json::num(p50)),
+                ("circuit", Json::str(model_circuit(snap, model))),
+                (
+                    "breaker_trips",
+                    Json::num(model_counter(
+                        snap,
+                        "fastkrr_model_breaker_trips_total",
+                        model,
+                    )),
+                ),
+            ]),
+        );
+    }
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("workers", Json::num(snap.gauge("fastkrr_workers").0 as f64)),
+        ("workers_alive", Json::num(snap.gauge("fastkrr_workers_alive").0 as f64)),
+        ("worker_requests", Json::arr_f64(&per_worker)),
+        ("requests", Json::num(requests as f64)),
+        ("batches", Json::num(batches as f64)),
+        ("padded_slots", Json::num(snap.counter("fastkrr_padded_slots_total") as f64)),
+        ("errors", Json::num(snap.counter("fastkrr_errors_total") as f64)),
+        (
+            "worker_panics",
+            Json::num(snap.counter("fastkrr_worker_panics_total") as f64),
+        ),
+        (
+            "deadline_expired",
+            Json::num(snap.counter("fastkrr_deadline_expired_total") as f64),
+        ),
+        ("shed", Json::num(snap.counter("fastkrr_shed_total") as f64)),
+        ("inflight", Json::num(inflight as f64)),
+        ("inflight_hwm", Json::num(inflight_hwm as f64)),
+        ("mean_batch", Json::num(mean_batch)),
+        ("p50_us", Json::num(lat.p50.as_micros() as f64)),
+        ("p99_us", Json::num(lat.p99.as_micros() as f64)),
+        (
+            "cache_hits",
+            Json::num(snap.counter("fastkrr_kernel_cache_hits_total") as f64),
+        ),
+        (
+            "cache_misses",
+            Json::num(snap.counter("fastkrr_kernel_cache_misses_total") as f64),
+        ),
+        (
+            "cache_evictions",
+            Json::num(snap.counter("fastkrr_kernel_cache_evictions_total") as f64),
+        ),
+        ("models", Json::Obj(models)),
+    ])
+}
+
+/// The legacy `health` reply as a view over the same snapshot as `stats`
+/// and `metrics` (field set wire-frozen, see [`stats_view`]).
+fn health_view(snap: &MetricsSnapshot) -> Json {
+    let mut circuits = BTreeMap::new();
+    for p in snap.family("fastkrr_model_circuit_state") {
+        if let (Some(model), Some(state)) = (p.label("model"), p.label("state")) {
+            circuits.insert(model.to_string(), Json::str(state));
+        }
+    }
+    Json::obj(vec![
+        ("ok", Json::Bool(true)),
+        ("ready", Json::Bool(snap.gauge("fastkrr_ready").0 == 1)),
+        ("workers", Json::num(snap.gauge("fastkrr_workers").0 as f64)),
+        ("workers_alive", Json::num(snap.gauge("fastkrr_workers_alive").0 as f64)),
+        ("inflight", Json::num(snap.gauge("fastkrr_inflight").0 as f64)),
+        ("circuits", Json::Obj(circuits)),
+    ])
 }
 
 /// Client-side resilience knobs.
@@ -702,6 +823,24 @@ impl Client {
     /// Liveness/readiness probe (raw JSON reply — see the protocol table).
     pub fn health(&mut self) -> Result<Json> {
         self.roundtrip(Json::obj(vec![("op", Json::str("health"))]))
+    }
+
+    /// Fetch the full metrics snapshot in Prometheus text exposition
+    /// format (the `body` field of `{"op":"metrics"}`) — ready to write to
+    /// a scrape endpoint or a `.prom` textfile.
+    pub fn metrics(&mut self) -> Result<String> {
+        let v = self.roundtrip(Json::obj(vec![("op", Json::str("metrics"))]))?;
+        Ok(v.get("body")?.as_str()?.to_string())
+    }
+
+    /// Fetch the metrics snapshot as a structured JSON array
+    /// (`{"op":"metrics","format":"json"}` → the `metrics` field).
+    pub fn metrics_json(&mut self) -> Result<Json> {
+        let v = self.roundtrip(Json::obj(vec![
+            ("op", Json::str("metrics")),
+            ("format", Json::str("json")),
+        ]))?;
+        Ok(v.get("metrics")?.clone())
     }
 
     /// Send a raw line (failure-injection tests).
@@ -946,6 +1085,91 @@ mod tests {
         {
             assert!(s.get(key).unwrap().as_f64().unwrap() >= 0.0, "missing {key}");
         }
+        server.shutdown();
+    }
+
+    #[test]
+    fn metrics_op_serves_prometheus_and_json() {
+        let (server, x, _) = test_server();
+        let mut c = Client::connect(&server.addr().to_string()).unwrap();
+        for i in 0..4 {
+            c.predict(x.row(i)).unwrap();
+        }
+        // Prometheus text exposition (the default format).
+        let body = c.metrics().unwrap();
+        for series in [
+            "# TYPE fastkrr_requests_total counter",
+            "fastkrr_requests_total 4",
+            "fastkrr_stage_seconds_count{stage=\"queue_wait\"} 4",
+            "fastkrr_model_requests_total{model=\"default\"} 4",
+            "fastkrr_workers_alive 2",
+        ] {
+            assert!(body.contains(series), "missing {series:?} in:\n{body}");
+        }
+        // Structured JSON variant carries the same series.
+        let arr = c.metrics_json().unwrap();
+        let points = arr.as_arr().unwrap();
+        assert!(
+            points.iter().any(|p| {
+                p.get("name").unwrap().as_str().unwrap() == "fastkrr_requests_total"
+            }),
+            "json variant missing fastkrr_requests_total"
+        );
+        // Unknown format is a structured invalid error, connection stays up.
+        let reply = c.raw(r#"{"op":"metrics","format":"xml"}"#).unwrap();
+        assert!(reply.contains("\"kind\":\"invalid\""), "{reply}");
+        c.ping().unwrap();
+        server.shutdown();
+    }
+
+    #[test]
+    fn predict_replies_carry_trace_ids() {
+        let (server, x, _) = test_server();
+        let mut c = Client::connect(&server.addr().to_string()).unwrap();
+        let mut row = String::from("[");
+        for (j, v) in x.row(0).iter().enumerate() {
+            if j > 0 {
+                row.push(',');
+            }
+            row.push_str(&format!("{v}"));
+        }
+        row.push(']');
+        let r1 = Json::parse(&c.raw(&format!(r#"{{"op":"predict","x":{row}}}"#)).unwrap())
+            .unwrap();
+        let t1 = r1.get("trace_id").unwrap().as_f64().unwrap();
+        let r2 = Json::parse(
+            &c.raw(&format!(r#"{{"op":"predict_batch","xs":[{row}]}}"#)).unwrap(),
+        )
+        .unwrap();
+        let t2 = r2.get("trace_id").unwrap().as_f64().unwrap();
+        assert!(t1 >= 1.0, "trace ids start at 1, got {t1}");
+        assert!(t2 > t1, "trace ids must be increasing: {t1} then {t2}");
+        server.shutdown();
+    }
+
+    #[test]
+    fn stats_and_health_agree_with_metrics_snapshot() {
+        let (server, x, _) = test_server();
+        let mut c = Client::connect(&server.addr().to_string()).unwrap();
+        for i in 0..6 {
+            c.predict(x.row(i % x.rows())).unwrap();
+        }
+        // stats/health are views over the same snapshot the metrics op
+        // exports, so the shared numbers must match exactly.
+        let s = c.stats().unwrap();
+        let body = c.metrics().unwrap();
+        let requests = s.get("requests").unwrap().as_f64().unwrap();
+        assert_eq!(requests, 6.0);
+        assert!(
+            body.contains(&format!("fastkrr_requests_total {}", requests as u64)),
+            "{body}"
+        );
+        let h = c.health().unwrap();
+        assert!(h.get("ready").unwrap().as_bool().unwrap());
+        assert_eq!(
+            h.get("workers_alive").unwrap().as_f64().unwrap(),
+            s.get("workers_alive").unwrap().as_f64().unwrap()
+        );
         server.shutdown();
     }
 

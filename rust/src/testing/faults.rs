@@ -135,7 +135,7 @@ static ENV_LOADED: OnceLock<()> = OnceLock::new();
 
 fn ensure_env_loaded() {
     ENV_LOADED.get_or_init(|| {
-        if let Ok(spec) = std::env::var("FASTKRR_FAULTS") {
+        if let Some(spec) = crate::util::env::faults_spec() {
             match Faults::parse(&spec) {
                 Ok(f) => set_plan(Some(f)),
                 Err(e) => eprintln!("FASTKRR_FAULTS ignored: {e}"),

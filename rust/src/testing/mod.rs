@@ -15,22 +15,17 @@ use crate::rng::Pcg64;
 
 /// Number of cases per property (env-overridable).
 pub fn default_cases() -> usize {
-    std::env::var("FASTKRR_PROP_CASES")
-        .ok()
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(32)
+    crate::util::env::prop_cases(32)
 }
 
 /// Run `prop(rng, case_index)` over `cases` seeded cases; panics with the
 /// failing seed on the first failure so it can be replayed.
 pub fn forall(name: &str, cases: usize, mut prop: impl FnMut(&mut Pcg64, usize)) {
     // Single-seed replay mode.
-    if let Ok(s) = std::env::var("FASTKRR_PROP_SEED") {
-        if let Ok(seed) = s.parse::<u64>() {
-            let mut rng = Pcg64::new(seed);
-            prop(&mut rng, 0);
-            return;
-        }
+    if let Some(seed) = crate::util::env::prop_seed() {
+        let mut rng = Pcg64::new(seed);
+        prop(&mut rng, 0);
+        return;
     }
     for case in 0..cases {
         let seed = fnv1a(name) ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);

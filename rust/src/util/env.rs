@@ -1,0 +1,156 @@
+//! One place for every `FASTKRR_*` environment knob.
+//!
+//! Each accessor re-reads the environment on every call (no caching), so
+//! tests and bench binaries that set a variable at runtime observe the
+//! change immediately — the same convention the scattered call sites this
+//! module replaces already followed. Components that deliberately latch a
+//! value at first use (the kernel-block cache budget, the fault plan) do
+//! their own one-shot read *through* these accessors, so the latch stays
+//! where the latching behavior is documented.
+//!
+//! | variable                 | accessor             | meaning                                              |
+//! |--------------------------|----------------------|------------------------------------------------------|
+//! | `FASTKRR_THREADS`        | [`threads`]          | chunk count for parallel regions, clamped to [1, 64] |
+//! | `FASTKRR_SIMD`           | [`simd_raw`]         | dense-math path: `on` (default) / `off` / `fastexp`  |
+//! | `FASTKRR_KERNEL_CACHE_MB`| [`kernel_cache_mb`]  | kernel-block cache budget in MiB (default 64, 0 off) |
+//! | `FASTKRR_ARTIFACTS`      | [`artifacts_dir`]    | PJRT artifact directory override                     |
+//! | `FASTKRR_FAULTS`         | [`faults_spec`]      | fault-injection plan (`panic_worker:P,stall:P,...`)  |
+//! | `FASTKRR_LOG`            | [`log_raw`]          | structured serving log events: `off` / `text` / `json` |
+//! | `FASTKRR_PROP_CASES`     | [`prop_cases`]       | cases per seeded property (default 32)               |
+//! | `FASTKRR_PROP_SEED`      | [`prop_seed`]        | replay one property case by seed                     |
+//! | `FASTKRR_BENCH_SCALE`    | [`bench_scale`]      | problem-size multiplier for bench binaries           |
+//! | `FASTKRR_BENCH_QUICK`    | [`bench_quick`]      | `1`/`true`: small shapes, skip heavy sections        |
+//! | `FASTKRR_BENCH_GATE`     | [`bench_gate`]       | `1`: perf regressions fail the bench binary          |
+//! | `FASTKRR_BENCH_JSON`     | [`bench_json`]       | append machine-readable bench records to this path   |
+//! | `FASTKRR_BENCH_WORKERS`  | [`bench_workers`]    | executor-pool size for serving benches               |
+//! | `FASTKRR_BENCH_TRIALS`   | [`bench_trials`]     | trial count for the paper-reproduction benches       |
+//! | `FASTKRR_METRICS_OUT`    | [`metrics_out`]      | serve_e2e writes its Prometheus exposition here      |
+
+use std::path::PathBuf;
+
+fn var(key: &str) -> Option<String> {
+    std::env::var(key).ok()
+}
+
+/// `FASTKRR_THREADS`: requested chunk count for parallel regions, clamped
+/// to [1, 64]. `None` when unset or unparsable (callers fall back to the
+/// hardware parallelism).
+pub fn threads() -> Option<usize> {
+    var("FASTKRR_THREADS")?.parse::<usize>().ok().map(|n| n.clamp(1, 64))
+}
+
+/// `FASTKRR_SIMD`: raw mode string (`linalg::simd::parse_mode` interprets
+/// it; unset/unknown mean the SIMD path stays on).
+pub fn simd_raw() -> Option<String> {
+    var("FASTKRR_SIMD")
+}
+
+/// `FASTKRR_KERNEL_CACHE_MB`: kernel-block cache budget in MiB (default
+/// 64; 0 disables). The cache itself reads this once at first use.
+pub fn kernel_cache_mb() -> usize {
+    var("FASTKRR_KERNEL_CACHE_MB")
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(64)
+}
+
+/// `FASTKRR_ARTIFACTS`: PJRT artifact directory override.
+pub fn artifacts_dir() -> Option<PathBuf> {
+    var("FASTKRR_ARTIFACTS").map(PathBuf::from)
+}
+
+/// `FASTKRR_FAULTS`: raw fault-injection spec (`testing::faults` parses
+/// and latches it once per process).
+pub fn faults_spec() -> Option<String> {
+    var("FASTKRR_FAULTS")
+}
+
+/// `FASTKRR_LOG`: raw structured-log mode string (`obs::log` parses it;
+/// unset means off).
+pub fn log_raw() -> Option<String> {
+    var("FASTKRR_LOG")
+}
+
+/// `FASTKRR_PROP_CASES`: cases per seeded property (default given by the
+/// caller; the suite default is 32).
+pub fn prop_cases(default: usize) -> usize {
+    var("FASTKRR_PROP_CASES")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// `FASTKRR_PROP_SEED`: single-seed replay for a failing property case.
+pub fn prop_seed() -> Option<u64> {
+    var("FASTKRR_PROP_SEED")?.parse::<u64>().ok()
+}
+
+/// `FASTKRR_BENCH_SCALE`: problem-size multiplier for bench binaries.
+pub fn bench_scale(default: f64) -> f64 {
+    var("FASTKRR_BENCH_SCALE")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// `FASTKRR_BENCH_QUICK`: `1`/`true` (case-insensitive) shrinks bench
+/// shapes and skips heavy ablation sections (CI perf smoke).
+pub fn bench_quick() -> bool {
+    var("FASTKRR_BENCH_QUICK")
+        .map(|v| v == "1" || v.eq_ignore_ascii_case("true"))
+        .unwrap_or(false)
+}
+
+/// `FASTKRR_BENCH_GATE`: `1` makes perf-regression gates fail the bench
+/// binary (nightly perf-gate job) instead of just printing.
+pub fn bench_gate() -> bool {
+    var("FASTKRR_BENCH_GATE").map(|v| v == "1").unwrap_or(false)
+}
+
+/// `FASTKRR_BENCH_JSON`: path for machine-readable bench records; `None`
+/// when unset or empty (no records written).
+pub fn bench_json() -> Option<String> {
+    var("FASTKRR_BENCH_JSON").filter(|p| !p.is_empty())
+}
+
+/// `FASTKRR_BENCH_WORKERS`: executor-pool size for the serving benches.
+pub fn bench_workers(default: usize) -> usize {
+    var("FASTKRR_BENCH_WORKERS")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// `FASTKRR_BENCH_TRIALS`: trial count for the paper-reproduction benches.
+pub fn bench_trials(default: usize) -> usize {
+    var("FASTKRR_BENCH_TRIALS")
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(default)
+}
+
+/// `FASTKRR_METRICS_OUT`: where `examples/serve_e2e` writes the Prometheus
+/// exposition fetched from its `{"op":"metrics"}` round-trip (CI uploads
+/// the file as an artifact). `None` when unset or empty.
+pub fn metrics_out() -> Option<PathBuf> {
+    var("FASTKRR_METRICS_OUT").filter(|p| !p.is_empty()).map(PathBuf::from)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // NOTE: accessors read the live process environment, and the lib test
+    // binary is multi-threaded, so this test only touches variables no
+    // other lib test (or concurrently running accessor caller) mutates:
+    // FASTKRR_BENCH_WORKERS and FASTKRR_BENCH_TRIALS are read only by
+    // standalone bench binaries. Everything lives in one test so the
+    // set/remove sequences cannot interleave across test threads.
+    #[test]
+    fn defaults_parsing_and_live_reads() {
+        std::env::remove_var("FASTKRR_BENCH_WORKERS");
+        std::env::remove_var("FASTKRR_BENCH_TRIALS");
+        assert_eq!(bench_workers(3), 3);
+        assert_eq!(bench_trials(7), 7);
+        std::env::set_var("FASTKRR_BENCH_TRIALS", "12");
+        assert_eq!(bench_trials(7), 12, "accessors read live, never cache");
+        std::env::set_var("FASTKRR_BENCH_TRIALS", "not-a-number");
+        assert_eq!(bench_trials(7), 7, "unparsable falls back to default");
+        std::env::remove_var("FASTKRR_BENCH_TRIALS");
+    }
+}

@@ -1,13 +1,18 @@
-//! Small shared utilities: error type, JSON mini-codec, and the persistent
-//! thread-pool parallelism layer ([`parallel`]).
+//! Small shared utilities: error type, JSON mini-codec, the typed
+//! environment-knob accessors ([`env`]), and the persistent thread-pool
+//! parallelism layer ([`parallel`]).
 
+pub mod env;
 pub mod json;
 pub mod parallel;
 
 use std::fmt;
 
-/// Crate-wide error type. We keep it simple (string payload + kind) so the
-/// library has zero required dependencies; `anyhow` interops via `std::error`.
+/// Crate-wide error type, re-exported at the crate root as
+/// `fastkrr::Error`. We keep it simple (string payload + kind) so the
+/// library has zero required dependencies; `anyhow` interops via
+/// `std::error`. The kind/retryability taxonomy is exactly what goes on
+/// the wire (`{"ok":false,"kind":...,"retryable":...}`).
 #[derive(Debug)]
 pub struct Error {
     kind: ErrorKind,
@@ -16,8 +21,11 @@ pub struct Error {
 
 /// Broad category of a [`Error`]; used by callers that dispatch on failure
 /// class (e.g. the server maps `InvalidInput` to a 4xx-style reply and
-/// marks the load-shedding kinds retryable on the wire).
+/// marks the load-shedding kinds retryable on the wire). Non-exhaustive:
+/// downstream matches need a wildcard arm so future kinds are not breaking
+/// changes (unknown kinds already map to `Runtime` on the wire).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[non_exhaustive]
 pub enum ErrorKind {
     /// Caller handed us something malformed (bad shape, bad config, ...).
     InvalidInput,

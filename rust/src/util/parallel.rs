@@ -30,10 +30,8 @@ use std::sync::{Arc, Condvar, Mutex, OnceLock};
 /// Number of chunks to split parallel regions into: `FASTKRR_THREADS` env
 /// override, else available parallelism, clamped to [1, 64].
 pub fn num_threads() -> usize {
-    if let Ok(s) = std::env::var("FASTKRR_THREADS") {
-        if let Ok(n) = s.parse::<usize>() {
-            return n.clamp(1, 64);
-        }
+    if let Some(n) = crate::util::env::threads() {
+        return n;
     }
     hardware_threads()
 }

@@ -1,0 +1,281 @@
+//! Observability-layer integration tests: wire-format regression for the
+//! legacy `stats`/`health` ops (now views over the metrics registry),
+//! metrics-op coverage of every legacy counter, and registry-snapshot
+//! consistency under a concurrent hot-swap soak.
+
+use fastkrr::coordinator::{
+    Backend, BatcherConfig, Engine, EngineConfig, ServingModel,
+};
+use fastkrr::kernel::KernelKind;
+use fastkrr::krr::{NystromKrr, NystromKrrConfig};
+use fastkrr::linalg::Mat;
+use fastkrr::registry::ModelRegistry;
+use fastkrr::rng::Pcg64;
+use fastkrr::server::{Client, Server};
+use fastkrr::sketch::SketchStrategy;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+fn fit_model(seed: u64, p: usize) -> (Mat, ServingModel) {
+    let mut rng = Pcg64::new(seed);
+    let x = Mat::from_fn(80, 6, |_, _| rng.normal());
+    let y: Vec<f64> = (0..80).map(|i| x.row(i)[0].tanh()).collect();
+    let cfg = NystromKrrConfig {
+        lambda: 1e-3,
+        p,
+        strategy: SketchStrategy::DiagK,
+        gamma: 0.0,
+        seed,
+    };
+    let model =
+        NystromKrr::fit(&x, &y, KernelKind::Rbf { bandwidth: 1.0 }, &cfg).unwrap();
+    (x, ServingModel::from_nystrom(&model).unwrap())
+}
+
+fn native_cfg(workers: usize) -> EngineConfig {
+    EngineConfig::builder()
+        .backend(Backend::Native)
+        .batcher(BatcherConfig {
+            max_wait: Duration::from_millis(1),
+            ..Default::default()
+        })
+        .workers(workers)
+        .build()
+        .unwrap()
+}
+
+/// The PR-8 `stats` wire format is frozen: every legacy field must stay
+/// present (with the same JSON type) now that the op is a view over the
+/// metrics registry. A client written against the old server must keep
+/// parsing replies from the new one.
+#[test]
+fn stats_wire_format_regression() {
+    let (x, sm) = fit_model(31, 16);
+    let engine = Engine::start(sm, native_cfg(2)).unwrap();
+    let server = Server::start("127.0.0.1:0", engine).unwrap();
+    let mut c = Client::connect(&server.addr().to_string()).unwrap();
+    for i in 0..12 {
+        c.predict(x.row(i)).unwrap();
+    }
+    let s = c.stats().unwrap();
+    assert!(s.get("ok").unwrap().as_bool().unwrap());
+    // Numeric scalar fields, exactly as PR 8 shipped them.
+    for key in [
+        "workers",
+        "workers_alive",
+        "requests",
+        "batches",
+        "padded_slots",
+        "errors",
+        "worker_panics",
+        "deadline_expired",
+        "shed",
+        "inflight",
+        "inflight_hwm",
+        "mean_batch",
+        "p50_us",
+        "p99_us",
+        "cache_hits",
+        "cache_misses",
+        "cache_evictions",
+    ] {
+        assert!(
+            s.get(key).unwrap().as_f64().is_ok(),
+            "stats field '{key}' missing or not a number"
+        );
+    }
+    assert_eq!(s.get("workers").unwrap().as_f64().unwrap(), 2.0);
+    assert_eq!(s.get("workers_alive").unwrap().as_f64().unwrap(), 2.0);
+    assert_eq!(s.get("requests").unwrap().as_f64().unwrap(), 12.0);
+    assert_eq!(s.get("inflight").unwrap().as_f64().unwrap(), 0.0);
+    // worker_requests: one entry per worker, summing to the request total.
+    let per_worker = s.get("worker_requests").unwrap().as_arr().unwrap();
+    assert_eq!(per_worker.len(), 2);
+    let sum: f64 = per_worker.iter().map(|v| v.as_f64().unwrap()).sum();
+    assert_eq!(sum, 12.0);
+    // Per-model block with its PR-8 shape.
+    let models = s.get("models").unwrap();
+    let default = models.get("default").unwrap();
+    for key in ["active_version", "requests", "errors", "p50_us", "breaker_trips"] {
+        assert!(
+            default.get(key).unwrap().as_f64().is_ok(),
+            "model stats field '{key}' missing or not a number"
+        );
+    }
+    assert_eq!(default.get("requests").unwrap().as_f64().unwrap(), 12.0);
+    assert_eq!(default.get("circuit").unwrap().as_str().unwrap(), "closed");
+
+    // health: same frozen shape.
+    let h = c.health().unwrap();
+    assert!(h.get("ok").unwrap().as_bool().unwrap());
+    assert!(h.get("ready").unwrap().as_bool().unwrap());
+    assert_eq!(h.get("workers").unwrap().as_f64().unwrap(), 2.0);
+    assert_eq!(h.get("workers_alive").unwrap().as_f64().unwrap(), 2.0);
+    assert_eq!(h.get("inflight").unwrap().as_f64().unwrap(), 0.0);
+    let circuits = h.get("circuits").unwrap();
+    assert_eq!(circuits.get("default").unwrap().as_str().unwrap(), "closed");
+    server.shutdown();
+}
+
+/// Every counter/gauge the legacy `stats` op reports must appear in the
+/// `metrics` op with the same value — the two ops are views over one
+/// snapshot and can never disagree. (Kernel-cache counters are process
+/// global and raced by sibling tests, so for those only presence is
+/// checked.)
+#[test]
+fn metrics_op_covers_every_stats_counter() {
+    let (x, sm) = fit_model(33, 12);
+    let engine = Engine::start(sm, native_cfg(1)).unwrap();
+    let server = Server::start("127.0.0.1:0", engine).unwrap();
+    let mut c = Client::connect(&server.addr().to_string()).unwrap();
+    for i in 0..9 {
+        c.predict(x.row(i)).unwrap();
+    }
+    let s = c.stats().unwrap();
+    let points = c.metrics_json().unwrap();
+    let points = points.as_arr().unwrap();
+    let metric_value = |name: &str| -> Option<f64> {
+        points
+            .iter()
+            .find(|p| p.get("name").unwrap().as_str().unwrap() == name)
+            .map(|p| p.get("value").unwrap().as_f64().unwrap())
+    };
+    for (stats_key, metric_name) in [
+        ("requests", "fastkrr_requests_total"),
+        ("batches", "fastkrr_batches_total"),
+        ("padded_slots", "fastkrr_padded_slots_total"),
+        ("errors", "fastkrr_errors_total"),
+        ("worker_panics", "fastkrr_worker_panics_total"),
+        ("deadline_expired", "fastkrr_deadline_expired_total"),
+        ("shed", "fastkrr_shed_total"),
+        ("inflight", "fastkrr_inflight"),
+        ("workers", "fastkrr_workers"),
+        ("workers_alive", "fastkrr_workers_alive"),
+    ] {
+        let from_stats = s.get(stats_key).unwrap().as_f64().unwrap();
+        let from_metrics = metric_value(metric_name)
+            .unwrap_or_else(|| panic!("metrics op missing series {metric_name}"));
+        assert_eq!(
+            from_stats, from_metrics,
+            "stats.{stats_key} disagrees with {metric_name}"
+        );
+    }
+    for cache_series in [
+        "fastkrr_kernel_cache_hits_total",
+        "fastkrr_kernel_cache_misses_total",
+        "fastkrr_kernel_cache_evictions_total",
+    ] {
+        assert!(
+            metric_value(cache_series).is_some(),
+            "metrics op missing series {cache_series}"
+        );
+    }
+    // Latency and stage histograms present with the request count.
+    let lat = points
+        .iter()
+        .find(|p| {
+            p.get("name").unwrap().as_str().unwrap()
+                == "fastkrr_request_latency_seconds"
+        })
+        .expect("latency histogram missing");
+    assert_eq!(lat.get("count").unwrap().as_f64().unwrap(), 9.0);
+    let stage_count = points
+        .iter()
+        .filter(|p| p.get("name").unwrap().as_str().unwrap() == "fastkrr_stage_seconds")
+        .count();
+    assert_eq!(stage_count, 3, "queue_wait / batch_compute / reply stages");
+    server.shutdown();
+}
+
+/// Registry-snapshot consistency under concurrency: 8 client threads
+/// hammer one model while new versions hot-swap underneath them. Observed
+/// snapshots must be internally sane (monotone request counter), and the
+/// quiesced end state must balance exactly: every admitted request shows
+/// up once in each stage histogram and the inflight gauge drains to zero.
+#[test]
+fn snapshot_consistency_under_hot_swap_soak() {
+    let (x, sm) = fit_model(35, 16);
+    let registry = Arc::new(ModelRegistry::new());
+    registry.publish("m", sm.clone()).unwrap();
+    let engine =
+        Engine::start_with_registry(registry.clone(), native_cfg(2)).unwrap();
+    let clients = 8usize;
+    let reqs = 50usize;
+    let live = AtomicUsize::new(clients);
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let engine = &engine;
+            let x = &x;
+            let live = &live;
+            s.spawn(move || {
+                let mut rng = Pcg64::new(200 + c as u64);
+                for _ in 0..reqs {
+                    let i = rng.below(x.rows());
+                    engine.predict_model(Some("m"), None, x.row(i)).unwrap();
+                }
+                live.fetch_sub(1, Ordering::AcqRel);
+            });
+        }
+        // Hot-swapper: publish fresh versions while the clients run.
+        let swapper = {
+            let registry = registry.clone();
+            let sm = sm.clone();
+            let live = &live;
+            s.spawn(move || {
+                let mut swaps = 0u64;
+                while live.load(Ordering::Acquire) > 0 && swaps < 32 {
+                    registry.publish("m", sm.clone()).unwrap();
+                    swaps += 1;
+                    std::thread::sleep(Duration::from_millis(2));
+                }
+                swaps
+            })
+        };
+        // Watcher: snapshots taken mid-flight must never go backwards.
+        let mut last_requests = 0u64;
+        while live.load(Ordering::Acquire) > 0 {
+            let snap = engine.metrics_snapshot();
+            let now = snap.counter("fastkrr_requests_total");
+            assert!(
+                now >= last_requests,
+                "requests counter went backwards: {last_requests} -> {now}"
+            );
+            last_requests = now;
+            let (inflight, hwm) = snap.gauge("fastkrr_inflight");
+            assert!(inflight <= hwm, "inflight {inflight} above its high-water {hwm}");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let swaps = swapper.join().unwrap();
+        assert!(swaps > 0, "soak never exercised a hot swap");
+    });
+    // Quiesced books must balance exactly.
+    let total = (clients * reqs) as u64;
+    let snap = engine.metrics_snapshot();
+    assert_eq!(snap.counter("fastkrr_requests_total"), total);
+    assert_eq!(snap.counter("fastkrr_errors_total"), 0);
+    assert_eq!(snap.gauge("fastkrr_inflight").0, 0, "inflight must drain to 0");
+    assert_eq!(snap.histogram("fastkrr_request_latency_seconds").count, total);
+    for stage in ["queue_wait", "batch_compute", "reply"] {
+        let point = snap
+            .get_labeled("fastkrr_stage_seconds", &[("stage", stage)])
+            .unwrap_or_else(|| panic!("stage series '{stage}' missing"));
+        match &point.value {
+            fastkrr::obs::MetricValue::Histogram(h) => assert_eq!(
+                h.count, total,
+                "stage '{stage}' lost or double-counted spans"
+            ),
+            other => panic!("stage '{stage}' is not a histogram: {other:?}"),
+        }
+    }
+    // Per-model series survived the swaps and agree with the engine total.
+    assert_eq!(
+        snap.get_labeled("fastkrr_model_requests_total", &[("model", "m")])
+            .map(|p| match &p.value {
+                fastkrr::obs::MetricValue::Counter(v) => *v,
+                _ => 0,
+            }),
+        Some(total)
+    );
+    engine.shutdown();
+}
